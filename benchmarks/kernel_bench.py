@@ -1,0 +1,95 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (Python
+semantics — not a performance signal), so wall-clock here times the jnp
+reference paths under jit (real XLA:CPU numbers) and reports the kernels'
+MODELED TPU time from their roofline terms (bytes/bw vs flops/peak on v5e:
+197 TFLOP/s bf16, 819 GB/s HBM), which is what §Perf iterates on.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+V5E_FLOPS = 197e12
+V5E_HBM = 819e9
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def _roofline_us(flops: float, bytes_moved: float) -> float:
+    return max(flops / V5E_FLOPS, bytes_moved / V5E_HBM) * 1e6
+
+
+def bench_kernels() -> list[tuple]:
+    from repro.kernels import ref
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # --- decode attention (PAMattention local stage) -----------------------
+    B, H, Hkv, S, d = 8, 32, 8, 4096, 128
+    q = jax.random.normal(key, (B, H, d), jnp.bfloat16)
+    k = jax.random.normal(key, (B, Hkv, S, d), jnp.bfloat16)
+    v = jax.random.normal(key, (B, Hkv, S, d), jnp.bfloat16)
+    fn = jax.jit(lambda q, k, v: ref.flash_decode_ref(q, k, v))
+    cpu_s = _time(fn, q, k, v)
+    flops = 4.0 * B * H * S * d
+    bytes_m = 2 * B * Hkv * S * d * 2.0
+    rows.append(("kernel/flash_decode/B8_S4096", cpu_s * 1e6,
+                 f"tpu_roofline_us={_roofline_us(flops, bytes_m):.1f} "
+                 f"(bandwidth-bound)"))
+
+    # --- prefill attention --------------------------------------------------
+    B, H, Hkv, S, d = 1, 16, 8, 2048, 128
+    q4 = jax.random.normal(key, (B, H, S, d), jnp.bfloat16)
+    k4 = jax.random.normal(key, (B, Hkv, S, d), jnp.bfloat16)
+    v4 = jax.random.normal(key, (B, Hkv, S, d), jnp.bfloat16)
+    fn = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    cpu_s = _time(fn, q4, k4, v4)
+    flops = 4.0 * B * H * S * S * d * 0.5
+    bytes_m = (B * H * S * d + 2 * B * Hkv * S * d) * 2.0
+    rows.append(("kernel/flash_attention/S2048", cpu_s * 1e6,
+                 f"tpu_roofline_us={_roofline_us(flops, bytes_m):.1f} "
+                 f"(compute-bound)"))
+
+    # --- SSD scan ------------------------------------------------------------
+    B, L, Hs, G, N, P = 2, 1024, 24, 1, 64, 64
+    x = jax.random.normal(key, (B, L, Hs, P))
+    dt = jax.nn.softplus(jax.random.normal(key, (B, L, Hs)))
+    a = -jnp.exp(jax.random.normal(key, (Hs,)) * 0.3)
+    bm = jax.random.normal(key, (B, L, G, N)) / 8
+    cm = jax.random.normal(key, (B, L, G, N)) / 8
+    dsk = jnp.ones((Hs,))
+    fn = jax.jit(lambda *t: ref.ssd_scan_ref(*t))
+    cpu_s = _time(fn, x, dt, a, bm, cm, dsk)
+    Q = 128
+    flops = B * Hs * (L * Q * N + L * Q * P + L * N * P) * 2.0 * 2
+    bytes_m = (x.size + bm.size + cm.size) * 4.0
+    rows.append(("kernel/ssd_scan/L1024", cpu_s * 1e6,
+                 f"tpu_roofline_us={_roofline_us(flops, bytes_m):.1f}"))
+
+    # --- online-softmax merge (RU stage) -----------------------------------
+    from repro.core import online_softmax as osm
+    T = 16
+    o = jax.random.normal(key, (T, B, H, d))
+    m = jax.random.normal(key, (T, B, H))
+    l = jax.random.uniform(key, (T, B, H)) + 0.5
+    fn = jax.jit(lambda o, m, l: osm.finalize(
+        osm.merge_many(osm.AttnPartial(o, m, l))))
+    cpu_s = _time(fn, o, m, l)
+    bytes_m = o.size * 4.0 * 2
+    rows.append(("kernel/ru_merge/T16", cpu_s * 1e6,
+                 f"tpu_roofline_us={_roofline_us(0, bytes_m):.2f} "
+                 f"(<2%-of-attention check)"))
+    return rows

@@ -1,0 +1,188 @@
+"""Benchmarks reproducing the paper's tables/figures from the analytical
+system model (§7 methodology). Each function returns rows of
+(name, us_per_call, derived) used by benchmarks.run."""
+
+from __future__ import annotations
+
+import math
+
+from repro.perfmodel.model import (LLAMA3_70B, OPT_175B, QWEN25_32B,
+                                   SystemKind, make_system,
+                                   simulate_offline, simulate_online)
+
+SYSTEMS = [SystemKind.VLLM_OFFLOAD, SystemKind.ATTACC, SystemKind.LPIM,
+           SystemKind.LSPIM, SystemKind.PAM]
+
+# dataset descriptors (paper §7.1): average context at decode time
+DATASETS = {"sharegpt": 534, "wildchat": 738, "humaneval": 400}
+
+
+def fig9_online_slo() -> list[tuple]:
+    """Fig. 9: normalized online throughput under SLOs (100/150/200 ms)."""
+    rows = []
+    for model in (QWEN25_32B, LLAMA3_70B, OPT_175B):
+        for ds, ctx in DATASETS.items():
+            for slo_ms in (100, 150, 200):
+                base = None
+                for kind in SYSTEMS:
+                    sys_m = make_system(kind)
+                    r = simulate_online(sys_m, model, avg_context=ctx,
+                                        slo_s=slo_ms / 1e3)
+                    if kind == SystemKind.VLLM_OFFLOAD:
+                        base = max(r["throughput_tok_s"], 1e-9)
+                    norm = r["throughput_tok_s"] / base
+                    step_us = (1e6 * r["max_batch"]
+                               / max(r["throughput_tok_s"], 1e-9)
+                               if r["max_batch"] else float("inf"))
+                    rows.append((
+                        f"fig9/{model.name}/{ds}/slo{slo_ms}ms/{kind.value}",
+                        step_us,
+                        f"norm_tput={norm:.2f}x batch={r['max_batch']}"))
+    return rows
+
+
+def fig10_offline() -> list[tuple]:
+    """Fig. 10: offline throughput at fixed batch. Context 8000 — the
+    upper end of the paper's summarization workloads (1500~8000), the
+    regime where the KV set spills past HBM(+DDR)."""
+    rows = []
+    cases = [(LLAMA3_70B, b) for b in (256, 512, 1024)] + \
+            [(OPT_175B, b) for b in (16, 32, 64)]
+    for model, batch in cases:
+        base = None
+        for kind in SYSTEMS:
+            sys_m = make_system(kind)
+            r = simulate_offline(sys_m, model, batch=batch, context=8000)
+            if kind == SystemKind.VLLM_OFFLOAD:
+                base = max(r["throughput_tok_s"], 1e-9)
+            norm = r["throughput_tok_s"] / base
+            derived = ("OOM" if r["oom"]
+                       else f"norm_tput={norm:.2f}x")
+            us = (1e6 * batch / r["throughput_tok_s"]
+                  if r["throughput_tok_s"] else float("inf"))
+            rows.append((f"fig10/{model.name}/b{batch}/{kind.value}",
+                         us, derived))
+    return rows
+
+
+def fig11_energy() -> list[tuple]:
+    """Fig. 11: energy per output token (online + offline settings)."""
+    rows = []
+    cases = [(LLAMA3_70B, 8192, 738, "online"),
+             (OPT_175B, 512, 738, "online"),
+             (LLAMA3_70B, 1024, 4096, "offline"),
+             (OPT_175B, 64, 4096, "offline")]
+    for model, batch, ctx, tag in cases:
+        base = None
+        for kind in SYSTEMS:
+            sys_m = make_system(kind)
+            tok = model.kv_bytes_per_token()
+            if batch * ctx * tok > sys_m.kv_capacity(model) or not math.isfinite(
+                    sys_m.decode_step_time(model, batch, ctx)):
+                rows.append((f"fig11/{tag}/{model.name}/{kind.value}",
+                             float("inf"), "OOM"))
+                continue
+            e = sys_m.decode_step_energy(model, batch, ctx) / batch
+            if kind == SystemKind.VLLM_OFFLOAD:
+                base = e
+            rows.append((f"fig11/{tag}/{model.name}/{kind.value}",
+                         e * 1e6,
+                         f"J_per_tok={e:.4f} vs_vllm={e/base:.3f}"))
+    return rows
+
+
+def fig12_ablation() -> list[tuple]:
+    """Fig. 12: PAMattention / KV-mapping / KV-scheduling ablations,
+    normalized to LS-PIM (paper protocol), attention time only."""
+    rows = []
+    # batch sizes chosen to bracket the SSD-pressure cliff (paper: 18.7x
+    # small / 48.6x large over LS-PIM; ratios are cliff-sensitive — see
+    # EXPERIMENTS.md)
+    for model, batch, ctx, tag in ((LLAMA3_70B, 1024, 2048, "small-batch"),
+                                   (LLAMA3_70B, 3072, 2048, "large-batch")):
+        ls = make_system(SystemKind.LSPIM)
+        t_ls = ls.attention_time(model, batch, ctx)
+        variants = {
+            "pam-full": make_system(SystemKind.PAM),
+            # fixed-tiling attention, centralized (non-overlapped,
+            # off-die) reduction: the §5.2 RU claims reversed — reduction
+            # is no longer <2% but ~= the local attention time itself
+            "w/o-pamattention": make_system(
+                SystemKind.PAM, reduction_overhead=1.0),
+            "w/o-kv-mapping": make_system(SystemKind.PAM,
+                                          mapping_imbalance=2.0),
+            # static placement: hit rate falls to capacity share
+            "w/o-kv-scheduling": make_system(SystemKind.PAM,
+                                             pam_hit_rate=0.30),
+        }
+        for name, sys_m in variants.items():
+            t = sys_m.attention_time(model, batch, ctx)
+            rows.append((f"fig12/{tag}/{name}", t * 1e6,
+                         f"speedup_vs_lspim={t_ls/t:.2f}x "
+                         f"pam_vs_variant={t/variants_t0:.2f}x"
+                         if name != "pam-full" else
+                         f"speedup_vs_lspim={t_ls/t:.2f}x"))
+            if name == "pam-full":
+                variants_t0 = t
+    return rows
+
+
+def fig13_scalability() -> list[tuple]:
+    """Fig. 13: PAM vs L-PIM throughput across (TP, PP) scale-outs."""
+    rows = []
+    model, batch, ctx = LLAMA3_70B, 1024, 4096
+    for (tp, pp) in ((1, 1), (2, 1), (2, 2), (4, 1), (4, 2), (8, 1)):
+        n = tp * pp
+        for kind in (SystemKind.LPIM, SystemKind.PAM):
+            sys_m = make_system(kind)
+            fc = sys_m.fc_time(model, batch) / n
+            # TP all-reduce: 2 x activations per layer over nvlink
+            ar = (2 * (tp - 1) / max(tp, 1) * batch * 8192 * 2
+                  * model.n_layers / sys_m.hw.nvlink_bw)
+            attn = sys_m.attention_time(model, batch // max(n, 1), ctx)
+            bubble = (pp - 1) / (8 + pp - 1)       # 8 microbatches
+            t = (fc + ar + attn) / (1 - bubble)
+            if not math.isfinite(t):
+                rows.append((f"fig13/tp{tp}_pp{pp}/{kind.value}",
+                             float("inf"), "OOM"))
+                continue
+            rows.append((f"fig13/tp{tp}_pp{pp}/{kind.value}", t * 1e6,
+                         f"tput={batch/t:.0f}tok/s n={n}"))
+    return rows
+
+
+def headline_claims() -> list[tuple]:
+    """The paper's two headline numbers, recomputed from the model:
+    12.88x (conversation) and 26.41x (long-context) vs vLLM-offloading."""
+    rows = []
+    # conversation: average over models x datasets x SLOs
+    ratios = []
+    for model in (QWEN25_32B, LLAMA3_70B, OPT_175B):
+        for ctx in DATASETS.values():
+            for slo_ms in (100, 150, 200):
+                v = simulate_online(make_system(SystemKind.VLLM_OFFLOAD),
+                                    model, avg_context=ctx,
+                                    slo_s=slo_ms / 1e3)
+                p = simulate_online(make_system(SystemKind.PAM), model,
+                                    avg_context=ctx, slo_s=slo_ms / 1e3)
+                if v["throughput_tok_s"] > 0:
+                    ratios.append(p["throughput_tok_s"]
+                                  / v["throughput_tok_s"])
+    conv = sum(ratios) / len(ratios)
+    rows.append(("headline/conversation_speedup", 0.0,
+                 f"PAM_vs_vLLM={conv:.2f}x (paper: 12.88x)"))
+    ratios = []
+    for model, batches in ((LLAMA3_70B, (256, 512, 1024)),
+                           (OPT_175B, (16, 32, 64))):
+        for b in batches:
+            v = simulate_offline(make_system(SystemKind.VLLM_OFFLOAD),
+                                 model, batch=b, context=4096)
+            p = simulate_offline(make_system(SystemKind.PAM), model,
+                                 batch=b, context=4096)
+            if v["throughput_tok_s"] > 0:
+                ratios.append(p["throughput_tok_s"]
+                              / v["throughput_tok_s"])
+    lc = sum(ratios) / len(ratios)
+    rows.append(("headline/long_context_speedup", 0.0,
+                 f"PAM_vs_vLLM={lc:.2f}x (paper: 26.41x)"))
+    return rows

@@ -1,0 +1,45 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Run:
+    PYTHONPATH=src python -m benchmarks.run [--section figs|kernels|engine|roofline]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all",
+                    choices=["all", "figs", "kernels", "engine",
+                             "roofline"])
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    rows: list[tuple] = []
+    if args.section in ("all", "figs"):
+        from benchmarks import paper_figs
+        rows += paper_figs.fig9_online_slo()
+        rows += paper_figs.fig10_offline()
+        rows += paper_figs.fig11_energy()
+        rows += paper_figs.fig12_ablation()
+        rows += paper_figs.fig13_scalability()
+        rows += paper_figs.headline_claims()
+    if args.section in ("all", "kernels"):
+        from benchmarks.kernel_bench import bench_kernels
+        rows += bench_kernels()
+    if args.section in ("all", "engine"):
+        from benchmarks.engine_bench import bench_engine
+        rows += bench_engine()
+    if args.section in ("all", "roofline"):
+        from benchmarks.roofline import roofline_rows
+        rows += roofline_rows(args.dryrun_dir)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

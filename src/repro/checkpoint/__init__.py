@@ -1,0 +1,6 @@
+"""Fault-tolerant checkpointing: atomic sharded save/restore + manager."""
+
+from repro.checkpoint.manager import (CheckpointManager, restore_pytree,
+                                      save_pytree)
+
+__all__ = ["CheckpointManager", "restore_pytree", "save_pytree"]

@@ -1,0 +1,16 @@
+"""Assigned architecture configs (public-literature sources inline).
+
+Importing this package registers every config; select with
+``repro.models.config.get_config(name)`` or ``--arch <id>`` on launchers.
+"""
+
+from repro.configs import (qwen3_14b, deepseek_67b, qwen3_0_6b, minicpm_2b,
+                           internvl2_1b, deepseek_v2_lite_16b,
+                           qwen3_moe_235b_a22b, zamba2_7b, hubert_xlarge,
+                           mamba2_780m, pam_llama_7b)  # noqa: F401
+
+ASSIGNED = [
+    "qwen3-14b", "deepseek-67b", "qwen3-0.6b", "minicpm-2b", "internvl2-1b",
+    "deepseek-v2-lite-16b", "qwen3-moe-235b-a22b", "zamba2-7b",
+    "hubert-xlarge", "mamba2-780m",
+]

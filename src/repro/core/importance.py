@@ -1,0 +1,84 @@
+"""KV-token importance tracking (paper §6.3.1, eqs. 7-8).
+
+Per-token importance factor:   I_i(j) = lam * S_i(j) + (1 - lam) * I_i(j-1)
+Per-tier cumulative score:     IS_D(j) = sum_{i in D} I_i(j) / #tokens(D)
+
+``S_i(j)`` is the per-step performance score from the retrieval-sparsity
+algorithm — here the (normalized) attention weight mass a token received at
+step j (summed over heads), which is what Double-Sparsity-style methods
+expose. The EMA damps step-to-step volatility so the scheduler (Alg. 2)
+does not thrash tokens across tiers.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_LAMBDA = 0.6  # paper: "lambda is set as 0.6"
+
+
+@partial(jax.jit, static_argnames=("lam",))
+def update_importance(importance: jax.Array, step_score: jax.Array,
+                      lam: float = DEFAULT_LAMBDA) -> jax.Array:
+    """Eq. (7): EMA update. Shapes broadcast; typically (tokens,)."""
+    return lam * step_score + (1.0 - lam) * importance
+
+
+def step_score_from_attn_weights(weights: jax.Array,
+                                 head_axis: int = 0) -> jax.Array:
+    """Derive S_i(j) from attention probabilities.
+
+    weights: (..., heads, tokens) attention probabilities for the current
+    query. Returns (..., tokens): mean attention mass per token across heads,
+    scaled by token count so scores are O(1) regardless of context length.
+    """
+    score = jnp.mean(weights, axis=head_axis)
+    n = score.shape[-1]
+    return score * n
+
+
+@partial(jax.jit, static_argnames=("num_tiers",))
+def tier_importance_score(importance: jax.Array,
+                          tier_of_token: jax.Array,
+                          num_tiers: int = 3,
+                          valid: jax.Array | None = None) -> jax.Array:
+    """Eq. (8): mean importance of tokens on each tier.
+
+    importance: (tokens,), tier_of_token: (tokens,) int in [0, num_tiers),
+    valid: optional bool (tokens,). Returns (num_tiers,) mean score; empty
+    tiers score 0.
+    """
+    if valid is None:
+        valid = jnp.ones_like(importance, dtype=bool)
+    w = valid.astype(importance.dtype)
+    sums = jax.ops.segment_sum(importance * w, tier_of_token,
+                               num_segments=num_tiers)
+    counts = jax.ops.segment_sum(w, tier_of_token, num_segments=num_tiers)
+    return sums / jnp.maximum(counts, 1.0)
+
+
+def topk_hot_set(importance: jax.Array, k: int,
+                 valid: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Select the k most important tokens (the hot working set).
+
+    Returns (indices (k,), mask_over_tokens (tokens,) bool). Invalid tokens
+    are never selected (importance forced to -inf).
+    """
+    scores = importance
+    if valid is not None:
+        scores = jnp.where(valid, importance, -jnp.inf)
+    _, idx = jax.lax.top_k(scores, k)
+    mask = jnp.zeros(importance.shape, bool).at[idx].set(
+        True if valid is None else valid[idx])
+    return idx, mask
+
+
+def context_locality_hit_rate(prev_hot: jax.Array,
+                              cur_hot: jax.Array) -> jax.Array:
+    """Fraction of the current hot set already hot last step (§3.2 metric)."""
+    inter = jnp.sum(prev_hot & cur_hot)
+    denom = jnp.maximum(jnp.sum(cur_hot), 1)
+    return inter / denom

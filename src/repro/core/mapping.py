@@ -1,0 +1,81 @@
+"""Intra-device KV mapping (paper §6.1).
+
+Within one PIM device, KV tokens are interleaved across B parallel bank
+groups; the device's latency is the *max* over bank groups (T_intra =
+max_bg T_bg), so the mapper balances the **activation frequency** (tracked
+over a 10-step window) across bank groups, then aligns tokens to identical
+rows across banks for lockstep activation.
+
+TPU adaptation: "bank group" maps to a kernel grid lane / sublane partition
+of the per-device KV shard. The balanced assignment determines the gather
+order used when compacting the hot set into the dense kernel layout, so
+each grid block of the Pallas decode kernel receives an equal share of
+frequently-activated tokens.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("num_groups",))
+def greedy_balanced_assign(freq: jax.Array, valid: jax.Array,
+                           num_groups: int) -> jax.Array:
+    """Greedy longest-processing-time assignment of tokens to bank groups.
+
+    Tokens are taken in decreasing activation frequency; each goes to the
+    currently lightest group (paper: "greedily allocated to the bank group
+    with the lowest activation frequency"). Returns (tokens,) int32 group id.
+
+    Implemented as a sorted round-robin refinement: after sorting by
+    frequency, position p goes to group p % G when loads are equal, which is
+    exactly LPT for the uniform case; a scan fixes the general case.
+    """
+    n = freq.shape[0]
+    f = jnp.where(valid, freq.astype(jnp.float32), -1.0)
+    order = jnp.argsort(-f)  # decreasing frequency, invalid last
+
+    def body(loads, tok):
+        g = jnp.argmin(loads)
+        loads = loads.at[g].add(jnp.maximum(f[tok], 0.0))
+        return loads, g
+
+    _, groups_sorted = jax.lax.scan(body, jnp.zeros((num_groups,)), order)
+    # scatter back to token order
+    assign = jnp.zeros((n,), jnp.int32).at[order].set(
+        groups_sorted.astype(jnp.int32))
+    return assign
+
+
+def group_loads(freq: jax.Array, assign: jax.Array, valid: jax.Array,
+                num_groups: int) -> jax.Array:
+    """Per-group total activation frequency (T_bg proxy)."""
+    w = jnp.where(valid, freq.astype(jnp.float32), 0.0)
+    return jax.ops.segment_sum(w, assign, num_segments=num_groups)
+
+
+def imbalance(freq: jax.Array, assign: jax.Array, valid: jax.Array,
+              num_groups: int) -> jax.Array:
+    """max/mean group load — 1.0 is perfect balance (T_intra metric)."""
+    loads = group_loads(freq, assign, valid, num_groups)
+    return jnp.max(loads) / jnp.maximum(jnp.mean(loads), 1e-9)
+
+
+@partial(jax.jit, static_argnames=("window",))
+def update_activation_freq(freq_window: jax.Array, activated: jax.Array,
+                           step: jax.Array, window: int = 10) -> jax.Array:
+    """Ring-buffer activation tracking over the paper's 10-step window.
+
+    freq_window: (window, tokens) uint8 activation history;
+    activated: (tokens,) bool for this step. Returns updated window.
+    """
+    slot = step % window
+    return freq_window.at[slot].set(activated.astype(freq_window.dtype))
+
+
+def windowed_frequency(freq_window: jax.Array) -> jax.Array:
+    """(tokens,) activation count over the window."""
+    return jnp.sum(freq_window.astype(jnp.int32), axis=0)

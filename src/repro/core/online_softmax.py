@@ -1,0 +1,170 @@
+"""Online-softmax partial-attention algebra (PAMattention §5.1, Alg. 1).
+
+The core identity: softmax-attention over a concatenated KV set equals the
+exact merge of per-partition partial results, where each partition carries
+``(O, m, l)``:
+
+    O_t = sum_j exp(s_j - m_t) v_j     (unnormalized partial output)
+    m_t = max_j s_j                    (partition max logit)
+    l_t = sum_j exp(s_j - m_t)         (partition normalizer at m_t)
+
+Merging partitions t in any order/grouping (associative + commutative):
+
+    m* = max_t m_t
+    O  = sum_t exp(m_t - m*) O_t
+    l  = sum_t exp(m_t - m*) l_t
+    attention = O / l
+
+This file is the pure-JAX reference algebra used by: the Pallas decode
+kernel's intra-device reduction (paper's bank-group RUs), the inter-device
+``shard_map`` merge (paper's HBM-PIM global reduction), and the property
+tests.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AttnPartial(NamedTuple):
+    """Partial attention state for one KV partition.
+
+    Shapes (leading batch/head dims ``...`` are arbitrary):
+      o: (..., d)   unnormalized output  sum exp(s - m) * v
+      m: (...,)     running max logit
+      l: (...,)     running normalizer  sum exp(s - m)
+    """
+
+    o: jax.Array
+    m: jax.Array
+    l: jax.Array
+
+
+# Identity element: m = -inf, o = 0, l = 0. exp(-inf - m*) = 0 kills it.
+def empty_partial(d: int, batch_shape: tuple[int, ...] = (),
+                  dtype=jnp.float32) -> AttnPartial:
+    return AttnPartial(
+        o=jnp.zeros(batch_shape + (d,), dtype),
+        m=jnp.full(batch_shape, -jnp.inf, dtype),
+        l=jnp.zeros(batch_shape, dtype),
+    )
+
+
+def local_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    scale: float | None = None,
+                    mask: jax.Array | None = None) -> AttnPartial:
+    """Alg. 1 ``Local_Attention``: partial attention over one KV partition.
+
+    q: (..., d), k: (..., S, d), v: (..., S, d) -> AttnPartial over (...,).
+    ``mask``: optional boolean (..., S); False positions are excluded.
+    All math in fp32 for stability regardless of input dtype.
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("...d,...sd->...s", qf, kf) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    # Guard fully-masked partitions: keep m finite inside exp by substitution.
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("...s,...sd->...d", p, vf)
+    return AttnPartial(o=o, m=m, l=l)
+
+
+def merge_partials(a: AttnPartial, b: AttnPartial) -> AttnPartial:
+    """Alg. 1 ``Reduction`` for two partials — associative & commutative."""
+    m = jnp.maximum(a.m, b.m)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    wa = jnp.where(jnp.isfinite(a.m), jnp.exp(a.m - m_safe), 0.0)
+    wb = jnp.where(jnp.isfinite(b.m), jnp.exp(b.m - m_safe), 0.0)
+    return AttnPartial(
+        o=wa[..., None] * a.o + wb[..., None] * b.o,
+        m=m,
+        l=wa * a.l + wb * b.l,
+    )
+
+
+def merge_many(partials: AttnPartial) -> AttnPartial:
+    """Reduce a stacked AttnPartial whose leading axis indexes partitions.
+
+    o: (T, ..., d), m/l: (T, ...). Single-pass exact merge (the paper's
+    inter-device reduction: find global max, rescale, accumulate).
+    """
+    m_star = jnp.max(partials.m, axis=0)
+    m_safe = jnp.where(jnp.isfinite(m_star), m_star, 0.0)
+    w = jnp.where(jnp.isfinite(partials.m),
+                  jnp.exp(partials.m - m_safe[None]), 0.0)
+    o = jnp.sum(w[..., None] * partials.o, axis=0)
+    l = jnp.sum(w * partials.l, axis=0)
+    return AttnPartial(o=o, m=m_star, l=l)
+
+
+def tree_merge(partials: AttnPartial) -> AttnPartial:
+    """Hierarchical (binary-tree) reduction — models the paper's tiered RUs.
+
+    Numerically equivalent to ``merge_many``; exercised by property tests to
+    certify that any reduction topology (intra-bank -> intra-device ->
+    inter-device) yields the same result.
+    """
+    t = partials.o.shape[0]
+    if t == 1:
+        return AttnPartial(partials.o[0], partials.m[0], partials.l[0])
+    half = t // 2
+    left = tree_merge(AttnPartial(partials.o[:half], partials.m[:half],
+                                  partials.l[:half]))
+    right = tree_merge(AttnPartial(partials.o[half:], partials.m[half:],
+                                   partials.l[half:]))
+    return merge_partials(left, right)
+
+
+def finalize(p: AttnPartial, out_dtype=None) -> jax.Array:
+    """Normalize a merged partial into the attention output O / l."""
+    l_safe = jnp.where(p.l > 0, p.l, 1.0)
+    out = p.o / l_safe[..., None]
+    if out_dtype is not None:
+        out = out.astype(out_dtype)
+    return out
+
+
+def attention_from_partitions(q: jax.Array, ks: list[jax.Array],
+                              vs: list[jax.Array],
+                              scale: float | None = None,
+                              masks: list[jax.Array] | None = None,
+                              out_dtype=None) -> jax.Array:
+    """End-to-end Alg. 1: local attention per partition + exact merge."""
+    if masks is None:
+        masks = [None] * len(ks)
+    acc = None
+    for k, v, msk in zip(ks, vs, masks):
+        part = local_attention(q, k, v, scale=scale, mask=msk)
+        acc = part if acc is None else merge_partials(acc, part)
+    assert acc is not None, "need at least one partition"
+    return finalize(acc, out_dtype=out_dtype or q.dtype)
+
+
+def reference_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        scale: float | None = None,
+                        mask: jax.Array | None = None,
+                        out_dtype=None) -> jax.Array:
+    """Monolithic softmax attention oracle (what Alg. 1 must equal)."""
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("...d,...sd->...s", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("...s,...sd->...d", p, v.astype(jnp.float32))
+    return out.astype(out_dtype or q.dtype)

@@ -1,0 +1,116 @@
+"""PAMattention (paper §5, Algorithm 1) — single-host orchestration.
+
+Ties together the pieces:
+  1. (optional) retrieval sparsity picks the tokens that participate,
+  2. tokens are partitioned by tier residency (HBM / DDR / SSD),
+  3. each partition runs Local_Attention -> (O_t, m_t, l_t),
+  4. hierarchical Reduction merges partials exactly,
+  5. importance scores are updated (eq. 7) from the step's attention mass.
+
+The distributed (shard_map) form lives in ``repro.distributed.pam_shard``;
+the Pallas kernel form of step 3 in ``repro.kernels.flash_decode``. All
+three are interchangeable and agree numerically (tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import importance as imp_mod
+from repro.core import online_softmax as osm
+from repro.core.tiers import COLD, HOT, WARM
+
+
+@dataclasses.dataclass(frozen=True)
+class PAMAttentionConfig:
+    num_tiers: int = 3
+    use_sparsity: bool = True
+    compression: int = 8          # keep S/compression tokens per step
+    lam: float = imp_mod.DEFAULT_LAMBDA
+
+
+class PAMAttentionOutput(NamedTuple):
+    out: jax.Array           # (H, d) attention output
+    step_scores: jax.Array   # (S,) per-token attention mass S_i(j)
+    new_importance: jax.Array
+
+
+def pam_attention_step(q: jax.Array, k: jax.Array, v: jax.Array,
+                       tier_of_token: jax.Array, valid: jax.Array,
+                       importance: jax.Array,
+                       cfg: PAMAttentionConfig = PAMAttentionConfig(),
+                       scale: float | None = None) -> PAMAttentionOutput:
+    """One decode-step attention for one sequence.
+
+    q: (H, d) current query; k, v: (S, H_kv, d) full cached KV (GQA allowed:
+    H must be a multiple of H_kv); tier_of_token/valid/importance: (S,).
+
+    Partitions by tier, computes local partials per tier, merges exactly.
+    With ``use_sparsity``, only the top-(S_valid/compression) tokens by
+    current importance participate (retrieval sparsity; importance carries
+    the context-locality signal).
+    """
+    S, H_kv, d = k.shape
+    H = q.shape[0]
+    rep = H // H_kv
+
+    participate = valid
+    if cfg.use_sparsity:
+        n_valid = jnp.sum(valid)
+        k_keep = jnp.maximum(n_valid // cfg.compression, 1)
+        # static top-k size: S // compression rounded up, clamped by mask
+        k_static = max(S // cfg.compression, 1)
+        scores = jnp.where(valid, importance, -jnp.inf)
+        _, idx = jax.lax.top_k(scores, k_static)
+        sel = jnp.zeros((S,), bool).at[idx].set(True) & valid
+        # honor dynamic budget: drop selected tokens ranked past k_keep
+        ranks = jnp.argsort(jnp.argsort(-scores))
+        sel = sel & (ranks < k_keep)
+        participate = sel
+
+    kh = jnp.repeat(k, rep, axis=1)    # (S, H, d)
+    vh = jnp.repeat(v, rep, axis=1)
+
+    # Per-tier local attention (Alg. 1 lines 3-4) — masks select residency.
+    partials = []
+    for tier in (HOT, WARM, COLD)[: cfg.num_tiers]:
+        mask = participate & (tier_of_token == tier)      # (S,)
+        part = osm.local_attention(
+            q,                                             # (H, d)
+            jnp.moveaxis(kh, 0, 1),                        # (H, S, d)
+            jnp.moveaxis(vh, 0, 1),
+            scale=scale,
+            mask=mask[None, :],
+        )
+        partials.append(part)
+
+    stacked = osm.AttnPartial(
+        o=jnp.stack([p.o for p in partials]),
+        m=jnp.stack([p.m for p in partials]),
+        l=jnp.stack([p.l for p in partials]),
+    )
+    merged = osm.tree_merge(stacked)                      # hierarchical RU
+    out = osm.finalize(merged, out_dtype=q.dtype)
+
+    # Step scores for eq. (7): exact attention mass per token this step.
+    step_scores = _attention_mass(q, kh, participate, merged, scale)
+    new_imp = imp_mod.update_importance(importance, step_scores, lam=cfg.lam)
+    return PAMAttentionOutput(out=out, step_scores=step_scores,
+                              new_importance=new_imp)
+
+
+def _attention_mass(q, kh, participate, merged: osm.AttnPartial, scale):
+    """Per-token softmax mass (head-mean, count-scaled) for importance."""
+    d = q.shape[-1]
+    sc = scale if scale is not None else 1.0 / jnp.sqrt(jnp.float32(d))
+    s = jnp.einsum("hd,shd->hs", q.astype(jnp.float32),
+                   kh.astype(jnp.float32)) * sc
+    s = jnp.where(participate[None, :], s, -jnp.inf)
+    m_safe = jnp.where(jnp.isfinite(merged.m), merged.m, 0.0)
+    p = jnp.exp(s - m_safe[:, None]) / jnp.maximum(merged.l, 1e-30)[:, None]
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    return imp_mod.step_score_from_attn_weights(p, head_axis=0)

@@ -1,0 +1,78 @@
+"""Retrieval-based KV sparsity (paper §2.3.1 / §7.1).
+
+The paper runs all systems with a state-of-the-art retrieval sparsity
+algorithm (Double Sparsity [Yang et al. 2024]) at 8x compression: the full
+KV set stays cached, but each decode step only *loads* the top-(S/8) most
+relevant tokens. PAM's contribution is orthogonal ("PAM's KV management is
+algorithm-agnostic") — this module provides the selection machinery that
+produces the per-step performance scores S_i(j) feeding eq. (7).
+
+Double-Sparsity-style approximation: relevance is estimated from a small
+subset of "label" channels (the highest-magnitude key channels, chosen
+offline), so the scoring pass reads r << d channels per token.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    compression: int = 8          # paper: 8x
+    label_channels: int = 16      # r channels used for approximate scoring
+    recency_window: int = 32      # always keep the most recent tokens (local attn sink)
+
+
+def choose_label_channels(k_sample: jax.Array, r: int) -> jax.Array:
+    """Offline channel selection: top-r channels by mean |K| magnitude.
+
+    k_sample: (S, d) calibration keys. Returns (r,) int32 channel ids.
+    """
+    mag = jnp.mean(jnp.abs(k_sample.astype(jnp.float32)), axis=0)
+    _, idx = jax.lax.top_k(mag, r)
+    return idx
+
+
+def approx_scores(q: jax.Array, k_label: jax.Array,
+                  label_idx: jax.Array) -> jax.Array:
+    """Approximate attention logits from label channels only.
+
+    q: (H, d) query;  k_label: (S, r) label-channel cache;
+    label_idx: (r,) channels. Returns (S,) head-mean |logit| estimate.
+    """
+    d = q.shape[-1]
+    ql = q[..., label_idx].astype(jnp.float32)          # (H, r)
+    s = jnp.einsum("hr,sr->hs", ql, k_label.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    return jnp.mean(s, axis=0)                          # (S,)
+
+
+def select_topk(scores: jax.Array, valid: jax.Array, k: int,
+                num_tokens: jax.Array | None = None,
+                recency_window: int = 0) -> tuple[jax.Array, jax.Array]:
+    """Pick the k tokens to load this step.
+
+    Recent tokens inside ``recency_window`` of the sequence tail are pinned
+    (context locality: the paper's Fig. 3 shows criticals cluster at the
+    tail). Returns (indices (k,), mask (S,) bool).
+    """
+    s = jnp.where(valid, scores, -jnp.inf)
+    if recency_window and num_tokens is not None:
+        pos = jnp.arange(s.shape[0])
+        recent = (pos >= num_tokens - recency_window) & valid
+        s = jnp.where(recent, jnp.inf, s)
+    _, idx = jax.lax.top_k(s, k)
+    mask = jnp.zeros(s.shape, bool).at[idx].set(True) & valid
+    return idx, mask
+
+
+def sparse_step_scores(weights_mean: jax.Array, selected: jax.Array
+                       ) -> jax.Array:
+    """Per-step S_i(j) for eq. (7): attention mass for selected tokens,
+    0 for unselected (they were not loaded, hence contributed nothing)."""
+    return jnp.where(selected, weights_mean, 0.0)

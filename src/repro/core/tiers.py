@@ -1,0 +1,133 @@
+"""Memory-tier abstraction for the PAM hierarchy (paper §4.1, Table 1).
+
+A ``TierSpec`` captures the physical properties the paper's simulator uses:
+capacity, read bandwidth available to attention (aggregate PIM bandwidth),
+near-memory compute throughput, and the inter-tier link bandwidth used for
+KV migration. ``TieredKVState`` tracks per-token tier residency + importance
+for one sequence; it is a pytree so schedulers can be jit'd.
+
+Default tier constants follow Table 1 / §7.1 of the paper:
+  HBM-PIM : 640 GB cap, internal bw ~ 5.2 Gbps * 1024 bus ... aggregated
+            near-bank bandwidth taken as 6.4 TB/s per stack-group,
+            compute 1.6 TFLOPS/device
+  DDR-PIM : 1280 GB cap, aggregate near-bank bw 1.6 TB/s, 204 GFLOPS/device
+  SSD-PIM : 8 TB cap, controller bw 100 GB/s (paper: "<100 GB/s"),
+            18 GFLOPS/device
+Values are configurable — "PAM's architecture is orthogonal to specific
+configurations" (§7.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+HOT, WARM, COLD = 0, 1, 2
+TIER_NAMES = ("hbm", "ddr", "ssd")
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    name: str
+    capacity_bytes: float          # KV capacity of this tier
+    read_bw: float                 # aggregate near-memory read bandwidth B/s
+    compute_flops: float           # near-memory compute throughput FLOP/s
+    link_bw: float                 # migration bandwidth to adjacent tier B/s
+    energy_pj_per_byte: float      # access energy (for Fig. 11 benchmark)
+
+    def attention_time(self, bytes_read: float, flops: float) -> float:
+        """Roofline time for a local-attention pass on this tier."""
+        return max(bytes_read / self.read_bw, flops / self.compute_flops)
+
+    @property
+    def effective_bw(self) -> float:
+        """Attention-effective bandwidth: decode attention does ~1 flop per
+        KV byte, so the tier runs at min(read bw, PU flops)."""
+        return min(self.read_bw, self.compute_flops)
+
+
+# Paper Table-1-derived NODE-level defaults (40xHBM, 40xDDR, 64ch SSD).
+# read_bw = aggregate near-bank/controller bandwidth (AttAcc-style 9x over
+# a DGX's 16 TB/s for HBM-PIM); compute = power-capped PU throughput
+# (1.6T/204G/18G FLOPS per device, §7.1) — decode attention at ~1 flop/byte
+# is COMPUTE-capped on HBM-PIM and bandwidth-capped on SSD-PIM.
+HBM_PIM = TierSpec("hbm", capacity_bytes=640e9, read_bw=144e12,
+                   compute_flops=40 * 1.6e12, link_bw=64e9,
+                   energy_pj_per_byte=3.5)
+DDR_PIM = TierSpec("ddr", capacity_bytes=1280e9, read_bw=8.2e12,
+                   compute_flops=40 * 204e9, link_bw=32e9,
+                   energy_pj_per_byte=15.0)
+SSD_PIM = TierSpec("ssd", capacity_bytes=8e12, read_bw=100e9,
+                   compute_flops=64 * 18e9, link_bw=8e9,
+                   energy_pj_per_byte=60.0)
+
+DEFAULT_TIERS: tuple[TierSpec, ...] = (HBM_PIM, DDR_PIM, SSD_PIM)
+
+
+@jax.tree_util.register_pytree_node_class
+class TieredKVState:
+    """Per-sequence token->tier residency + importance (device arrays).
+
+    tier_of_token: (max_tokens,) int32 in {HOT, WARM, COLD}
+    importance:    (max_tokens,) float32, eq. (7) EMA
+    valid:         (max_tokens,) bool — token exists
+    """
+
+    def __init__(self, tier_of_token: jax.Array, importance: jax.Array,
+                 valid: jax.Array):
+        self.tier_of_token = tier_of_token
+        self.importance = importance
+        self.valid = valid
+
+    @classmethod
+    def create(cls, max_tokens: int) -> "TieredKVState":
+        return cls(
+            tier_of_token=jnp.zeros((max_tokens,), jnp.int32),
+            importance=jnp.zeros((max_tokens,), jnp.float32),
+            valid=jnp.zeros((max_tokens,), bool),
+        )
+
+    # -- pytree plumbing -------------------------------------------------
+    def tree_flatten(self):
+        return (self.tier_of_token, self.importance, self.valid), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # -- queries ----------------------------------------------------------
+    @property
+    def max_tokens(self) -> int:
+        return self.tier_of_token.shape[0]
+
+    def tokens_on_tier(self, tier: int) -> jax.Array:
+        return jnp.sum((self.tier_of_token == tier) & self.valid)
+
+    def tier_counts(self, num_tiers: int = 3) -> jax.Array:
+        return jax.ops.segment_sum(
+            self.valid.astype(jnp.int32), self.tier_of_token,
+            num_segments=num_tiers)
+
+
+def initial_placement(num_tokens: int, max_tokens: int,
+                      tier_capacity_tokens: Sequence[int]) -> TieredKVState:
+    """Fill-down placement after prefill (§4.3): newest tokens are hottest.
+
+    The paper observes critical tokens cluster near the current token
+    (Fig. 3), so prefill places the tail of the context in HBM, the middle in
+    DDR, and the head in SSD, respecting capacities.
+    """
+    idx = jnp.arange(max_tokens)
+    valid = idx < num_tokens
+    # distance from the sequence tail (newest token = 0)
+    dist = jnp.maximum(num_tokens - 1 - idx, 0)
+    cap_h, cap_d = tier_capacity_tokens[0], tier_capacity_tokens[1]
+    tier = jnp.where(dist < cap_h, HOT, jnp.where(dist < cap_h + cap_d,
+                                                  WARM, COLD))
+    # recency prior as the initial importance signal
+    imp = jnp.where(valid, 1.0 / (1.0 + dist.astype(jnp.float32)), 0.0)
+    return TieredKVState(tier_of_token=tier.astype(jnp.int32),
+                         importance=imp, valid=valid)

@@ -1,0 +1,7 @@
+"""Data pipeline: deterministic synthetic token streams + file-backed
+corpora, sharded per data-parallel rank."""
+
+from repro.data.pipeline import (SyntheticLM, FileCorpus, make_batch_specs,
+                                 shard_for_rank)
+
+__all__ = ["SyntheticLM", "FileCorpus", "make_batch_specs", "shard_for_rank"]

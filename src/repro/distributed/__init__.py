@@ -1,0 +1,2 @@
+"""Distribution: sharding rules (DP/TP/SP/EP), distributed PAMattention,
+pipeline parallelism, elastic scaling, fault tolerance."""

@@ -1,0 +1,195 @@
+"""Distributed PAMattention (paper Alg. 1 across devices) via shard_map.
+
+Layout: KV caches sequence-sharded on the ``model`` mesh axis — each device
+plays the role of one PIM site holding its KV partition. One decode step:
+
+  local stage   : each device attends its own KV shard -> (O, m, l)
+  merge stage   : exact online-softmax reduction across the axis —
+                  m* = pmax(m);  O = psum(e^{m-m*} O);  l = psum(e^{m-m*} l)
+
+The merge communicates H x (d + 2) floats per device — independent of
+context length. A gather-based scheme would move the whole KV shard
+(S_local x H_kv x d); this is the paper's "reduce communication" claim,
+and the collective-bytes delta shows up directly in the dry-run roofline.
+
+``sequence_sharded_decode_attn`` plugs straight into
+``transformer.decode_step(decode_attn_fn=...)``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def make_sequence_sharded_decode_attn(mesh: Mesh, *, axis: str = "model",
+                                      dp=None):
+    """Returns a decode_attn_fn (q, k_cache, v_cache, kv_lens) -> (out,
+    mass) computing PAMattention with KV sequence-sharded over ``axis``.
+
+    q: (B, H, dh) replicated over ``axis``; caches (B, Hkv, S, dh) sharded
+    on S; kv_lens (B,). ``mass`` is returned sequence-sharded-consistent
+    (global (B, S) array, sharded like the cache on its S axis).
+    """
+
+    def local_fn(q, k, v, kv_lens):
+        # shapes here are PER-SHARD: k/v (B, Hkv, S_loc, dh)
+        B, H, dh = q.shape
+        Hkv, S_loc = k.shape[1], k.shape[2]
+        rep = H // Hkv
+        scale = 1.0 / math.sqrt(dh)
+        shard = jax.lax.axis_index(axis)
+        start = shard * S_loc
+        pos = start + jnp.arange(S_loc)                    # global positions
+        live = pos[None, :] < kv_lens[:, None]             # (B, S_loc)
+
+        kh = jnp.repeat(k, rep, axis=1)
+        vh = jnp.repeat(v, rep, axis=1)
+        s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                       kh.astype(jnp.float32)) * scale
+        s = jnp.where(live[:, None, :], s, -jnp.inf)
+
+        # ---- local partial (Alg. 1 Local_Attention) ----------------------
+        m_loc = jnp.max(s, axis=-1)                        # (B, H)
+        m_safe = jnp.where(jnp.isfinite(m_loc), m_loc, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(live[:, None, :], p, 0.0)
+        l_loc = jnp.sum(p, axis=-1)
+        o_loc = jnp.einsum("bhs,bhsd->bhd", p, vh.astype(jnp.float32))
+
+        # ---- inter-device reduction (Alg. 1 Reduction) --------------------
+        m_star = jax.lax.pmax(m_loc, axis)
+        m_star_safe = jnp.where(jnp.isfinite(m_star), m_star, 0.0)
+        w = jnp.where(jnp.isfinite(m_loc),
+                      jnp.exp(m_loc - m_star_safe), 0.0)   # (B, H)
+        o = jax.lax.psum(w[..., None] * o_loc, axis)
+        l = jax.lax.psum(w * l_loc, axis)
+        l_safe = jnp.where(l > 0, l, 1.0)
+        out = (o / l_safe[..., None]).astype(q.dtype)
+
+        # per-token mass on MY shard, normalized by the global (m*, l)
+        p_norm = (p * w[..., None]) / l_safe[..., None]
+        n_live = jax.lax.psum(jnp.sum(live, axis=-1), axis)  # (B,)
+        mass = jnp.mean(p_norm, axis=1) * n_live[:, None].astype(jnp.float32)
+        return out, mass
+
+    return jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dp), P(dp, None, axis, None), P(dp, None, axis, None),
+                  P(dp)),
+        out_specs=(P(dp), P(dp, axis)),
+        check_vma=False,
+    )
+
+
+def fused_update_decode(q, k_cache, v_cache, k_new, v_new, kv_lens, *,
+                        axis: str = "model"):
+    """§Perf ``pam_shard_decode``: one shard_map doing BOTH the new-token
+    cache write and PAMattention over the sequence-sharded cache.
+
+    The baseline lets GSPMD lower ``cache.at[b, :, pos].set(new)`` on a
+    sequence-sharded axis, which materializes a gather of the whole cache;
+    here each shard applies the write only if ``pos`` falls in its range
+    (a masked local dynamic-update), then computes its local partial and
+    joins the exact psum merge. Uses the ambient abstract mesh.
+
+    q: (B, H, dh); caches (B, Hkv, S, dh) sequence-sharded on ``axis``;
+    k_new/v_new: (B, Hkv, dh); kv_lens: (B,) pre-append lengths.
+    Returns (out, mass, k_cache, v_cache).
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    B = q.shape[0]
+    dp: tuple | None = tuple(a for a in mesh.axis_names
+                             if a in ("pod", "data")) or None
+    if dp is not None:
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        if B % dp_size:
+            dp = None
+
+    def local(q, kc, vc, kn, vn, lens):
+        Bl, H, dh = q.shape
+        Hkv, S_loc = kc.shape[1], kc.shape[2]
+        rep = H // Hkv
+        scale = 1.0 / math.sqrt(dh)
+        shard = jax.lax.axis_index(axis)
+        start = shard * S_loc
+
+        # ---- masked local cache write (the paper's intra-device mapping:
+        # the owning bank group takes the token; everyone else no-ops) ----
+        pos_local = lens - start
+        in_range = (pos_local >= 0) & (pos_local < S_loc)
+        safe = jnp.clip(pos_local, 0, S_loc - 1)
+        bidx = jnp.arange(Bl)
+        old_k = kc[bidx, :, safe]
+        old_v = vc[bidx, :, safe]
+        kc = kc.at[bidx, :, safe].set(
+            jnp.where(in_range[:, None, None], kn, old_k))
+        vc = vc.at[bidx, :, safe].set(
+            jnp.where(in_range[:, None, None], vn, old_v))
+
+        # ---- local partial + exact psum merge (Alg. 1) -------------------
+        # grouped (GQA) form: NO jnp.repeat — the baseline materializes
+        # rep x the KV shard; here queries are grouped per kv head instead
+        live = (start + jnp.arange(S_loc))[None, :] < (lens + 1)[:, None]
+        qg = q.reshape(Bl, Hkv, rep, dh)
+        # bf16 operands read directly, fp32 accumulate: no cast copy of the
+        # KV shard (iteration 3 of §Perf cell A)
+        s = jnp.einsum("bgrd,bgsd->bgrs", qg, kc,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(live[:, None, None, :], s, -jnp.inf)
+        m_loc = jnp.max(s, axis=-1)                        # (B, Hkv, rep)
+        m_safe = jnp.where(jnp.isfinite(m_loc), m_loc, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(live[:, None, None, :], p, 0.0)
+        l_loc = jnp.sum(p, axis=-1)
+        o_loc = jnp.einsum("bgrs,bgsd->bgrd", p, vc,
+                           preferred_element_type=jnp.float32)
+
+        m_star = jax.lax.pmax(m_loc, axis)
+        m_star_safe = jnp.where(jnp.isfinite(m_star), m_star, 0.0)
+        w = jnp.where(jnp.isfinite(m_loc),
+                      jnp.exp(m_loc - m_star_safe), 0.0)
+        o = jax.lax.psum(w[..., None] * o_loc, axis)
+        l = jax.lax.psum(w * l_loc, axis)
+        l_safe = jnp.where(l > 0, l, 1.0)
+        out = (o / l_safe[..., None]).reshape(Bl, H, dh).astype(q.dtype)
+
+        p_norm = (p * w[..., None]) / l_safe[..., None]    # (B,Hkv,rep,S)
+        n_live = jax.lax.psum(jnp.sum(live, axis=-1), axis)
+        mass = (jnp.mean(p_norm, axis=(1, 2))
+                * n_live[:, None].astype(jnp.float32))
+        return out, mass, kc, vc
+
+    kv_spec = P(dp, None, axis, None)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp), kv_spec, kv_spec, P(dp), P(dp), P(dp)),
+        out_specs=(P(dp), P(dp, axis), kv_spec, kv_spec),
+        check_vma=False,
+    )(q, k_cache, v_cache, k_new, v_new, kv_lens)
+
+
+def make_gather_based_decode_attn(mesh: Mesh, *, axis: str = "model",
+                                  dp=None):
+    """The L-PIM / request-level baseline (paper §3.3.1 C1): all-gather the
+    KV shards to every device, then attend locally. Same numerics, O(S)
+    collective bytes — kept as the ablation/benchmark counterpart."""
+
+    def local_fn(q, k, v, kv_lens):
+        k_full = jax.lax.all_gather(k, axis, axis=2, tiled=True)
+        v_full = jax.lax.all_gather(v, axis, axis=2, tiled=True)
+        from repro.models.attention import dense_decode_attn
+        return dense_decode_attn(q, k_full, v_full, kv_lens)
+
+    return jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dp), P(dp, None, axis, None), P(dp, None, axis, None),
+                  P(dp)),
+        out_specs=(P(dp), P(dp, None)),
+        check_vma=False,
+    )

@@ -1,0 +1,226 @@
+"""Sharding rules: ModelConfig + mesh -> PartitionSpecs for params, batch,
+optimizer state, and decode caches.
+
+Scheme (Megatron-style TP over the ``model`` axis + PAM sequence sharding):
+  column-parallel (last dim on "model"):  wq wk wv gate up in_proj w_uk w_uv
+                                          w_kr shared_gate shared_up frontend
+  row-parallel (2nd-to-last on "model"):  wo down out_proj shared_down w_dkv
+                                          lm_head
+  expert-parallel (E dim on "model"):     moe w_gate / w_up / w_down
+  replicated:                             norms, router, dt_bias, a_log, ...
+  embed:                                  d on "model" (vocab sizes are not
+                                          always divisible — e.g. minicpm)
+  KV caches (serve):                      sequence dim on "model" — the
+                                          distributed PAMattention layout;
+                                          batch on (pod, data) when divisible
+  optimizer moments:                      param spec + first free axis on
+                                          "data" (ZeRO-1 style)
+
+Every rule degrades to replication when the dim is not divisible by the
+mesh axis — correctness never depends on divisibility.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+Pytree = Any
+
+_COLUMN = ("wq", "wk", "wv", "gate", "up", "in_proj", "w_uk", "w_uv",
+           "w_kr", "shared_gate", "shared_up", "frontend")
+_ROW = ("wo", "down", "out_proj", "shared_down", "w_dkv")
+_EXPERT = ("w_gate", "w_up", "w_down")
+_MODEL_VEC = ("out_norm",)       # 1D activations sharded on model (d_inner)
+
+
+def _divides(dim: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.shape and dim % mesh.shape[axis] == 0 and dim > 0
+
+
+def _leaf_spec(name: str, parent: str, shape: tuple[int, ...],
+               mesh: Mesh) -> P:
+    nd = len(shape)
+    none = [None] * nd
+
+    def with_axis(pos: int) -> P:
+        if 0 <= pos < nd and _divides(shape[pos], mesh, "model"):
+            s = list(none)
+            s[pos] = "model"
+            return P(*s)
+        return P(*none)
+
+    if name == "embed":
+        # vocab-shard when divisible (Megatron vocab-parallel head: logits
+        # stay vocab-sharded through the loss — the big-vocab memory fix);
+        # fall back to d-sharding (e.g. minicpm's 122753 vocab).
+        if _divides(shape[nd - 2], mesh, "model"):
+            return with_axis(nd - 2)
+        return with_axis(nd - 1)
+    if name == "lm_head":
+        if _divides(shape[nd - 1], mesh, "model"):
+            return with_axis(nd - 1)       # column (vocab) parallel
+        return with_axis(nd - 2)           # row parallel fallback
+    if parent == "moe" and name in _EXPERT:
+        # 2D expert-parallel sharding: experts over "data" (EP — tokens
+        # all-to-all across the DP axis) AND the ffn dim over "model" (TP).
+        # Needed so 235B-scale MoE weights fit per-device HBM.
+        s = list(none)
+        if _divides(shape[nd - 3], mesh, "data"):
+            s[nd - 3] = "data"
+        ffn_axis = nd - 1 if name in ("w_gate", "w_up") else nd - 2
+        if _divides(shape[ffn_axis], mesh, "model"):
+            s[ffn_axis] = "model"
+        return P(*s)
+    if name in _COLUMN:
+        return with_axis(nd - 1)
+    if name in _ROW:
+        return with_axis(nd - 2)
+    if name == "conv_w" or name == "conv_b":
+        return with_axis(nd - 1)              # conv_dim (model-sharded)
+    if name in _MODEL_VEC:
+        return with_axis(nd - 1)
+    return P(*none)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = False
+                ) -> Pytree:
+    """PartitionSpec pytree matching ``init_params(cfg, key)``.
+
+    ``fsdp``: additionally shard each >=2D weight over "data" on its first
+    free axis (ZeRO-3 style) — required for the biggest dense archs to fit
+    per-device HBM in training; XLA all-gathers weights per layer."""
+    shapes = jax.eval_shape(
+        lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = []
+    for path, leaf in flat:
+        keys = [k.key for k in path if hasattr(k, "key")]
+        name = keys[-1] if keys else ""
+        parent = keys[-2] if len(keys) > 1 else ""
+        spec = _leaf_spec(name, parent, leaf.shape, mesh)
+        if fsdp and len(leaf.shape) >= 2:
+            spec = _zero1_spec(spec, leaf.shape, mesh)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = False
+                    ) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, mesh, fsdp=fsdp), is_leaf=lambda x:
+                        isinstance(x, P))
+
+
+def _zero1_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Add 'data' on the first axis the param spec leaves free (ZeRO-1).
+    Skipped when the param spec already consumes 'data' (2D-sharded MoE)."""
+    s = list(spec) + [None] * (len(shape) - len(spec))
+    if "data" in s:
+        return P(*s)
+    for i, (dim, cur) in enumerate(zip(shape, s)):
+        if cur is None and _divides(dim, mesh, "data"):
+            s[i] = "data"
+            break
+    return P(*s)
+
+
+def opt_state_specs(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = False
+                    ) -> Pytree:
+    """Specs for AdamW (mu, nu) — param spec + ZeRO-1 data sharding."""
+    pspecs = param_specs(cfg, mesh, fsdp=fsdp)
+    shapes = jax.eval_shape(
+        lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+    return jax.tree.map(
+        lambda sp, sh: _zero1_spec(sp, sh.shape, mesh), pspecs, shapes,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_dp_spec(global_batch: int, mesh: Mesh) -> tuple:
+    """Leading batch axis over (pod, data) when divisible, else fewer
+    axes, else replicated (long_500k has batch 1)."""
+    axes = dp_axes(mesh)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if global_batch % size == 0:
+        return axes
+    if "data" in axes and global_batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return None
+
+
+def batch_specs(cfg: ModelConfig, global_batch: int, mesh: Mesh) -> dict:
+    dp = batch_dp_spec(global_batch, mesh)
+    specs = {}
+    if cfg.family == "audio":
+        specs["frames"] = P(dp, None, None)
+        specs["labels"] = P(dp, None)
+    else:
+        specs["tokens"] = P(dp, None)
+        specs["labels"] = P(dp, None)
+        if cfg.family == "vlm":
+            specs["patches"] = P(dp, None, None)
+    return specs
+
+
+def decode_cache_specs(cfg: ModelConfig, global_batch: int, mesh: Mesh
+                       ) -> tf.DecodeCache:
+    """Serve-phase cache sharding: batch over DP axes, KV sequence over
+    "model" (the PAMattention distributed layout: each model-axis device
+    is one PIM site holding a KV shard), SSM heads over "model"."""
+    dp = batch_dp_spec(global_batch, mesh)
+
+    def seq_kv(ndim, seq_axis):
+        s = [None] * ndim
+        s[1] = dp
+        s[seq_axis] = "model"
+        return P(*s)
+
+    def ssm_spec(ndim, h_axis, h_dim):
+        s = [None] * ndim
+        s[1] = dp
+        if _divides(h_dim, mesh, "model"):
+            s[h_axis] = "model"
+        return P(*s)
+
+    zero = P()
+    k = v = ckv = krope = conv = state = zero
+    if cfg.family in ("dense", "vlm") or (cfg.family == "moe"
+                                          and cfg.mla is None):
+        k = v = seq_kv(5, 3)                  # (L, B, Hkv, S, dh)
+    elif cfg.family == "moe":
+        ckv = seq_kv(4, 2)                    # (L, B, S, r)
+        krope = seq_kv(4, 2)
+    if cfg.family in ("ssm", "hybrid"):
+        di, H, conv_dim = (cfg.ssm.d_inner(cfg.d_model),
+                           cfg.ssm.n_heads(cfg.d_model),
+                           cfg.ssm.d_inner(cfg.d_model)
+                           + 2 * cfg.ssm.n_groups * cfg.ssm.d_state)
+        conv = P(None, dp, None, "model") if _divides(
+            conv_dim, mesh, "model") else P(None, dp, None, None)
+        state = ssm_spec(5, 2, H)             # (L, B, H, N, P)
+    if cfg.family == "hybrid":
+        k = v = seq_kv(5, 3)
+    return tf.DecodeCache(k=k, v=v, ckv=ckv, krope=krope, conv=conv,
+                          state=state, lengths=P(dp))
+
+
+def make_sharded_zeros(spec_tree: Pytree, shape_tree: Pytree,
+                       mesh: Mesh) -> Pytree:
+    """Materialize zero arrays with the given specs (used by launchers)."""
+    def one(spec, sds):
+        sh = NamedSharding(mesh, spec)
+        return jax.make_array_from_callback(
+            sds.shape, sh, lambda idx: jnp.zeros(
+                [s.stop - s.start if s.start is not None else d
+                 for s, d in zip(idx, sds.shape)], sds.dtype))
+    return jax.tree.map(one, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,127 @@
+"""Split-KV decode attention kernel — PAMattention's Local_Attention stage
+(paper Alg. 1 lines 9-13) as a TPU Pallas kernel.
+
+One decode step: each grid cell owns one KV *split* (the paper's bank group)
+for one (batch, kv-head) pair and emits the partial triple
+``(O, m, l)`` for the ``rep`` grouped query heads that share the kv head.
+The intra-device reduction (the paper's per-bank-group RU chain) happens in
+``merge_decode_partials`` (see ops.py), which is also what the inter-tier /
+inter-device reduction reuses — same algebra, different scope.
+
+A per-token boolean ``mask`` carries PAM's tier/sparsity participation:
+tokens outside the current tier or unselected by retrieval sparsity simply
+contribute exact-zero weight, so one kernel serves dense decode, tiered
+PAMattention, and sparse attention.
+
+Layout: KV is (B, H_kv, S, d) — sequence-major within a head so a split is
+a contiguous VMEM block (the bank-aligned mapping of §6.1).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(-1e30)
+DEFAULT_BLOCK_S = 512
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, *,
+                   scale: float, block_s: int, kv_len: int):
+    isplit = pl.program_id(2)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (rep, d)
+    k = k_ref[0, 0].astype(jnp.float32)            # (block_s, d)
+    v = v_ref[0, 0].astype(jnp.float32)            # (block_s, d)
+    msk = mask_ref[0]                              # (block_s,) bool/int8
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = isplit * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    live = (pos < kv_len) & (msk[None, :] != 0)
+    s = jnp.where(live, s, NEG_INF)
+
+    m = jnp.max(s, axis=-1)                        # (rep,)
+    p = jnp.exp(s - m[:, None])
+    p = jnp.where(live, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # Dead split (all masked): emit the merge identity (m=NEG_INF, l=o=0).
+    o_ref[0, 0, :, 0, :] = o
+    m_ref[0, 0, :, 0] = m
+    l_ref[0, 0, :, 0] = l
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 mask: jax.Array | None = None, *,
+                 kv_len: int | None = None,
+                 scale: float | None = None,
+                 block_s: int = DEFAULT_BLOCK_S,
+                 interpret: bool = False
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """PAMattention local stage. Returns stacked partials over splits.
+
+    q: (B, H, d); k, v: (B, H_kv, S, d); mask: (B, S) participation.
+    Returns (o, m, l): o (B, H, nsplit, d) fp32 unnormalized, m/l
+    (B, H, nsplit) fp32. Merge with ``repro.kernels.ops.merge_decode``.
+    """
+    B, H, d = q.shape
+    _, H_kv, S, _ = k.shape
+    rep = H // H_kv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    if kv_len is None:
+        kv_len = S
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.int8)
+    else:
+        mask = mask.astype(jnp.int8)
+
+    block_s = min(block_s, max(S, 8))
+    pad = (block_s - S % block_s) % block_s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    S_p = S + pad
+    nsplit = S_p // block_s
+
+    qg = q.reshape(B, H_kv, rep, d)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_s=block_s,
+                               kv_len=kv_len)
+
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, H_kv, nsplit),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, d), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, d), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, block_s, d), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, block_s), lambda b, h, s: (b, s)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, rep, 1, d), lambda b, h, s: (b, h, 0, s, 0)),
+            pl.BlockSpec((1, 1, rep, 1), lambda b, h, s: (b, h, 0, s)),
+            pl.BlockSpec((1, 1, rep, 1), lambda b, h, s: (b, h, 0, s)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H_kv, rep, nsplit, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, H_kv, rep, nsplit), jnp.float32),
+            jax.ShapeDtypeStruct((B, H_kv, rep, nsplit), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(qg, k, v, mask)
+
+    return (o.reshape(B, H, nsplit, d), m.reshape(B, H, nsplit),
+            l.reshape(B, H, nsplit))

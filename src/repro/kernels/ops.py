@@ -1,0 +1,110 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``pam_decode_attention`` is the full Alg. 1 pipeline: per-tier local stage
+(flash_decode kernel over that tier's pool) followed by the hierarchical
+reduction — intra-device merge over splits, inter-tier merge over tiers.
+Wrappers fall back to interpret mode automatically off-TPU so the same call
+sites run in tests, examples, and on hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import online_softmax as osm
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q",
+                                             "block_k", "interpret"))
+def fused_attention(q, k, v, *, causal=True, scale=None, block_q=128,
+                    block_k=128, interpret=None):
+    """Prefill/train attention. q:(B,H,S,d), k/v:(B,H_kv,S,d) -> (B,H,S,d)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _flash_attention(q, k, v, causal=causal, scale=scale,
+                            block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+
+
+def merge_decode(o: jax.Array, m: jax.Array, l: jax.Array,
+                 out_dtype=None) -> jax.Array:
+    """Reduction stage (Alg. 1 ``Reduction``): merge split partials.
+
+    o: (B, H, nsplit, d); m/l: (B, H, nsplit). Returns (B, H, d).
+    """
+    part = osm.AttnPartial(o=jnp.moveaxis(o, 2, 0), m=jnp.moveaxis(m, 2, 0),
+                           l=jnp.moveaxis(l, 2, 0))
+    merged = osm.merge_many(part)
+    return osm.finalize(merged, out_dtype=out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("kv_len", "scale", "block_s",
+                                             "interpret"))
+def decode_attention(q, k, v, mask=None, *, kv_len=None, scale=None,
+                     block_s=512, interpret=None):
+    """Single-pool decode attention (local stage + intra-device reduction).
+
+    q: (B, H, d); k/v: (B, H_kv, S, d); mask: (B, S). Returns (B, H, d).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    o, m, l = _flash_decode(q, k, v, mask, kv_len=kv_len, scale=scale,
+                            block_s=block_s, interpret=interpret)
+    return merge_decode(o, m, l, out_dtype=q.dtype)
+
+
+def decode_attention_partial(q, k, v, mask=None, *, kv_len=None, scale=None,
+                             block_s=512, interpret=None) -> osm.AttnPartial:
+    """Local stage only — returns the merged per-pool partial (for the
+    inter-tier / inter-device reduction). Shapes as ``decode_attention``;
+    partial fields are (B, H, d) / (B, H)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    o, m, l = _flash_decode(q, k, v, mask, kv_len=kv_len, scale=scale,
+                            block_s=block_s, interpret=interpret)
+    part = osm.AttnPartial(o=jnp.moveaxis(o, 2, 0), m=jnp.moveaxis(m, 2, 0),
+                           l=jnp.moveaxis(l, 2, 0))
+    return osm.merge_many(part)
+
+
+def pam_decode_attention(q: jax.Array,
+                         tier_kv: Sequence[tuple[jax.Array, jax.Array]],
+                         tier_masks: Sequence[jax.Array | None], *,
+                         scale=None, block_s=512,
+                         interpret=None) -> jax.Array:
+    """Full PAMattention decode over heterogeneous tier pools (Alg. 1).
+
+    tier_kv: [(k_t, v_t)] per tier, each (B, H_kv, S_t, d) — S_t may differ
+    per tier (HBM hot pool small & dense, SSD pool large). tier_masks:
+    per-tier participation (B, S_t) or None. Exact merge across tiers.
+    """
+    parts = [
+        decode_attention_partial(q, k_t, v_t, msk, scale=scale,
+                                 block_s=min(block_s, k_t.shape[2]),
+                                 interpret=interpret)
+        for (k_t, v_t), msk in zip(tier_kv, tier_masks)
+    ]
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = osm.merge_partials(acc, p)           # inter-tier reduction
+    return osm.finalize(acc, out_dtype=q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, a, b, c, d_skip, *, chunk=128, interpret=None):
+    """Mamba-2 SSD chunked scan. See ``ssd_scan`` for shapes."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _ssd_scan(x, dt, a, b, c, d_skip, chunk=chunk,
+                     interpret=interpret)

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each function is the mathematically-direct implementation the kernels are
+``assert_allclose``'d against across shape/dtype sweeps (interpret=True on
+CPU, compiled on TPU).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        scale: float | None = None) -> jax.Array:
+    """q: (B, H, S, d); k/v: (B, H_kv, S, d). Monolithic softmax attention."""
+    B, H, Sq, d = q.shape
+    H_kv, Sk = k.shape[1], k.shape[2]
+    rep = H // H_kv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    kh = jnp.repeat(k, rep, axis=1).astype(jnp.float32)
+    vh = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kh) * scale
+    if causal:
+        qpos = jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Sk)[None, :]
+        s = jnp.where(kpos <= qpos, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vh)
+    return out.astype(q.dtype)
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     mask: jax.Array | None = None, *,
+                     kv_len: int | None = None,
+                     scale: float | None = None) -> jax.Array:
+    """q: (B, H, d); k/v: (B, H_kv, S, d); mask: (B, S). One decode step."""
+    B, H, d = q.shape
+    H_kv, S = k.shape[1], k.shape[2]
+    rep = H // H_kv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    live = jnp.ones((B, S), bool) if mask is None else mask.astype(bool)
+    if kv_len is not None:
+        live = live & (jnp.arange(S)[None, :] < kv_len)
+    kh = jnp.repeat(k, rep, axis=1).astype(jnp.float32)
+    vh = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), kh) * scale
+    s = jnp.where(live[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # all-masked rows
+    out = jnp.einsum("bhs,bhsd->bhd", p, vh)
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                 c: jax.Array, d_skip: jax.Array) -> jax.Array:
+    """Sequential (scan) oracle of the SSD recurrence.
+
+    x: (B, L, H, P); dt: (B, L, H); a: (H,); b/c: (B, L, G, N); d_skip: (H,).
+    """
+    B, L, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    bh = jnp.repeat(b, rep, axis=2).astype(jnp.float32)   # (B, L, H, N)
+    ch = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    def step(h_state, inp):
+        xt, dtt, bt, ct = inp           # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dtt * af)[..., None, None]       # (B,H,1,1)
+        upd = dtt[..., None, None] * bt[..., :, None] * xt[..., None, :]
+        h_state = decay * h_state + upd                   # (B,H,N,P)
+        yt = jnp.einsum("bhn,bhnp->bhp", ct, h_state)
+        return h_state, yt
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bh, 1, 0), jnp.moveaxis(ch, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + d_skip[None, None, :, None] * xf
+    return y.astype(x.dtype)

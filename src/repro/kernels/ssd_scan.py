@@ -1,0 +1,144 @@
+"""Mamba-2 SSD (state-space duality) chunked scan kernel (TPU Pallas).
+
+Needed by the assigned ``mamba2-780m`` / ``zamba2-7b`` architectures: the
+selective-state recurrence
+
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * outer(B_t, x_t)     [N, P]
+    y_t = C_t @ h_t + D_h * x_t                                  [P]
+
+is computed chunk-parallel (SSD form): within a chunk of Q tokens the
+contribution is an attention-like masked matmul (MXU-friendly), and a
+single (N, P) state carries across chunks through the sequential grid axis
+— the TPU-native replacement for a length-L serial scan.
+
+Layouts are head-major inside the kernel ((B, H, L, P) etc.) so every
+BlockSpec tiles its trailing (sequence, feature) dims in (8k, 128k)-aligned
+VMEM tiles; the public API keeps the conventional (B, L, H, P).
+
+Grid: (B, H, n_chunks) with chunks sequential; VMEM scratch carries the
+running state. All accumulation fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, dskip_ref, y_ref,
+                state_scr, *, chunk: int, seq_len: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)             # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)        # (Q,)
+    a = a_ref[0].astype(jnp.float32)                # scalar A_h (negative)
+    bmat = b_ref[0, 0].astype(jnp.float32)          # (Q, N)
+    cmat = c_ref[0, 0].astype(jnp.float32)          # (Q, N)
+    dskip = dskip_ref[0].astype(jnp.float32)        # scalar D_h
+
+    pos = ic * chunk + jax.lax.iota(jnp.int32, chunk)
+    live = pos < seq_len
+    dt = jnp.where(live, dt, 0.0)                   # dead tokens: identity
+
+    logdecay = dt * a                                # (Q,) = log a_t
+    seg = jnp.cumsum(logdecay)                       # s_t = sum_{u<=t} log a_u
+
+    # --- inter-chunk: y_t += exp(s_t) * C_t @ h_in --------------------------
+    h_in = state_scr[...]                            # (N, P)
+    y_inter = jnp.exp(seg)[:, None] * jax.lax.dot_general(
+        cmat, h_in, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (Q, P)
+
+    # --- intra-chunk: masked attention-like form ---------------------------
+    # M[t, u] = exp(s_t - s_u) * dt_u  for u <= t else 0
+    gap = seg[:, None] - seg[None, :]                # (Q, Q)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    # mask before exp: upper-triangle gaps are positive and would overflow
+    decay = jnp.exp(jnp.where(tri, gap, -1e30)) * dt[None, :]
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y_intra = jax.lax.dot_general(scores * decay, x,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    y = y_inter + y_intra + dskip * x
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # --- state update: h_out = exp(s_Q) h_in + sum_u exp(s_Q - s_u) dt_u B_u x_u^T
+    tail = jnp.exp(seg[-1] - seg) * dt               # (Q,)
+    dstate = jax.lax.dot_general(bmat * tail[:, None], x,
+                                 (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (N, P)
+    state_scr[...] = jnp.exp(seg[-1]) * h_in + dstate
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, d_skip: jax.Array, *,
+             chunk: int = DEFAULT_CHUNK,
+             interpret: bool = False) -> jax.Array:
+    """Chunked SSD scan.
+
+    x: (B, L, H, P) inputs; dt: (B, L, H) post-softplus step sizes;
+    a: (H,) negative decay rates; b, c: (B, L, G, N) input/output
+    projections (G groups, H % G == 0); d_skip: (H,) skip gains.
+    Returns y: (B, L, H, P) in x.dtype.
+    """
+    B, L, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+
+    chunk = min(chunk, max(L, 8))
+    pad = (chunk - L % chunk) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    L_p = L + pad
+    nchunk = L_p // chunk
+
+    # head-major kernel layouts
+    xk = jnp.transpose(x, (0, 2, 1, 3))              # (B, H, L, P)
+    dtk = jnp.transpose(dt, (0, 2, 1))[:, :, None, :]  # (B, H, 1, L)
+    bk = jnp.transpose(b, (0, 2, 1, 3))              # (B, G, L, N)
+    ck = jnp.transpose(c, (0, 2, 1, 3))
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, seq_len=L)
+
+    y = pl.pallas_call(
+        kernel,
+        grid=(B, H, nchunk),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda bi, h, icc: (bi, h, icc, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda bi, h, icc: (bi, h, 0, icc)),
+            pl.BlockSpec((1,), lambda bi, h, icc: (h,)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda bi, h, icc: (bi, h // rep, icc, 0)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda bi, h, icc: (bi, h // rep, icc, 0)),
+            pl.BlockSpec((1,), lambda bi, h, icc: (h,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P),
+                               lambda bi, h, icc: (bi, h, icc, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, L_p, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(xk, dtk, a, bk, ck, d_skip)
+
+    y = jnp.transpose(y, (0, 2, 1, 3))               # back to (B, L, H, P)
+    if pad:
+        y = y[:, :L]
+    return y

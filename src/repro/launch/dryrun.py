@@ -1,0 +1,491 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes, and extract the roofline inputs.
+
+MUST be run as its own process (the XLA flag above must precede any jax
+init — which is why those are the first two lines of this file). The
+``--all`` driver therefore spawns one subprocess per cell and aggregates
+the per-cell JSONs under ``experiments/dryrun/``.
+
+Per cell we record:
+  - compile success (the deliverable gate), compile seconds
+  - cost_analysis: per-device HLO FLOPs + bytes accessed
+  - memory_analysis: argument/output/temp bytes per device (proves fit)
+  - per-collective byte counts parsed from the compiled SPMD module
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute) — cost_analysis does not expose these
+  - MODEL_FLOPS = 6·N·D (train) / 2·N_active·D (serve) for the
+    useful-compute ratio
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k \
+      --mesh single --out experiments/dryrun        # one cell
+  python -m repro.launch.dryrun --all [--mesh both] # driver (subprocesses)
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+ARCHS = ["qwen3-14b", "deepseek-67b", "qwen3-0.6b", "minicpm-2b",
+         "internvl2-1b", "deepseek-v2-lite-16b", "qwen3-moe-235b-a22b",
+         "zamba2-7b", "hubert-xlarge", "mamba2-780m"]
+
+# HLO result-shape parser: "bf16[16,128]{1,0}" etc.
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def skip_reason(cfg, shape_name: str) -> str | None:
+    info = SHAPES[shape_name]
+    if info["kind"] == "decode" and not cfg.has_decode:
+        return "encoder-only arch: no autoregressive decode step"
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full-attention arch: 512k dense-KV decode is "
+                "quadratic-history; run only for SSM/hybrid "
+                "(DESIGN.md §Arch-applicability)")
+    return None
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-op-kind {count, bytes} from the compiled SPMD module.
+
+    Bytes = result-shape bytes of each collective instruction (per-device
+    traffic proxy; all-reduce counted 2x for the ring reduce+broadcast).
+    ``-start`` variants counted, ``-done`` skipped (same transfer).
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "-done" in ls.split("=")[0]:
+            continue
+        for kind in _COLLECTIVES:
+            # match "= TYPE[dims]... kind(" or " kind-start("
+            m = re.search(rf"=\s+(.+?)\s+{kind}(?:-start)?\(", ls)
+            if m:
+                shapes = _SHAPE_RE.findall(m.group(1))
+                nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+                mult = 2 if kind == "all-reduce" else 1
+                out[kind]["count"] += 1
+                out[kind]["bytes"] += nbytes * mult
+                break
+    return out
+
+
+class _UnrolledLoops:
+    """Context manager: force every lax.scan/lax.map in the model to unroll
+    during lowering. XLA-CPU's cost_analysis counts while-loop bodies ONCE
+    (verified: flops identical for n_layers=7/14/28), so the calibration
+    pass lowers small-layer-count UNROLLED variants to extract exact
+    per-layer (body) and fixed (outside) costs."""
+
+    def __enter__(self):
+        import jax
+        import jax.numpy as jnp
+        self._scan = jax.lax.scan
+        self._map = jax.lax.map
+        orig_scan = self._scan
+
+        def scan_unrolled(f, init=None, xs=None, length=None, reverse=False,
+                          unroll=1, **kw):
+            return orig_scan(f, init, xs, length=length, reverse=reverse,
+                             unroll=True, **kw)
+
+        def map_unrolled(f, xs, *, batch_size=None):
+            import jax as _jax
+            n = _jax.tree.leaves(xs)[0].shape[0]
+            ys = [f(_jax.tree.map(lambda a: a[i], xs)) for i in range(n)]
+            return _jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+
+        jax.lax.scan = scan_unrolled
+        jax.lax.map = map_unrolled
+        return self
+
+    def __exit__(self, *exc):
+        import jax
+        jax.lax.scan = self._scan
+        jax.lax.map = self._map
+        return False
+
+
+def _reduced_layers(cfg, k: int):
+    import dataclasses
+    from repro.models.config import HybridConfig
+    if cfg.family == "hybrid":
+        hb = cfg.hybrid
+        return dataclasses.replace(
+            cfg, hybrid=HybridConfig(n_groups=k,
+                                     mamba_per_group=hb.mamba_per_group,
+                                     tail_mamba=1))
+    return dataclasses.replace(cfg, n_layers=k)
+
+
+def layer_trips(cfg) -> int:
+    """Loop trip count the calibration body corresponds to."""
+    return cfg.hybrid.n_groups if cfg.family == "hybrid" else cfg.n_layers
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """6·N·D for train, 2·N_active·D for serve-step (decode: D = batch
+    tokens; prefill: D = batch x seq)."""
+    info = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if info["kind"] == "train":
+        return 6.0 * n * info["batch"] * info["seq"]
+    if info["kind"] == "prefill":
+        return 2.0 * n * info["batch"] * info["seq"]
+    return 2.0 * n * info["batch"]          # decode: one token per seq
+
+
+def _lower_cell(cfg, info, mesh, fsdp: bool):
+    """Build + lower the cell's jitted step. Returns the Lowered object.
+    Must run inside ``jax.set_mesh(mesh)``."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.data.pipeline import make_batch_specs
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import dp_axes
+    from repro.models import transformer as tf
+    from repro.training import optim
+    from repro.training.optim import AdamWState
+    from repro.training.train_step import (TrainConfig, TrainState,
+                                           build_train_step)
+
+    dp = dp_axes(mesh)
+    if True:
+        if info["kind"] == "train":
+            tcfg = TrainConfig(adamw=optim.AdamWConfig(), remat=True,
+                               activation_spec=P(dp, "model", None))
+            pspecs = shd.param_specs(cfg, mesh, fsdp=fsdp)
+            ospecs = shd.opt_state_specs(cfg, mesh, fsdp=fsdp)
+            bspecs = shd.batch_specs(cfg, info["batch"], mesh)
+            pshapes = jax.eval_shape(
+                lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+            mu = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32),
+                pshapes)
+            state = TrainState(
+                params=pshapes,
+                opt=AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                               mu=mu, nu=mu),
+                error_feedback=None)
+            state_sh = TrainState(
+                params=jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                    pspecs,
+                                    is_leaf=lambda x: isinstance(x, P)),
+                opt=AdamWState(
+                    step=NamedSharding(mesh, P()),
+                    mu=jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                    ospecs,
+                                    is_leaf=lambda x: isinstance(x, P)),
+                    nu=jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                    ospecs,
+                                    is_leaf=lambda x: isinstance(x, P))),
+                error_feedback=None)
+            batch = make_batch_specs(cfg, info["batch"], info["seq"])
+            batch_sh = {k: NamedSharding(mesh, bspecs[k]) for k in batch}
+            step = build_train_step(cfg, tcfg)
+            lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                              donate_argnums=(0,)).lower(state, batch)
+
+        elif info["kind"] == "prefill":
+            pspecs = shd.param_specs(cfg, mesh)
+            pshapes = jax.eval_shape(
+                lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+            psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                               is_leaf=lambda x: isinstance(x, P))
+            bspec = shd.batch_dp_spec(info["batch"], mesh)
+            B, S = info["batch"], info["seq"]
+            if cfg.family == "audio":
+                frames = jax.ShapeDtypeStruct((B, S, cfg.frontend_dim),
+                                              jnp.bfloat16)
+
+                def fn(params, frames):
+                    logits, _ = tf.forward(cfg, params, {"frames": frames})
+                    return logits
+
+                lowered = jax.jit(fn, in_shardings=(
+                    psh, NamedSharding(mesh, P(bspec, None, None)))
+                ).lower(pshapes, frames)
+            else:
+                n_text = S - (cfg.num_patches if cfg.family == "vlm" else 0)
+                toks = jax.ShapeDtypeStruct((B, n_text), jnp.int32)
+                args = [toks]
+                in_sh = [NamedSharding(mesh, P(bspec, None))]
+                if cfg.family == "vlm":
+                    args.append(jax.ShapeDtypeStruct(
+                        (B, cfg.num_patches, cfg.frontend_dim),
+                        jnp.bfloat16))
+                    in_sh.append(NamedSharding(mesh, P(bspec, None, None)))
+
+                    def fn(params, tokens, patches):
+                        return tf.prefill(cfg, params, tokens, S,
+                                          patches=patches)
+                else:
+                    def fn(params, tokens):
+                        return tf.prefill(cfg, params, tokens, S)
+
+                cspecs = shd.decode_cache_specs(cfg, B, mesh)
+                csh = jax.tree.map(
+                    lambda s: NamedSharding(mesh, s), cspecs,
+                    is_leaf=lambda x: isinstance(x, P))
+                lowered = jax.jit(
+                    fn, in_shardings=(psh, *in_sh),
+                    out_shardings=(NamedSharding(mesh, P(bspec, None)),
+                                   csh)).lower(pshapes, *args)
+
+        else:  # decode
+            pspecs = shd.param_specs(cfg, mesh)
+            pshapes = jax.eval_shape(
+                lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+            psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                               is_leaf=lambda x: isinstance(x, P))
+            B, S = info["batch"], info["seq"]
+            cache = jax.eval_shape(
+                lambda: tf.init_decode_cache(cfg, B, S))
+            cspecs = shd.decode_cache_specs(cfg, B, mesh)
+            csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                               is_leaf=lambda x: isinstance(x, P))
+            bspec = shd.batch_dp_spec(B, mesh)
+            toks = jax.ShapeDtypeStruct((B,), jnp.int32)
+
+            def fn(params, tokens, cache):
+                logits, cache, _ = tf.decode_step(cfg, params, tokens,
+                                                  cache)
+                return logits, cache
+
+            lowered = jax.jit(
+                fn,
+                in_shardings=(psh, NamedSharding(mesh, P(bspec)), csh),
+                out_shardings=(NamedSharding(mesh, P(bspec, None)), csh),
+                donate_argnums=(2,)).lower(pshapes, toks, cache)
+
+    return lowered
+
+
+def _measure(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    return {
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        },
+        "cost": {"flops": float(ca.get("flops", 0.0)),
+                 "bytes_accessed": float(ca.get("bytes accessed", 0.0))},
+        "collectives": collective_bytes(txt),
+        "hlo_chars": len(txt),
+    }
+
+
+# §Perf variants: dry-run variant name -> trace-time perf flags
+VARIANT_FLAGS = {
+    "baseline": (),
+    "sp-pin": ("sp_pin",),
+    "sp-attn": ("sp_attn",),
+    "sp-attn-bf16": ("sp_attn", "bf16_probs"),
+    "sp-bf16": ("sp_pin", "bf16_probs"),
+    "bf16-probs": ("bf16_probs",),
+    "remat-dots": ("remat_dots",),
+    "train-opt": ("sp_attn", "bf16_probs", "remat_dots"),
+    "moe-opt": ("sp_attn", "bf16_probs", "remat_dots", "moe_pin"),
+    "moe-pin": ("moe_pin",),
+    "pam-shard": ("pam_shard_decode",),
+}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             variant: str = "baseline") -> dict:
+    import jax
+    jax.config.update("jax_platform_name", "cpu")
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import perf_flags
+    from repro.models.config import get_config
+
+    perf_flags.set_flags(*VARIANT_FLAGS.get(variant, ()))
+
+    cfg = get_config(arch)
+    info = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "variant": variant, "status": "unknown"}
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec["chips"] = mesh.size
+    # FSDP for training when TP-only params exceed ~4GB/device
+    fsdp = (2.0 * cfg.param_count() / mesh.shape["model"]) > 4e9
+    rec["fsdp"] = fsdp
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = _lower_cell(cfg, info, mesh, fsdp)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        rec.update(_measure(compiled))
+    rec["model_flops_global"] = model_flops(cfg, shape_name)
+    rec["status"] = "ok"
+    return rec
+
+
+def run_calibration(arch: str, shape_name: str, mesh_kind: str,
+                    variant: str = "baseline") -> dict:
+    """Extract exact per-layer (body) and fixed (outside) costs by lowering
+    UNROLLED variants at 2 and 4 layers:  body=(v4-v2)/2, outside=v2-2*body.
+    Corrected full-model cost = outside + n_layers * body (roofline.py)."""
+    import jax
+    jax.config.update("jax_platform_name", "cpu")
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import perf_flags
+    from repro.models.config import get_config
+
+    perf_flags.set_flags(*VARIANT_FLAGS.get(variant, ()))
+    cfg = get_config(arch)
+    info = SHAPES[shape_name]
+    tag = "calib" if variant == "baseline" else f"calib-{variant}"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "variant": tag, "status": "unknown"}
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    fsdp = (2.0 * cfg.param_count() / mesh.shape["model"]) > 4e9
+
+    vals = {}
+    t0 = time.time()
+    for k in (2, 4):
+        cfg_k = _reduced_layers(cfg, k)
+        with _UnrolledLoops(), jax.set_mesh(mesh):
+            compiled = _lower_cell(cfg_k, info, mesh, fsdp).compile()
+            m = _measure(compiled)
+        vals[k] = {
+            "flops": m["cost"]["flops"],
+            "bytes": m["cost"]["bytes_accessed"],
+            "coll": sum(v["bytes"] for v in m["collectives"].values()),
+        }
+
+    def split(key):
+        body = (vals[4][key] - vals[2][key]) / 2.0
+        outside = vals[2][key] - 2.0 * body
+        return {"body": body, "outside": max(outside, 0.0)}
+
+    rec.update(status="ok",
+               trips=layer_trips(cfg),
+               calib_s=round(time.time() - t0, 2),
+               flops=split("flops"), bytes=split("bytes"),
+               coll=split("coll"))
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--all", action="store_true",
+                    help="driver mode: all cells via subprocesses")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="per-layer cost calibration instead of full cell")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+    if args.calibrate:
+        args.variant = ("calib" if args.variant == "baseline"
+                        else f"calib-{args.variant}")
+
+    if args.all:
+        import subprocess
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        todo = [(a, s, m) for a in ARCHS for s in SHAPES for m in meshes]
+        for arch, shape, mesh_kind in todo:
+            tag = f"{arch}__{shape}__{mesh_kind}__{args.variant}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path) and not args.force:
+                print(f"[skip-done] {tag}", flush=True)
+                continue
+            print(f"[run] {tag}", flush=True)
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                   "--out", args.out, "--variant", args.variant] + \
+                (["--calibrate"] if args.calibrate else [])
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=3600)
+            if r.returncode != 0:
+                err = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                       "variant": args.variant, "status": "error",
+                       "error": (r.stderr or r.stdout)[-3000:]}
+                with open(path, "w") as f:
+                    json.dump(err, f, indent=1)
+                print(f"[FAIL] {tag}", flush=True)
+            else:
+                print(f"[ok] {tag}", flush=True)
+        return
+
+    assert args.arch and args.shape
+    tag = f"{args.arch}__{args.shape}__{args.mesh}__{args.variant}"
+    try:
+        if args.calibrate:
+            base_variant = (args.variant[len("calib-"):]
+                            if args.variant.startswith("calib-")
+                            else "baseline")
+            rec = run_calibration(args.arch, args.shape, args.mesh,
+                                  base_variant)
+        else:
+            rec = run_cell(args.arch, args.shape, args.mesh, args.out,
+                           args.variant)
+    except Exception:
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "variant": args.variant, "status": "error",
+               "error": traceback.format_exc()[-3000:]}
+    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("error",)}, indent=1))
+    if rec["status"] == "error":
+        print(rec.get("error", ""), file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end serving driver: the PAM engine under a synthetic request
+stream, with the paper's timing model attached.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+        --reduced --requests 16 --system pam
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.perfmodel import make_latency_model
+from repro.models import transformer as tfm
+from repro.models.config import get_config, reduced
+from repro.perfmodel.model import PAM_LLAMA_7B, SystemKind, make_system
+from repro.serving import (PAMManagerConfig, Request, ServingConfig,
+                           ServingEngine)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--system", default="pam",
+                    choices=[k.value for k in SystemKind] + ["wallclock"])
+    ap.add_argument("--no-sparsity", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+
+    pam_cfg = None
+    if cfg.has_decode:
+        pam_cfg = PAMManagerConfig(
+            max_tokens=args.max_len,
+            hot_capacity=max(args.max_len // 8, 8),
+            warm_capacity=max(args.max_len // 4, 16),
+            compression=4, recency_window=8, schedule_interval=2,
+            use_sparsity=not args.no_sparsity)
+
+    latency = None
+    if args.system != "wallclock":
+        latency = make_latency_model(make_system(args.system), PAM_LLAMA_7B)
+
+    eng = ServingEngine(
+        cfg, params,
+        ServingConfig(max_batch=args.max_batch, max_len=args.max_len,
+                      pam=pam_cfg),
+        latency_model=latency)
+
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        eng.submit(Request(
+            id=i, prompt=rng.integers(0, cfg.vocab, args.prompt_len),
+            max_new_tokens=args.gen_len))
+    summary = eng.run()
+    print(json.dumps(summary, indent=1))
+    for slo_ms in (100, 150, 200):
+        print(f"SLO {slo_ms}ms attainment: "
+              f"{eng.slo_attainment(slo_ms/1e3):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model substrate: the assigned architectures as pure-JAX functional models."""

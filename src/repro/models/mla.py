@@ -1,0 +1,151 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — train + absorbed decode.
+
+The KV cache stores only the rank-r latent ``c_kv`` (+ the shared RoPE key),
+so PAM's tiering/importance/scheduling operate on *latent* tokens — noted in
+DESIGN.md §Arch-applicability. Decode uses the absorbed form: W_uk is folded
+into the query and W_uv applied after attention, making the cached latent
+both K and V (MQA-like, d_k = r + rope_dim, d_v = r).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import chunked_attention
+from repro.models.config import MLAConfig
+from repro.models.layers import apply_rope, init_linear, rms_norm
+
+
+class MLAParams(NamedTuple):
+    wq: jax.Array       # (d, H*(nope+rope))
+    w_dkv: jax.Array    # (d, r)
+    kv_norm: jax.Array  # (r,)
+    w_kr: jax.Array     # (d, rope_dim)  shared per-token rope key
+    w_uk: jax.Array     # (r, H*nope)
+    w_uv: jax.Array     # (r, H*vd)
+    wo: jax.Array       # (H*vd, d)
+
+
+def init_mla(key, d: int, n_heads: int, cfg: MLAConfig, dtype) -> MLAParams:
+    ks = jax.random.split(key, 6)
+    H = n_heads
+    return MLAParams(
+        wq=init_linear(ks[0], d, H * (cfg.qk_nope_head_dim
+                                      + cfg.qk_rope_head_dim), dtype),
+        w_dkv=init_linear(ks[1], d, cfg.kv_lora_rank, dtype),
+        kv_norm=jnp.ones((cfg.kv_lora_rank,), dtype),
+        w_kr=init_linear(ks[2], d, cfg.qk_rope_head_dim, dtype),
+        w_uk=init_linear(ks[3], cfg.kv_lora_rank, H * cfg.qk_nope_head_dim,
+                         dtype),
+        w_uv=init_linear(ks[4], cfg.kv_lora_rank, H * cfg.v_head_dim, dtype),
+        wo=init_linear(ks[5], H * cfg.v_head_dim, d, dtype),
+    )
+
+
+def mla_train(p: MLAParams, x: jax.Array, cfg: MLAConfig, *, n_heads: int,
+              rope_theta: float, rms_eps: float, causal: bool = True,
+              q_chunk: int = 512) -> jax.Array:
+    B, S, d = x.shape
+    H = n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    q = jnp.einsum("bsd,de->bse", x, p.wq).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    c_kv = rms_norm(jnp.einsum("bsd,dr->bsr", x, p.w_dkv), p.kv_norm, rms_eps)
+    k_nope = jnp.einsum("bsr,re->bse", c_kv, p.w_uk).reshape(B, S, H, dn)
+    v = jnp.einsum("bsr,re->bse", c_kv, p.w_uv).reshape(B, S, H, dv)
+    k_rope = apply_rope(jnp.einsum("bsd,de->bse", x, p.w_kr)[:, :, None, :],
+                        positions, rope_theta)          # (B, S, 1, dr)
+    k_rope = jnp.broadcast_to(k_rope, (B, S, H, dr))
+
+    qh = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kh = jnp.concatenate([k_nope, k_rope], axis=-1)
+    scale = 1.0 / math.sqrt(dn + dr)
+    out = chunked_attention(qh, kh, v, causal=causal, chunk=q_chunk,
+                            scale=scale)                # (B, S, H, dv)
+    return jnp.einsum("bse,ed->bsd", out.reshape(B, S, H * dv), p.wo)
+
+
+def mla_prefill(p: MLAParams, x: jax.Array, cfg: MLAConfig, *, n_heads: int,
+                rope_theta: float, rms_eps: float, causal: bool = True,
+                q_chunk: int = 512):
+    """``mla_train`` + the latent cache (c_kv, k_rope) for decode."""
+    B, S, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    out = mla_train(p, x, cfg, n_heads=n_heads, rope_theta=rope_theta,
+                    rms_eps=rms_eps, causal=causal, q_chunk=q_chunk)
+    c_kv = rms_norm(jnp.einsum("bsd,dr->bsr", x, p.w_dkv), p.kv_norm, rms_eps)
+    k_rope = apply_rope(jnp.einsum("bsd,de->bse", x, p.w_kr)[:, :, None, :],
+                        positions, rope_theta)[:, :, 0]     # (B, S, dr)
+    return out, c_kv, k_rope
+
+
+def mla_latent_decode_attn(q_eff: jax.Array, kv_latent: jax.Array,
+                           k_rope: jax.Array, kv_lens: jax.Array, *,
+                           scale: float) -> tuple[jax.Array, jax.Array]:
+    """Absorbed-MLA decode attention over the latent cache.
+
+    q_eff: (B, H, r + dr); kv_latent: (B, Smax, r); k_rope: (B, Smax, dr);
+    returns (latent output (B, H, r), mass (B, Smax)). Injectable — the
+    distributed PAM form shard-maps this same function over sequence
+    shards. ``mass`` scores *latent* tokens (PAM tiering for MLA operates
+    in latent space, see DESIGN.md §Arch-applicability).
+    """
+    B, Smax = kv_latent.shape[0], kv_latent.shape[1]
+    k_eff = jnp.concatenate([kv_latent, k_rope], axis=-1)   # (B, S, r+dr)
+    live = jnp.arange(Smax)[None, :] < kv_lens[:, None]
+    s = jnp.einsum("bhd,bsd->bhs", q_eff.astype(jnp.float32),
+                   k_eff.astype(jnp.float32)) * scale
+    s = jnp.where(live[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bhs,bsr->bhr", p, kv_latent.astype(jnp.float32))
+    mass = jnp.mean(p, axis=1) * kv_lens[:, None].astype(jnp.float32)
+    return out.astype(q_eff.dtype), mass
+
+
+def mla_decode(p: MLAParams, x: jax.Array, ckv_cache: jax.Array,
+               krope_cache: jax.Array, kv_lens: jax.Array, cfg: MLAConfig, *,
+               n_heads: int, rope_theta: float, rms_eps: float,
+               latent_attn_fn: Callable = mla_latent_decode_attn):
+    """One decode step. x: (B, d). Caches: ckv (B, Smax, r),
+    krope (B, Smax, dr). Returns (out (B, d), mass (B, Smax), ckv_cache,
+    krope_cache)."""
+    B, d = x.shape
+    H = n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    r, dv = cfg.kv_lora_rank, cfg.v_head_dim
+    pos = kv_lens
+
+    q = jnp.einsum("bd,de->be", x, p.wq).reshape(B, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope.reshape(B, 1, H, dr), pos[:, None],
+                        rope_theta).reshape(B, H, dr)
+
+    c_kv = rms_norm(jnp.einsum("bd,dr->br", x, p.w_dkv), p.kv_norm, rms_eps)
+    k_rope = apply_rope(jnp.einsum("bd,de->be", x, p.w_kr)[:, None, :],
+                        pos[:, None], rope_theta)[:, 0]      # (B, dr)
+
+    bidx = jnp.arange(B)
+    ckv_cache = ckv_cache.at[bidx, pos].set(c_kv)
+    krope_cache = krope_cache.at[bidx, pos].set(k_rope)
+
+    # absorb W_uk into the query: q_lat[h] = q_nope[h] @ W_uk[:, h]^T
+    w_uk = p.w_uk.reshape(r, H, dn)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)
+    q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)        # (B, H, r+dr)
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    o_lat, mass = latent_attn_fn(q_eff, ckv_cache, krope_cache, kv_lens + 1,
+                                 scale=scale)                # (B, H, r)
+    w_uv = p.w_uv.reshape(r, H, dv)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv).reshape(B, H * dv)
+    return (jnp.einsum("be,ed->bd", o, p.wo), mass, ckv_cache,
+            krope_cache)

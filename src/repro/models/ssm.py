@@ -1,0 +1,238 @@
+"""Mamba-2 (SSD) block: fused projection, causal conv, selective scan.
+
+Train/prefill uses the chunked SSD form (``repro.kernels.ssd_scan`` on TPU,
+its jnp-equivalent math under jit elsewhere); decode keeps an O(1) recurrent
+state per layer — conv ring buffer + (H, N, P) SSM state — which is why the
+SSM/hybrid architectures are the ``long_500k``-eligible ones.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import SSMConfig
+from repro.models.layers import init_linear, rms_norm
+
+
+class SSMParams(NamedTuple):
+    in_proj: jax.Array      # (d, 2*di + 2*G*N + H)
+    conv_w: jax.Array       # (ck, conv_dim)   conv_dim = di + 2*G*N
+    conv_b: jax.Array       # (conv_dim,)
+    dt_bias: jax.Array      # (H,)
+    a_log: jax.Array        # (H,)  A = -exp(a_log)
+    d_skip: jax.Array       # (H,)
+    out_norm: jax.Array     # (di,)
+    out_proj: jax.Array     # (di, d)
+
+
+def _dims(d: int, cfg: SSMConfig):
+    di = cfg.d_inner(d)
+    H = cfg.n_heads(d)
+    conv_dim = di + 2 * cfg.n_groups * cfg.d_state
+    return di, H, conv_dim
+
+
+def init_ssm(key, d: int, cfg: SSMConfig, dtype) -> SSMParams:
+    di, H, conv_dim = _dims(d, cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * cfg.n_groups * cfg.d_state + H
+    return SSMParams(
+        in_proj=init_linear(ks[0], d, proj_out, dtype),
+        conv_w=(jax.random.normal(ks[1], (cfg.conv_kernel, conv_dim),
+                                  jnp.float32) * 0.1).astype(dtype),
+        conv_b=jnp.zeros((conv_dim,), dtype),
+        dt_bias=jnp.zeros((H,), jnp.float32),
+        a_log=jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        d_skip=jnp.ones((H,), jnp.float32),
+        out_norm=jnp.ones((di,), dtype),
+        out_proj=init_linear(ks[3], di, d, dtype),
+    )
+
+
+def _split_proj(z_xbc_dt: jax.Array, d: int, cfg: SSMConfig):
+    di, H, conv_dim = _dims(d, cfg)
+    gn = cfg.n_groups * cfg.d_state
+    z = z_xbc_dt[..., :di]
+    xbc = z_xbc_dt[..., di:di + conv_dim]
+    dt = z_xbc_dt[..., di + conv_dim:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. xbc: (B, L, C); w: (ck, C)."""
+    ck = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (ck - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i][None, None, :]
+              for i in range(ck))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def ssd_chunked_jnp(x, dt, a, b, c, d_skip, chunk: int,
+                    return_final_state: bool = False):
+    """Chunk-parallel SSD in pure jnp — same math as the Pallas kernel;
+    used for the XLA (non-TPU / dry-run) path. Shapes as kernels.ssd_scan.
+    With ``return_final_state`` also returns h_L (B, H, N, P) fp32 — the
+    prefill path uses it to seed the decode cache."""
+    B, L, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    pad = (chunk - L % chunk) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L + pad
+    nc = Lp // chunk
+    xf = x.reshape(B, nc, chunk, H, P).astype(jnp.float32)
+    dtf = dt.reshape(B, nc, chunk, H).astype(jnp.float32)
+    bh = jnp.repeat(b, rep, axis=2).reshape(B, nc, chunk, H, N).astype(jnp.float32)
+    ch = jnp.repeat(c, rep, axis=2).reshape(B, nc, chunk, H, N).astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    logdec = dtf * af                                   # (B, nc, Q, H)
+    seg = jnp.cumsum(logdec, axis=2)                    # s_t within chunk
+
+    # intra-chunk. Mask BEFORE exp: upper-triangle gaps are positive and
+    # overflow, and 0*inf in the VJP poisons every gradient upstream.
+    gap = seg[:, :, :, None, :] - seg[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    tri = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+    decay = jnp.exp(jnp.where(tri[None, None, :, :, None], gap, -jnp.inf))
+    scores = jnp.einsum("bnqhs,bnuhs->bnquh", ch, bh)   # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bnquh,bnquh,bnuh,bnuhp->bnqhp",
+                         scores, decay, dtf, xf)
+
+    # inter-chunk: sequential state pass over chunks
+    tail = jnp.exp(seg[:, :, -1:, :] - seg) * dtf       # (B,nc,Q,H)
+    dstate = jnp.einsum("bnqh,bnqhs,bnqhp->bnhsp", tail, bh, xf)
+    total_dec = jnp.exp(seg[:, :, -1, :])               # (B,nc,H)
+
+    def step(h_in, inp):
+        dec, dst = inp                                   # (B,H), (B,H,N,P)
+        h_out = dec[..., None, None] * h_in + dst
+        return h_out, h_in
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    h_final, h_ins = jax.lax.scan(
+        step, h0, (jnp.moveaxis(total_dec, 1, 0), jnp.moveaxis(dstate, 1, 0)))
+    h_ins = jnp.moveaxis(h_ins, 0, 1)                    # (B,nc,H,N,P) state at chunk start
+    y_inter = jnp.einsum("bnqh,bnqhs,bnhsp->bnqhp",
+                         jnp.exp(seg), ch, h_ins)
+
+    y = (y_intra + y_inter).reshape(B, Lp, H, P) + \
+        d_skip[None, None, :, None] * x.astype(jnp.float32)
+    y = y[:, :L].astype(x.dtype)
+    if return_final_state:
+        return y, h_final
+    return y
+
+
+def ssm_forward(p: SSMParams, x: jax.Array, cfg: SSMConfig, *,
+                rms_eps: float, use_kernel: bool = False) -> jax.Array:
+    """Train/prefill pass. x: (B, L, d) -> (B, L, d)."""
+    B, L, d = x.shape
+    di, H, conv_dim = _dims(d, cfg)
+    G, N, P = cfg.n_groups, cfg.d_state, cfg.head_dim
+
+    zxbcdt = jnp.einsum("bld,de->ble", x, p.in_proj)
+    z, xbc, dt_raw = _split_proj(zxbcdt, d, cfg)
+    xbc = _causal_conv(xbc, p.conv_w, p.conv_b)
+    xs = xbc[..., :di].reshape(B, L, H, P)
+    bmat = xbc[..., di:di + G * N].reshape(B, L, G, N)
+    cmat = xbc[..., di + G * N:].reshape(B, L, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias)
+    a = -jnp.exp(p.a_log)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y = kops.ssd(xs, dt, a, bmat, cmat, p.d_skip, chunk=cfg.chunk)
+    else:
+        y = ssd_chunked_jnp(xs, dt, a, bmat, cmat, p.d_skip, cfg.chunk)
+
+    y = y.reshape(B, L, di) * jax.nn.silu(z)
+    y = rms_norm(y, p.out_norm, rms_eps)
+    return jnp.einsum("ble,ed->bld", y, p.out_proj)
+
+
+def ssm_prefill(p: SSMParams, x: jax.Array, cfg: SSMConfig, *,
+                rms_eps: float) -> tuple[jax.Array, "SSMCache"]:
+    """Full-sequence pass that also returns the decode cache (conv tail +
+    final SSM state) so serving can switch to recurrent decode."""
+    B, L, d = x.shape
+    di, H, conv_dim = _dims(d, cfg)
+    G, N, P = cfg.n_groups, cfg.d_state, cfg.head_dim
+
+    zxbcdt = jnp.einsum("bld,de->ble", x, p.in_proj)
+    z, xbc_raw, dt_raw = _split_proj(zxbcdt, d, cfg)
+    xbc = _causal_conv(xbc_raw, p.conv_w, p.conv_b)
+    xs = xbc[..., :di].reshape(B, L, H, P)
+    bmat = xbc[..., di:di + G * N].reshape(B, L, G, N)
+    cmat = xbc[..., di + G * N:].reshape(B, L, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias)
+    a = -jnp.exp(p.a_log)
+
+    y, h_final = ssd_chunked_jnp(xs, dt, a, bmat, cmat, p.d_skip, cfg.chunk,
+                                 return_final_state=True)
+    y = y.reshape(B, L, di) * jax.nn.silu(z)
+    y = rms_norm(y, p.out_norm, rms_eps)
+    out = jnp.einsum("ble,ed->bld", y, p.out_proj)
+
+    # conv ring buffer = last (ck-1) PRE-activation conv inputs
+    ck = cfg.conv_kernel
+    tail = jnp.pad(xbc_raw, ((0, 0), (max(ck - 1 - L, 0), 0), (0, 0)))
+    cache = SSMCache(conv=tail[:, -(ck - 1):], state=h_final)
+    return out, cache
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # (B, ck-1, conv_dim) last inputs
+    state: jax.Array   # (B, H, N, P) fp32
+
+
+def init_ssm_cache(batch: int, d: int, cfg: SSMConfig, dtype) -> SSMCache:
+    di, H, conv_dim = _dims(d, cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, H, cfg.d_state, cfg.head_dim), jnp.float32),
+    )
+
+
+def ssm_decode(p: SSMParams, x: jax.Array, cache: SSMCache, cfg: SSMConfig,
+               *, rms_eps: float) -> tuple[jax.Array, SSMCache]:
+    """One-token recurrent step. x: (B, d) -> (B, d)."""
+    B, d = x.shape
+    di, H, conv_dim = _dims(d, cfg)
+    G, N, P = cfg.n_groups, cfg.d_state, cfg.head_dim
+
+    zxbcdt = jnp.einsum("bd,de->be", x, p.in_proj)
+    z, xbc, dt_raw = _split_proj(zxbcdt, d, cfg)
+
+    # conv ring buffer
+    window = jnp.concatenate([cache.conv, xbc[:, None, :]], axis=1)  # (B, ck, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p.conv_w) + p.conv_b
+    xbc_t = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+
+    xs = xbc_t[..., :di].reshape(B, H, P)
+    bmat = xbc_t[..., di:di + G * N].reshape(B, G, N)
+    cmat = xbc_t[..., di + G * N:].reshape(B, G, N)
+    rep = H // G
+    bh = jnp.repeat(bmat, rep, axis=1)                    # (B, H, N)
+    ch = jnp.repeat(cmat, rep, axis=1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias)  # (B, H)
+    a = -jnp.exp(p.a_log)
+
+    decay = jnp.exp(dt * a)[..., None, None]              # (B, H, 1, 1)
+    upd = (dt[..., None, None] * bh[..., :, None]
+           * xs.astype(jnp.float32)[..., None, :])        # (B, H, N, P)
+    state = decay * cache.state + upd
+    y = jnp.einsum("bhn,bhnp->bhp", ch.astype(jnp.float32), state)
+    y = y + p.d_skip[None, :, None] * xs.astype(jnp.float32)
+
+    y = y.reshape(B, di).astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, p.out_norm, rms_eps)
+    out = jnp.einsum("be,ed->bd", y, p.out_proj)
+    return out, SSMCache(conv=new_conv, state=state)

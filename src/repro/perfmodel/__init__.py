@@ -1,0 +1,11 @@
+"""Analytical performance/energy model of PAM and its baselines —
+the reproduction of the paper's simulator methodology (§7.1)."""
+
+from repro.perfmodel.model import (SystemModel, SystemKind, StepWorkload,
+                                   make_system, simulate_decode_step,
+                                   simulate_offline, simulate_online)
+from repro.perfmodel.latency import make_latency_model
+
+__all__ = ["SystemModel", "SystemKind", "StepWorkload", "make_system",
+           "simulate_decode_step", "simulate_offline", "simulate_online",
+           "make_latency_model"]

@@ -1,0 +1,279 @@
+"""The PAM serving engine (paper §4): request pool, continuous batching
+with prefill priority, PAM-managed decode loop, SLO accounting.
+
+Control flow is real (host Python over jit'd device steps, like vLLM's
+scheduler over CUDA graphs); *hardware timing* is injectable — pass a
+``latency_model`` (see ``repro.perfmodel``) to account each step at the
+modeled speed of a PAM / L-PIM / vLLM-offloading system, which is exactly
+the paper's simulator methodology. Without one, wall-clock is used.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.serving.pam_manager import (PAMManager, PAMManagerConfig,
+                                       PAMState, init_pam_state,
+                                       make_masked_decode_attn,
+                                       make_masked_latent_attn)
+
+WAITING, RUNNING, DONE = "waiting", "running", "done"
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class RequestState:
+    request: Request
+    status: str = WAITING
+    slot: int = -1
+    outputs: list[int] = dataclasses.field(default_factory=list)
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    token_times: list[float] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    max_batch: int = 4
+    max_len: int = 256
+    eos_token: int = -1                # -1: run to max_new_tokens
+    pam: Optional[PAMManagerConfig] = None   # None -> dense baseline
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServingConfig,
+                 latency_model: Optional[Callable[[dict], float]] = None):
+        assert cfg.has_decode, f"{cfg.name} is encoder-only"
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.latency_model = latency_model
+        self.clock = 0.0                       # simulated seconds
+
+        B, Smax = scfg.max_batch, scfg.max_len
+        self.cache = tf.init_decode_cache(cfg, B, Smax)
+        self.pam_cfg = scfg.pam
+        self.mgr = PAMManager(scfg.pam) if scfg.pam else None
+        self.pam_state = init_pam_state(B, Smax)
+
+        self.requests: dict[int, RequestState] = {}
+        self.waiting: collections.deque[int] = collections.deque()
+        self.slots: list[Optional[int]] = [None] * B
+        self.last_token = np.zeros((B,), np.int32)
+        self.steps = 0
+
+        self._decode_jit = self._build_decode()
+        self._prefill_jit: dict[int, Any] = {}   # keyed by prompt length
+
+    # ------------------------------------------------------------ builders
+    def _build_decode(self):
+        cfg = self.cfg
+
+        @jax.jit
+        def step(params, tokens, cache, participate, active):
+            d_fn = make_masked_decode_attn(participate)
+            l_fn = make_masked_latent_attn(participate)
+            old_lens = cache.lengths
+            logits, cache, scores = tf.decode_step(
+                cfg, params, tokens, cache, decode_attn_fn=d_fn,
+                latent_attn_fn=l_fn)
+            # inactive slots: freeze their lengths
+            cache = cache._replace(
+                lengths=jnp.where(active, cache.lengths, old_lens))
+            return logits, cache, scores
+
+        return step
+
+    def _prefill_for_len(self, s_len: int):
+        if s_len not in self._prefill_jit:
+            cfg, smax = self.cfg, self.scfg.max_len
+
+            @jax.jit
+            def pre(params, tokens):
+                return tf.prefill(cfg, params, tokens, smax)
+
+            self._prefill_jit[s_len] = pre
+        return self._prefill_jit[s_len]
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, req: Request) -> None:
+        self.requests[req.id] = RequestState(request=req)
+        self.waiting.append(req.id)
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def _scatter_cache(self, sub: tf.DecodeCache, slot: int) -> None:
+        def put(full, one):
+            if full.ndim == 0 or full.size == 0:
+                return full
+            if full.ndim == 1:                     # lengths (B,)
+                return full.at[slot].set(one[0])
+            return full.at[:, slot].set(one[:, 0])  # (L, B, ...)
+        self.cache = jax.tree.map(put, self.cache, sub)
+
+    def _admit(self) -> int:
+        """Prefill-priority admission (paper §4.2.3). Returns prompt tokens
+        processed (for the latency model)."""
+        admitted_tokens = 0
+        free = self._free_slots()
+        while self.waiting and free:
+            rid = self.waiting.popleft()
+            rs = self.requests[rid]
+            prompt = np.asarray(rs.request.prompt, np.int32)
+            s_len = len(prompt)
+            if s_len + rs.request.max_new_tokens > self.scfg.max_len:
+                raise ValueError(f"request {rid} exceeds max_len")
+            slot = free.pop(0)
+            pre = self._prefill_for_len(s_len)
+            logits, sub = pre(self.params, jnp.asarray(prompt[None]))
+            self._scatter_cache(sub, slot)
+            first = int(jnp.argmax(logits[0]))
+            rs.status, rs.slot = RUNNING, slot
+            rs.outputs.append(first)
+            rs.first_token_time = None     # stamped after latency charge
+            self.slots[slot] = rid
+            self.last_token[slot] = first
+            if self.mgr:
+                self.pam_state = self.mgr.place_prefill(
+                    self.pam_state, jnp.int32(slot), jnp.int32(s_len))
+            admitted_tokens += s_len
+        return admitted_tokens
+
+    # ------------------------------------------------------------ stepping
+    def step(self) -> dict[str, Any]:
+        """One engine iteration: admission (prefill) + one decode step for
+        all running sequences. Returns step stats."""
+        t0 = time.perf_counter()
+        prefill_tokens = self._admit()
+
+        active_np = np.array([s is not None for s in self.slots])
+        stats: dict[str, Any] = {"prefill_tokens": prefill_tokens,
+                                 "active": int(active_np.sum()),
+                                 "tier_reads": np.zeros(3, np.int64),
+                                 "moved_tokens": 0}
+        if active_np.any():
+            # post-append lengths: the step writes the new token at
+            # position ``lengths`` before attending, so it must participate
+            lengths = self.cache.lengths + jnp.asarray(active_np, jnp.int32)
+            if self.mgr:
+                participate = self.mgr.participation(self.pam_state, lengths)
+            else:
+                Smax = self.scfg.max_len
+                participate = (jnp.arange(Smax)[None, :]
+                               < lengths[:, None])
+            active = jnp.asarray(active_np)
+            tokens = jnp.asarray(self.last_token)
+            logits, self.cache, scores = self._decode_jit(
+                self.params, tokens, self.cache, participate, active)
+
+            if self.mgr:
+                stats["tier_reads"] = np.asarray(self.mgr.tier_read_counts(
+                    self.pam_state, participate & active[:, None]))
+                stats["hit_rate"] = float(self.mgr.hit_rate(
+                    self.pam_state, participate))
+                before_moved = int(self.pam_state.moved_tokens)
+                if scores is None:     # attention-free: recency-only scores
+                    Smax = self.scfg.max_len
+                    scores = (jnp.arange(Smax)[None, :]
+                              == (self.cache.lengths - 1)[:, None]
+                              ).astype(jnp.float32)
+                self.pam_state = self.mgr.observe(
+                    self.pam_state, scores, self.cache.lengths, participate)
+                stats["moved_tokens"] = \
+                    int(self.pam_state.moved_tokens) - before_moved
+
+            nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+            self._emit_tokens(nxt, active_np)
+
+        # --- timing: modeled or wall-clock --------------------------------
+        stats["batch_lengths"] = np.asarray(self.cache.lengths)
+        if self.latency_model is not None:
+            dt = float(self.latency_model(stats))
+        else:
+            dt = time.perf_counter() - t0
+        self.clock += dt
+        stats["step_time"] = dt
+        self._stamp_times()
+        self.steps += 1
+        return stats
+
+    def _emit_tokens(self, nxt: np.ndarray, active: np.ndarray) -> None:
+        for slot, rid in enumerate(self.slots):
+            if rid is None or not active[slot]:
+                continue
+            rs = self.requests[rid]
+            tok = int(nxt[slot])
+            rs.outputs.append(tok)
+            self.last_token[slot] = tok
+            done = (len(rs.outputs) >= rs.request.max_new_tokens
+                    or tok == self.scfg.eos_token)
+            if done:
+                rs.status = DONE
+                rs.finish_time = None  # stamped in _stamp_times
+                self.slots[slot] = None
+
+    def _stamp_times(self) -> None:
+        for rs in self.requests.values():
+            if rs.status in (RUNNING, DONE):
+                if rs.first_token_time is None:
+                    rs.first_token_time = self.clock
+                if len(rs.token_times) < len(rs.outputs):
+                    rs.token_times += [self.clock] * (
+                        len(rs.outputs) - len(rs.token_times))
+                if rs.status == DONE and rs.finish_time is None:
+                    rs.finish_time = self.clock
+
+    def run(self, max_steps: int = 10_000) -> dict[str, Any]:
+        """Run until all submitted requests finish. Returns summary."""
+        for _ in range(max_steps):
+            if not self.waiting and all(s is None for s in self.slots):
+                break
+            self.step()
+        return self.summary()
+
+    # ------------------------------------------------------------ metrics
+    def summary(self) -> dict[str, Any]:
+        done = [r for r in self.requests.values() if r.status == DONE]
+        total_tokens = sum(len(r.outputs) for r in done)
+        tpots = []
+        for r in done:
+            if len(r.token_times) > 1:
+                gaps = np.diff(r.token_times)
+                tpots.extend(gaps.tolist())
+        return {
+            "finished": len(done),
+            "total_tokens": total_tokens,
+            "sim_time_s": self.clock,
+            "throughput_tok_s": total_tokens / max(self.clock, 1e-9),
+            "p50_tpot_s": float(np.percentile(tpots, 50)) if tpots else 0.0,
+            "p99_tpot_s": float(np.percentile(tpots, 99)) if tpots else 0.0,
+            "steps": self.steps,
+        }
+
+    def slo_attainment(self, slo_s: float) -> float:
+        """Fraction of decode-token gaps within the SLO (paper Fig. 9)."""
+        gaps = []
+        for r in self.requests.values():
+            if len(r.token_times) > 1:
+                gaps.extend(np.diff(r.token_times).tolist())
+        if not gaps:
+            return 1.0
+        return float(np.mean(np.asarray(gaps) <= slo_s))

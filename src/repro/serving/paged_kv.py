@@ -1,0 +1,106 @@
+"""Paged KV storage (paper §4.2.2: "PAM adopts PagedAttention, using a
+block table to record the physical locations of KV tokens").
+
+``BlockAllocator`` is host-side bookkeeping (free list, per-sequence block
+tables). ``PagedKVPool`` owns the device arrays — one pool per memory tier;
+the warm/cold tiers store paged, the hot tier stores dense kernel-ready
+buffers (see ``pam_manager``). Gather/scatter between layouts goes through
+``repro.core.pam_interface`` (the hardware re-layout unit of §6.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class OutOfBlocks(RuntimeError):
+    pass
+
+
+class BlockAllocator:
+    """Free-list block allocator with per-sequence tables."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: list[int] = list(range(num_blocks - 1, -1, -1))
+        self.tables: dict[int, list[int]] = {}
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def allocate(self, seq_id: int, n_tokens: int) -> list[int]:
+        need = self.blocks_for(n_tokens) - len(self.tables.get(seq_id, []))
+        if need > len(self._free):
+            raise OutOfBlocks(
+                f"need {need} blocks, {len(self._free)} free")
+        tbl = self.tables.setdefault(seq_id, [])
+        for _ in range(max(need, 0)):
+            tbl.append(self._free.pop())
+        return tbl
+
+    def free(self, seq_id: int) -> None:
+        for b in self.tables.pop(seq_id, []):
+            self._free.append(b)
+
+    def table(self, seq_id: int) -> list[int]:
+        return self.tables.get(seq_id, [])
+
+    def check_no_double_mapping(self) -> bool:
+        used = [b for t in self.tables.values() for b in t]
+        return len(used) == len(set(used)) and \
+            not (set(used) & set(self._free))
+
+
+@dataclasses.dataclass
+class PagedKVPool:
+    """Device-side paged KV storage for one tier: K and V pools shaped
+    (L, nblocks, block, Hkv, dh) (or latent (L, nblocks, block, r))."""
+    k: jax.Array
+    v: jax.Array
+    block_size: int
+
+    @classmethod
+    def create(cls, n_layers: int, num_blocks: int, block_size: int,
+               n_kv: int, d_head: int, dtype=jnp.bfloat16) -> "PagedKVPool":
+        shape = (n_layers, num_blocks, block_size, n_kv, d_head)
+        return cls(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   block_size=block_size)
+
+    def write_tokens(self, layer_k: jax.Array, layer_v: jax.Array,
+                     block_ids: np.ndarray, slot_ids: np.ndarray
+                     ) -> "PagedKVPool":
+        """Scatter tokens into (block, slot) positions.
+
+        layer_k/v: (L, T, Hkv, dh); block_ids/slot_ids: (T,).
+        """
+        bi = jnp.asarray(block_ids)
+        si = jnp.asarray(slot_ids)
+        return PagedKVPool(
+            k=self.k.at[:, bi, si].set(jnp.moveaxis(layer_k, 1, 1)),
+            v=self.v.at[:, bi, si].set(jnp.moveaxis(layer_v, 1, 1)),
+            block_size=self.block_size)
+
+    def gather_tokens(self, block_ids: np.ndarray, slot_ids: np.ndarray
+                      ) -> tuple[jax.Array, jax.Array]:
+        """Gather (L, T, Hkv, dh) for the given token positions."""
+        bi = jnp.asarray(block_ids)
+        si = jnp.asarray(slot_ids)
+        return self.k[:, bi, si], self.v[:, bi, si]
+
+
+def token_to_block_slot(positions: np.ndarray, table: list[int],
+                        block_size: int) -> tuple[np.ndarray, np.ndarray]:
+    """Map logical token positions -> (physical block id, slot) via table."""
+    pos = np.asarray(positions)
+    logical = pos // block_size
+    phys = np.asarray(table, np.int32)[logical]
+    return phys, pos % block_size

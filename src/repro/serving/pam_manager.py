@@ -1,0 +1,237 @@
+"""PAM KV-centric management for the serving engine (paper §6 end-to-end).
+
+Holds, per running sequence: per-token importance (eq. 7 EMA), per-token
+tier residency (HBM/DDR/SSD), and the retrieval-sparsity participation
+mask. Each decode step:
+
+  1. ``participation()``      -> which tokens are loaded (top-S/c + recency)
+  2. model decode step        -> attention out + per-token mass S_i(j)
+  3. ``observe(scores)``      -> importance EMA update, append new token
+     (new tokens enter the hot tier; overflow demotes the least-important
+     hot token — capacity cascade), activation-window tracking (§6.1)
+  4. every ``schedule_interval`` steps: Algorithm 2 swaps (vmapped over the
+     batch) + migration stats for the perf model (§6.2 interface traffic)
+
+The attention itself runs through ``make_masked_decode_attn`` — exact
+masked softmax over participating tokens, which the core/kernels property
+tests certify equals the per-tier-partition + hierarchical-merge form of
+Alg. 1. Tier residency feeds the latency/energy model (per-tier token
+counts = per-tier bytes read).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import importance as imp_mod
+from repro.core import scheduling
+from repro.core.tiers import COLD, HOT, WARM
+
+
+@dataclasses.dataclass(frozen=True)
+class PAMManagerConfig:
+    max_tokens: int
+    hot_capacity: int                # tokens per sequence on HBM
+    warm_capacity: int               # tokens per sequence on DDR
+    compression: int = 8             # retrieval sparsity (paper: 8x)
+    recency_window: int = 32
+    lam: float = imp_mod.DEFAULT_LAMBDA
+    schedule_interval: int = 4       # decode steps between Alg. 2 runs
+    schedule: scheduling.ScheduleConfig = scheduling.ScheduleConfig()
+    use_sparsity: bool = True
+    use_tiering: bool = True
+
+
+class PAMState(NamedTuple):
+    importance: jax.Array    # (B, Smax) fp32
+    tier: jax.Array          # (B, Smax) int32
+    step: jax.Array          # scalar int32
+    moved_tokens: jax.Array  # scalar int32 — cumulative Alg.2 migrations
+    last_hot: jax.Array      # (B, Smax) bool — previous participation set
+
+
+def init_pam_state(batch: int, max_tokens: int) -> PAMState:
+    return PAMState(
+        importance=jnp.zeros((batch, max_tokens), jnp.float32),
+        tier=jnp.full((batch, max_tokens), COLD, jnp.int32),
+        step=jnp.zeros((), jnp.int32),
+        moved_tokens=jnp.zeros((), jnp.int32),
+        last_hot=jnp.zeros((batch, max_tokens), bool),
+    )
+
+
+# --------------------------------------------------------------- attention
+def make_masked_decode_attn(participate: jax.Array):
+    """Decode-attn factory: masks non-participating tokens (sparsity +
+    tier-partition union). participate: (B, Smax) traced array."""
+    import math as _math
+
+    def d_fn(q, k_cache, v_cache, kv_lens):
+        B, H, dh = q.shape
+        Hkv, Smax = k_cache.shape[1], k_cache.shape[2]
+        rep = H // Hkv
+        scale = 1.0 / _math.sqrt(dh)
+        live = (jnp.arange(Smax)[None, :] < kv_lens[:, None]) & participate
+        kh = jnp.repeat(k_cache, rep, axis=1)
+        vh = jnp.repeat(v_cache, rep, axis=1)
+        s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                       kh.astype(jnp.float32)) * scale
+        s = jnp.where(live[:, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(jnp.isnan(p), 0.0, p)
+        out = jnp.einsum("bhs,bhsd->bhd", p, vh.astype(jnp.float32))
+        n_live = jnp.sum(live, axis=-1, keepdims=True).astype(jnp.float32)
+        mass = jnp.mean(p, axis=1) * n_live
+        return out.astype(q.dtype), mass
+
+    return d_fn
+
+
+def make_masked_latent_attn(participate: jax.Array):
+    """MLA flavor: masks latent tokens. Signature matches
+    ``mla_latent_decode_attn``."""
+    def l_fn(q_eff, kv_latent, k_rope, kv_lens, *, scale):
+        B, Smax = kv_latent.shape[0], kv_latent.shape[1]
+        live = (jnp.arange(Smax)[None, :] < kv_lens[:, None]) & participate
+        k_eff = jnp.concatenate([kv_latent, k_rope], axis=-1)
+        s = jnp.einsum("bhd,bsd->bhs", q_eff.astype(jnp.float32),
+                       k_eff.astype(jnp.float32)) * scale
+        s = jnp.where(live[:, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(jnp.isnan(p), 0.0, p)
+        out = jnp.einsum("bhs,bsr->bhr", p, kv_latent.astype(jnp.float32))
+        n_live = jnp.sum(live, axis=-1, keepdims=True).astype(jnp.float32)
+        mass = jnp.mean(p, axis=1) * n_live
+        return out.astype(q_eff.dtype), mass
+
+    return l_fn
+
+
+# ------------------------------------------------------------------ manager
+class PAMManager:
+    """Stateless-jit wrapper around PAMState transitions."""
+
+    def __init__(self, cfg: PAMManagerConfig):
+        self.cfg = cfg
+
+    # -- step 1: which tokens participate this step -----------------------
+    @partial(jax.jit, static_argnames=("self",))
+    def participation(self, state: PAMState, lengths: jax.Array
+                      ) -> jax.Array:
+        """(B, Smax) bool. Top-(len/c) by importance + recency pins."""
+        cfg = self.cfg
+        B, Smax = state.importance.shape
+        valid = jnp.arange(Smax)[None, :] < lengths[:, None]
+        if not cfg.use_sparsity:
+            return valid
+        budget = jnp.maximum(lengths // cfg.compression, 1)     # (B,)
+        pos = jnp.arange(Smax)[None, :]
+        recent = (pos >= (lengths - cfg.recency_window)[:, None]) & valid
+        score = jnp.where(valid, state.importance, -jnp.inf)
+        score = jnp.where(recent, jnp.inf, score)
+        ranks = jnp.argsort(jnp.argsort(-score, axis=-1), axis=-1)
+        sel = (ranks < budget[:, None]) & valid
+        return sel | recent
+
+    # -- steps 3+4: importance update, append, schedule --------------------
+    @partial(jax.jit, static_argnames=("self",))
+    def observe(self, state: PAMState, scores: jax.Array,
+                lengths: jax.Array, participate: jax.Array) -> PAMState:
+        """After a decode step: EMA update + hot append + capacity cascade
+        + (every interval) Algorithm 2."""
+        cfg = self.cfg
+        B, Smax = state.importance.shape
+        valid = jnp.arange(Smax)[None, :] < lengths[:, None]
+
+        imp = imp_mod.update_importance(state.importance,
+                                        jnp.where(valid, scores, 0.0),
+                                        lam=cfg.lam)
+        # new token (at index lengths-1 after the model appended) -> HOT,
+        # seeded with the current max importance (recency prior).
+        bidx = jnp.arange(B)
+        new_pos = jnp.maximum(lengths - 1, 0)
+        tier = state.tier.at[bidx, new_pos].set(HOT)
+        imp = imp.at[bidx, new_pos].set(
+            jnp.maximum(imp[bidx, new_pos], jnp.max(imp, axis=-1)))
+
+        if cfg.use_tiering:
+            # capacity cascade: demote least-important over-capacity tokens
+            tier = _enforce_capacity(imp, tier, valid, HOT,
+                                     cfg.hot_capacity, WARM)
+            tier = _enforce_capacity(imp, tier, valid, WARM,
+                                     cfg.warm_capacity, COLD)
+
+            def run_sched(im, ti, va):
+                new_t, moved, _ = scheduling.schedule_kv(im, ti, va,
+                                                         cfg.schedule)
+                return new_t, jnp.sum(moved)
+
+            def maybe_schedule(ti):
+                new_t, moved = jax.vmap(run_sched)(imp, ti, valid)
+                return new_t, jnp.sum(moved)
+
+            do = (state.step + 1) % cfg.schedule_interval == 0
+            tier, moved = jax.lax.cond(
+                do, maybe_schedule,
+                lambda ti: (ti, jnp.zeros((), jnp.int32)), tier)
+        else:
+            moved = jnp.zeros((), jnp.int32)
+
+        return PAMState(importance=imp, tier=tier, step=state.step + 1,
+                        moved_tokens=state.moved_tokens + moved,
+                        last_hot=participate)
+
+    # -- prefill placement --------------------------------------------------
+    @partial(jax.jit, static_argnames=("self",))
+    def place_prefill(self, state: PAMState, slot: jax.Array,
+                      length: jax.Array) -> PAMState:
+        """Initial placement for one admitted sequence (recency fill-down,
+        §4.3): tail -> HOT, middle -> DDR, head -> SSD."""
+        cfg = self.cfg
+        Smax = state.importance.shape[1]
+        idx = jnp.arange(Smax)
+        valid = idx < length
+        dist = jnp.maximum(length - 1 - idx, 0)
+        tier = jnp.where(dist < cfg.hot_capacity, HOT,
+                         jnp.where(dist < cfg.hot_capacity
+                                   + cfg.warm_capacity, WARM, COLD))
+        imp = jnp.where(valid, 1.0 / (1.0 + dist.astype(jnp.float32)), 0.0)
+        return state._replace(
+            importance=state.importance.at[slot].set(imp),
+            tier=state.tier.at[slot].set(tier.astype(jnp.int32)),
+            last_hot=state.last_hot.at[slot].set(False),
+        )
+
+    # -- stats for the latency/energy model ---------------------------------
+    @partial(jax.jit, static_argnames=("self",))
+    def tier_read_counts(self, state: PAMState, participate: jax.Array
+                         ) -> jax.Array:
+        """(3,) tokens read per tier this step — bytes = counts x token
+        bytes; drives the per-tier roofline in the perf model."""
+        out = []
+        for t in (HOT, WARM, COLD):
+            out.append(jnp.sum(participate & (state.tier == t)))
+        return jnp.stack(out)
+
+    def hit_rate(self, state: PAMState, participate: jax.Array) -> jax.Array:
+        """Context locality: fraction of this step's working set that was
+        also in the previous step's (paper §3.2)."""
+        inter = jnp.sum(state.last_hot & participate, axis=-1)
+        denom = jnp.maximum(jnp.sum(participate, axis=-1), 1)
+        return jnp.mean(inter / denom)
+
+
+def _enforce_capacity(imp, tier, valid, t_from: int, cap: int, t_to: int):
+    """Demote lowest-importance tokens of tier ``t_from`` past ``cap``."""
+    on = (tier == t_from) & valid                       # (B, S)
+    count = jnp.sum(on, axis=-1, keepdims=True)
+    score = jnp.where(on, imp, jnp.inf)
+    ranks = jnp.argsort(jnp.argsort(score, axis=-1), axis=-1)  # asc
+    overflow = jnp.maximum(count - cap, 0)
+    demote = on & (ranks < overflow)
+    return jnp.where(demote, t_to, tier)

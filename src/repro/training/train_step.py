@@ -1,0 +1,119 @@
+"""Train-step builder: loss + grad + AdamW, with microbatch gradient
+accumulation (the collective/compute overlap unit) and optional int8
+gradient compression with error feedback for cross-pod reduction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.training import optim
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: optim.AdamWConfig = optim.AdamWConfig()
+    microbatches: int = 1       # grad-accumulation steps per update
+    remat: bool = False
+    use_kernel: bool = False
+    compress_grads: bool = False  # int8 + error feedback (cross-pod DP)
+    activation_spec: Any = None   # sequence-parallel residual constraint
+
+
+class TrainState(NamedTuple):
+    params: Pytree
+    opt: optim.AdamWState
+    error_feedback: Optional[Pytree]   # compression residuals (or None)
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key) -> TrainState:
+    params = tf.init_params(cfg, key)
+    ef = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+          if tcfg.compress_grads else None)
+    return TrainState(params=params, opt=optim.adamw_init(params),
+                      error_feedback=ef)
+
+
+# ------------------------------------------------- int8 grad compression
+def compress_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _compress_with_feedback(grads: Pytree, ef: Pytree
+                            ) -> tuple[Pytree, Pytree]:
+    """1-bit-Adam-style error feedback: quantize (g + residual), carry the
+    quantization error to the next step. The all-reduce then moves int8
+    (4x fewer bytes on the cross-pod links)."""
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, scale = compress_int8(target)
+        deq = decompress_int8(q, scale)
+        return deq.astype(g.dtype), target - deq
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+# ------------------------------------------------------------ train step
+def build_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``batch`` arrays carry a leading microbatch axis when
+    ``tcfg.microbatches > 1``: (M, B/M, ...). Gradient accumulation runs as
+    a lax.scan over microbatches so each microbatch's backward can overlap
+    the previous microbatch's gradient reduction when sharded.
+    """
+
+    def loss(params, mb):
+        return tf.loss_fn(cfg, params, mb, use_kernel=tcfg.use_kernel,
+                          remat=tcfg.remat,
+                          activation_spec=tcfg.activation_spec)
+
+    def train_step(state: TrainState, batch: dict[str, jax.Array]):
+        params = state.params
+
+        if tcfg.microbatches > 1:
+            def acc_body(acc, mb):
+                l, g = jax.value_and_grad(loss)(params, mb)
+                return jax.tree.map(jnp.add, acc,
+                                    (jax.tree.map(
+                                        lambda x: x / tcfg.microbatches, g),
+                                     )), l
+
+            zero = (jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),)
+            (grads,), losses = jax.lax.scan(acc_body, zero, batch)
+            loss_val = jnp.mean(losses)
+        else:
+            loss_val, grads = jax.value_and_grad(loss)(params, batch)
+
+        ef = state.error_feedback
+        if tcfg.compress_grads:
+            grads, ef = _compress_with_feedback(grads, ef)
+
+        new_params, new_opt, gnorm = optim.adamw_update(
+            tcfg.adamw, grads, state.opt, params)
+        metrics = {"loss": loss_val, "grad_norm": gnorm,
+                   "step": new_opt.step}
+        return TrainState(new_params, new_opt, ef), metrics
+
+    return train_step

@@ -1,0 +1,195 @@
+"""Tests for PAM KV-centric management: importance EMA (eq.7-8),
+Algorithm 2 scheduling invariants, intra-device mapping balance (§6.1),
+and PAM-interface layout transforms (§6.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import importance as imp
+from repro.core import mapping, pam_interface, scheduling, tiers
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------- importance
+def test_importance_ema_formula():
+    I_prev = jnp.array([0.5, 0.0, 1.0])
+    S = jnp.array([1.0, 1.0, 0.0])
+    out = imp.update_importance(I_prev, S, lam=0.6)
+    np.testing.assert_allclose(np.asarray(out), [0.8, 0.6, 0.4], rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(4, 64))
+def test_importance_ema_bounded(seed, n):
+    """If step scores are in [0, B], importance stays in [0, B]."""
+    key = jax.random.PRNGKey(seed)
+    I = jax.random.uniform(key, (n,))
+    for i in range(5):
+        S = jax.random.uniform(jax.random.fold_in(key, i), (n,)) * 2.0
+        I = imp.update_importance(I, S)
+    assert float(jnp.min(I)) >= 0.0
+    assert float(jnp.max(I)) <= 2.0 + 1e-6
+
+
+def test_tier_importance_score_means():
+    impv = jnp.array([1.0, 2.0, 3.0, 4.0, 100.0])
+    tier = jnp.array([0, 0, 1, 2, 2])
+    valid = jnp.array([True, True, True, True, False])
+    out = imp.tier_importance_score(impv, tier, 3, valid)
+    np.testing.assert_allclose(np.asarray(out), [1.5, 3.0, 4.0], rtol=1e-6)
+
+
+# ---------------------------------------------------------------- scheduling
+def _rand_state(seed, n):
+    key = jax.random.PRNGKey(seed)
+    impv = jax.random.uniform(jax.random.fold_in(key, 0), (n,))
+    tier = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 3)
+    valid = jax.random.uniform(jax.random.fold_in(key, 2), (n,)) < 0.9
+    return impv, tier.astype(jnp.int32), valid
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(12, 96))
+def test_schedule_preserves_tier_counts(seed, n):
+    """Alg. 2 only SWAPS tokens — per-tier populations are invariant
+    (capacity safety: no tier can overflow from scheduling)."""
+    impv, tier, valid = _rand_state(seed, n)
+    cfg = scheduling.ScheduleConfig(x=4.0, y=2.0, max_swaps=16)
+    new_tier, moved, swaps = scheduling.schedule_kv(impv, tier, valid, cfg)
+    for t in range(3):
+        before = int(jnp.sum((tier == t) & valid))
+        after = int(jnp.sum((new_tier == t) & valid))
+        assert before == after
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(12, 96))
+def test_schedule_improves_ratio_error(seed, n):
+    impv, tier, valid = _rand_state(seed, n)
+    cfg = scheduling.ScheduleConfig(x=4.0, y=2.0, max_swaps=16)
+    before = float(scheduling.ratio_error(impv, tier, valid, cfg))
+    new_tier, moved, swaps = scheduling.schedule_kv(impv, tier, valid, cfg)
+    after = float(scheduling.ratio_error(impv, new_tier, valid, cfg))
+    assert after <= before + 1e-5
+
+
+def test_schedule_bounded_movement():
+    impv, tier, valid = _rand_state(3, 256)
+    cfg = scheduling.ScheduleConfig(x=8.0, y=3.0, max_swaps=8)
+    new_tier, moved, swaps = scheduling.schedule_kv(impv, tier, valid, cfg)
+    assert int(swaps) <= 2 * cfg.max_swaps          # both phases bounded
+    assert int(jnp.sum(moved)) <= 4 * cfg.max_swaps  # 2 tokens per swap
+
+
+def test_schedule_promotes_hot_tokens():
+    """A very important token stuck on SSD gets promoted."""
+    n = 32
+    impv = jnp.full((n,), 0.1).at[5].set(10.0)
+    tier = jnp.zeros((n,), jnp.int32)
+    tier = tier.at[jnp.arange(16, 32)].set(2)   # half the tokens on SSD
+    tier = tier.at[5].set(2)                    # hot token stranded on SSD
+    tier = tier.at[0].set(1)                    # one DDR token
+    valid = jnp.ones((n,), bool)
+    cfg = scheduling.ScheduleConfig(x=8.0, y=3.0, max_swaps=16)
+    new_tier, moved, _ = scheduling.schedule_kv(impv, tier, valid, cfg)
+    assert int(new_tier[5]) != 2  # escaped SSD
+
+
+# ------------------------------------------------------------------- mapping
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(16, 128),
+       g=st.sampled_from([2, 4, 8]))
+def test_balanced_assign_greedy_bound(seed, n, g):
+    """LPT greedy guarantee: max group load <= mean load + max item."""
+    key = jax.random.PRNGKey(seed)
+    freq = jax.random.exponential(key, (n,))
+    valid = jnp.ones((n,), bool)
+    assign = mapping.greedy_balanced_assign(freq, valid, g)
+    assert assign.shape == (n,)
+    assert int(jnp.max(assign)) < g
+    loads = mapping.group_loads(freq, assign, valid, g)
+    bound = float(jnp.mean(loads) + jnp.max(freq))
+    assert float(jnp.max(loads)) <= bound + 1e-5
+
+
+def test_balanced_assign_beats_naive_on_skew():
+    """Adversarial skew (few huge tokens): greedy balances, contiguous
+    round-robin-by-position does not."""
+    n, g = 64, 4
+    freq = jnp.ones((n,)).at[:8].set(50.0)   # 8 hot tokens up front
+    valid = jnp.ones((n,), bool)
+    assign = mapping.greedy_balanced_assign(freq, valid, g)
+    bal = float(mapping.imbalance(freq, assign, valid, g))
+    naive = (jnp.arange(n, dtype=jnp.int32) // (n // g))  # contiguous split
+    naive_bal = float(mapping.imbalance(freq, naive, valid, g))
+    assert bal < naive_bal
+    assert bal < 1.1
+
+
+def test_activation_window_tracking():
+    n, w = 8, 10
+    fw = jnp.zeros((w, n), jnp.uint8)
+    for step in range(13):
+        act = jnp.arange(n) % 2 == (step % 2)
+        fw = mapping.update_activation_freq(fw, act, jnp.int32(step), window=w)
+    counts = mapping.windowed_frequency(fw)
+    assert counts.shape == (n,)
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  [5, 5, 5, 5, 5, 5, 5, 5])
+
+
+# ------------------------------------------------------------- PAM interface
+def test_paged_dense_roundtrip():
+    key = jax.random.PRNGKey(0)
+    nblocks, block, H, d = 6, 4, 2, 8
+    pool = jax.random.normal(key, (nblocks, block, H, d))
+    table = jnp.array([3, 0, 5])
+    dense = pam_interface.paged_to_dense(pool, table, block)
+    assert dense.shape == (12, H, d)
+    pool2 = pam_interface.dense_to_paged(dense, jnp.zeros_like(pool), table,
+                                         block)
+    np.testing.assert_allclose(np.asarray(pool2[table]),
+                               np.asarray(pool[table]))
+
+
+def test_migration_plan_and_apply():
+    key = jax.random.PRNGKey(2)
+    H, d = 2, 4
+    src = jax.random.normal(key, (16, H, d))
+    dst = jnp.zeros((8, H, d))
+    slot_of_token = jnp.arange(16, dtype=jnp.int32)
+    moved = jnp.zeros((16,), bool).at[jnp.array([3, 9, 14])].set(True)
+    free = jnp.array([1, 4, 6, 7], dtype=jnp.int32)
+    plan = pam_interface.make_migration_plan(moved, slot_of_token, free)
+    assert int(plan.count) == 3
+    out = pam_interface.apply_migration(src, dst, plan, slot_of_token)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(src[3]))
+    np.testing.assert_allclose(np.asarray(out[4]), np.asarray(src[9]))
+    np.testing.assert_allclose(np.asarray(out[6]), np.asarray(src[14]))
+    np.testing.assert_allclose(np.asarray(out[7]), 0.0)  # unused slot
+
+
+def test_bank_interleave_layout():
+    n, G, cap = 10, 2, 8
+    dense = jnp.arange(n, dtype=jnp.float32)[:, None, None] * jnp.ones((n, 1, 1))
+    assign = jnp.array([0, 1] * 5, dtype=jnp.int32)
+    out, slot = pam_interface.bank_interleave(dense, assign, G, cap)
+    assert out.shape == (G, cap, 1, 1)
+    np.testing.assert_allclose(np.asarray(out[0, :5, 0, 0]), [0, 2, 4, 6, 8])
+    np.testing.assert_allclose(np.asarray(out[1, :5, 0, 0]), [1, 3, 5, 7, 9])
+
+
+# ------------------------------------------------------------ tier placement
+def test_initial_placement_recency():
+    st_ = tiers.initial_placement(num_tokens=20, max_tokens=32,
+                                  tier_capacity_tokens=[4, 8, 100])
+    tier = np.asarray(st_.tier_of_token)
+    valid = np.asarray(st_.valid)
+    assert valid.sum() == 20
+    # newest 4 tokens hot, next 8 warm, rest cold
+    assert (tier[16:20] == tiers.HOT).all()
+    assert (tier[8:16] == tiers.WARM).all()
+    assert (tier[:8] == tiers.COLD).all()

@@ -1,0 +1,146 @@
+"""Property tests: PAMattention's online-softmax algebra is EXACT.
+
+The whole paper rests on Alg. 1 being numerically equivalent to monolithic
+softmax attention for any partitioning of the KV set across tiers/banks —
+these tests certify that with hypothesis-driven shapes/splits/scales.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import online_softmax as osm
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, *shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    s=st.integers(2, 96),
+    d=st.sampled_from([4, 8, 16, 32]),
+    nsplit=st.integers(1, 5),
+    logit_scale=st.floats(0.1, 30.0),
+)
+def test_partitioned_equals_monolithic(seed, s, d, nsplit, logit_scale):
+    """Any contiguous partitioning merges to the exact softmax attention."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = _rand(k1, d, scale=logit_scale)
+    k = _rand(k2, s, d)
+    v = _rand(k3, s, d)
+
+    ref = osm.reference_attention(q, k, v)
+
+    # random split points
+    rng = np.random.default_rng(seed)
+    cuts = sorted(rng.choice(np.arange(1, s), size=min(nsplit, s - 1),
+                             replace=False).tolist())
+    bounds = [0] + cuts + [s]
+    ks = [k[a:b] for a, b in zip(bounds[:-1], bounds[1:])]
+    vs = [v[a:b] for a, b in zip(bounds[:-1], bounds[1:])]
+
+    out = osm.attention_from_partitions(q, ks, vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), t=st.integers(1, 9),
+       s=st.integers(1, 16), d=st.sampled_from([4, 8]))
+def test_tree_merge_equals_flat_merge(seed, t, s, d):
+    """Hierarchical RU reduction == single-pass reduction (any topology)."""
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, 3 * t)
+    parts = []
+    for i in range(t):
+        q = _rand(keys[3 * i], d)
+        k = _rand(keys[3 * i + 1], s, d)
+        v = _rand(keys[3 * i + 2], s, d)
+        parts.append(osm.local_attention(q, k, v))
+    stacked = osm.AttnPartial(o=jnp.stack([p.o for p in parts]),
+                              m=jnp.stack([p.m for p in parts]),
+                              l=jnp.stack([p.l for p in parts]))
+    flat = osm.merge_many(stacked)
+    tree = osm.tree_merge(stacked)
+    np.testing.assert_allclose(np.asarray(osm.finalize(flat)),
+                               np.asarray(osm.finalize(tree)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_merge_is_commutative_and_associative():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 9)
+    d = 8
+    parts = [osm.local_attention(_rand(ks[3 * i], d), _rand(ks[3 * i + 1], 7, d),
+                                 _rand(ks[3 * i + 2], 7, d)) for i in range(3)]
+    a, b, c = parts
+    ab_c = osm.merge_partials(osm.merge_partials(a, b), c)
+    a_bc = osm.merge_partials(a, osm.merge_partials(b, c))
+    ba_c = osm.merge_partials(osm.merge_partials(b, a), c)
+    for x in (a_bc, ba_c):
+        np.testing.assert_allclose(np.asarray(osm.finalize(ab_c)),
+                                   np.asarray(osm.finalize(x)),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_empty_partition_is_identity():
+    key = jax.random.PRNGKey(1)
+    d = 16
+    q = _rand(key, d)
+    k = _rand(jax.random.fold_in(key, 1), 9, d)
+    v = _rand(jax.random.fold_in(key, 2), 9, d)
+    part = osm.local_attention(q, k, v)
+    ident = osm.empty_partial(d)
+    merged = osm.merge_partials(part, ident)
+    np.testing.assert_allclose(np.asarray(osm.finalize(merged)),
+                               np.asarray(osm.finalize(part)),
+                               rtol=1e-7, atol=1e-7)
+    # and the other side
+    merged2 = osm.merge_partials(ident, part)
+    np.testing.assert_allclose(np.asarray(osm.finalize(merged2)),
+                               np.asarray(osm.finalize(part)),
+                               rtol=1e-7, atol=1e-7)
+
+
+def test_masked_partition_matches_subset():
+    """A fully-masked tier contributes nothing; a partial mask equals
+    attention over the unmasked subset only."""
+    key = jax.random.PRNGKey(7)
+    d, s = 8, 24
+    q = _rand(key, d)
+    k = _rand(jax.random.fold_in(key, 1), s, d)
+    v = _rand(jax.random.fold_in(key, 2), s, d)
+    mask = jnp.arange(s) % 3 == 0
+    part = osm.local_attention(q, k, v, mask=mask)
+    ref = osm.reference_attention(q, k[mask], v[mask])
+    np.testing.assert_allclose(np.asarray(osm.finalize(part)),
+                               np.asarray(ref), rtol=2e-5, atol=2e-5)
+    # fully masked -> identity under merge
+    dead = osm.local_attention(q, k, v, mask=jnp.zeros(s, bool))
+    merged = osm.merge_partials(part, dead)
+    np.testing.assert_allclose(np.asarray(osm.finalize(merged)),
+                               np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_batched_heads_shapes(seed):
+    """Algebra broadcasts over (B, H) leading dims."""
+    key = jax.random.PRNGKey(seed)
+    B, H, S, d = 2, 4, 33, 16
+    q = _rand(key, B, H, d)
+    k = _rand(jax.random.fold_in(key, 1), B, H, S, d)
+    v = _rand(jax.random.fold_in(key, 2), B, H, S, d)
+    ref = osm.reference_attention(q, k, v)
+    out = osm.attention_from_partitions(
+        q, [k[..., :10, :], k[..., 10:, :]], [v[..., :10, :], v[..., 10:, :]])
+    assert out.shape == (B, H, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,101 @@
+"""Tests for the end-to-end PAMattention step (Alg. 1 orchestration)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import online_softmax as osm
+from repro.core.pam_attention import PAMAttentionConfig, pam_attention_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _setup(seed, S, H, H_kv, d):
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(jax.random.fold_in(key, 0), (H, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (S, H_kv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (S, H_kv, d))
+    tier = jax.random.randint(jax.random.fold_in(key, 3), (S,), 0, 3)
+    imp = jax.random.uniform(jax.random.fold_in(key, 4), (S,))
+    return q, k, v, tier.astype(jnp.int32), imp
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       S=st.integers(8, 64),
+       cfgs=st.sampled_from([(4, 4, 8), (8, 2, 16), (4, 1, 8)]))
+def test_dense_pam_equals_reference(seed, S, cfgs):
+    """With sparsity off, tier-partitioned PAMattention == full attention,
+    regardless of how tokens are scattered across tiers."""
+    H, H_kv, d = cfgs
+    q, k, v, tier, imp = _setup(seed, S, H, H_kv, d)
+    valid = jnp.ones((S,), bool)
+    cfg = PAMAttentionConfig(use_sparsity=False)
+    out = pam_attention_step(q, k, v, tier, valid, imp, cfg)
+
+    rep = H // H_kv
+    kh = jnp.moveaxis(jnp.repeat(k, rep, axis=1), 0, 1)  # (H, S, d)
+    vh = jnp.moveaxis(jnp.repeat(v, rep, axis=1), 0, 1)
+    ref = osm.reference_attention(q, kh, vh)
+    np.testing.assert_allclose(np.asarray(out.out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sparse_pam_equals_topk_subset():
+    """With sparsity on, the result equals full attention over exactly the
+    top-(S/c) most important tokens."""
+    S, H, H_kv, d, c = 64, 4, 2, 8, 8
+    q, k, v, tier, imp = _setup(11, S, H, H_kv, d)
+    valid = jnp.ones((S,), bool)
+    cfg = PAMAttentionConfig(use_sparsity=True, compression=c)
+    out = pam_attention_step(q, k, v, tier, valid, imp, cfg)
+
+    kkeep = S // c
+    sel = np.argsort(-np.asarray(imp))[:kkeep]
+    rep = H // H_kv
+    kh = jnp.moveaxis(jnp.repeat(k, rep, axis=1), 0, 1)
+    vh = jnp.moveaxis(jnp.repeat(v, rep, axis=1), 0, 1)
+    ref = osm.reference_attention(q, kh[:, sel], vh[:, sel])
+    np.testing.assert_allclose(np.asarray(out.out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_step_scores_sum_to_heads_mean_mass():
+    """Step scores are a probability mass scaled by token count: the scores
+    of participating tokens sum to ~S (count scaling of head-mean mass 1)."""
+    S, H, H_kv, d = 32, 4, 4, 8
+    q, k, v, tier, imp = _setup(5, S, H, H_kv, d)
+    valid = jnp.ones((S,), bool)
+    out = pam_attention_step(q, k, v, tier, valid, imp,
+                             PAMAttentionConfig(use_sparsity=False))
+    total = float(jnp.sum(out.step_scores))
+    np.testing.assert_allclose(total, S, rtol=1e-4)
+
+
+def test_importance_updates_toward_attended_tokens():
+    """Tokens receiving attention mass gain importance (context locality
+    feedback loop: eq. (7))."""
+    S, H, H_kv, d = 32, 2, 2, 8
+    q, k, v, tier, _ = _setup(9, S, H, H_kv, d)
+    # make token 17's key strongly aligned with q so it dominates attention
+    k = k.at[17].set(jnp.broadcast_to(q[0] * 5.0, (H_kv, d)))
+    imp = jnp.zeros((S,))
+    valid = jnp.ones((S,), bool)
+    out = pam_attention_step(q, k, v, tier, valid, imp,
+                             PAMAttentionConfig(use_sparsity=False))
+    assert int(jnp.argmax(out.new_importance)) == 17
+
+
+def test_invalid_tokens_excluded():
+    S, H, H_kv, d = 24, 2, 2, 8
+    q, k, v, tier, imp = _setup(3, S, H, H_kv, d)
+    valid = jnp.arange(S) < 10
+    out = pam_attention_step(q, k, v, tier, valid, imp,
+                             PAMAttentionConfig(use_sparsity=False))
+    kh = jnp.moveaxis(k[:10], 0, 1)
+    vh = jnp.moveaxis(v[:10], 0, 1)
+    ref = osm.reference_attention(q, kh, vh)
+    np.testing.assert_allclose(np.asarray(out.out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    assert float(jnp.sum(jnp.where(~valid, out.step_scores, 0.0))) == 0.0

@@ -1,0 +1,79 @@
+"""§Perf variant correctness: every hillclimbing optimization must be
+numerics-preserving (or bounded, for precision changes)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import perf_flags
+from repro.models.attention import chunked_attention, sp_attention
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(autouse=True)
+def _reset_flags():
+    yield
+    perf_flags.set_flags()
+
+
+def _qkv(seed, B=2, S=64, H=8, Hkv=4, d=16):
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(jax.random.fold_in(key, 0), (B, S, H, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, d))
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_sp_attention_matches_chunked(causal):
+    q, k, v = _qkv(0)
+    want = chunked_attention(q, k, v, causal=causal, chunk=16)
+    perf_flags.set_flags("sp_attn")
+    got = sp_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_bf16_probs_bounded_error():
+    q, k, v = _qkv(1)
+    want = chunked_attention(q, k, v, causal=True, chunk=16)
+    perf_flags.set_flags("bf16_probs")
+    got = chunked_attention(q, k, v, causal=True, chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_remat_dots_same_loss_and_grads():
+    from repro.models import transformer as tf
+    from repro.models.config import get_config, reduced
+    cfg = reduced(get_config("qwen3-0.6b"))
+    params = tf.init_params(cfg, jax.random.PRNGKey(2))
+    key = jax.random.PRNGKey(3)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (2, 16), 0, cfg.vocab)}
+
+    loss_fn = lambda p: tf.loss_fn(cfg, p, batch, remat=True)
+    l0, g0 = jax.value_and_grad(loss_fn)(params)
+    perf_flags.set_flags("remat_dots")
+    l1, g1 = jax.value_and_grad(loss_fn)(params)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_moe_pin_is_noop_numerically():
+    import dataclasses
+    from repro.models import moe as moe_mod
+    from repro.models.config import get_config, reduced
+    cfg = reduced(get_config("qwen3-moe-235b-a22b"))
+    mcfg = dataclasses.replace(cfg.moe, capacity_factor=2.0)
+    p = moe_mod.init_moe(jax.random.PRNGKey(4), cfg.d_model, mcfg,
+                         jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 8, cfg.d_model))
+    y0, _ = moe_mod.moe_forward(p, x, mcfg)
+    perf_flags.set_flags("moe_pin")
+    y1, _ = moe_mod.moe_forward(p, x, mcfg)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=1e-6)
