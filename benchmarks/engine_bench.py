@@ -6,6 +6,8 @@ migrations) driving the clock."""
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from repro.perfmodel.model import (PAM_LLAMA_7B, SystemKind, make_system)
@@ -56,4 +58,59 @@ def bench_engine() -> list[tuple]:
              / max(results["pam"]["p50_tpot_s"], 1e-9))
     rows.append(("engine/pam_vs_vllm", 0.0,
                  f"p50_tpot_speedup={ratio:.2f}x"))
+    return rows
+
+
+def bench_decode_wallclock(micro_steps: int = 8) -> dict:
+    """REAL wall-clock decode throughput of the serving engine on the
+    current backend (no latency model): the fused-dispatch fast path's
+    tokens/s and device dispatches per decode step. PAM config, batch 4."""
+    import jax
+    from repro.models import transformer as tf
+    from repro.models.config import get_config, reduced
+    from repro.serving import (PAMManagerConfig, Request, ServingConfig,
+                               ServingEngine)
+
+    cfg = reduced(get_config("pam-llama-7b"))
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    pam_cfg = PAMManagerConfig(
+        max_tokens=96, hot_capacity=16, warm_capacity=32,
+        compression=4, recency_window=4, schedule_interval=2)
+
+    def one_run(micro: int) -> dict:
+        rng = np.random.default_rng(0)
+        eng = ServingEngine(cfg, params,
+                            ServingConfig(max_batch=4, max_len=96,
+                                          pam=pam_cfg, micro_steps=micro))
+        for i in range(8):
+            eng.submit(Request(id=i, prompt=rng.integers(0, cfg.vocab, 24),
+                               max_new_tokens=16))
+        t0 = time.perf_counter()
+        summary = eng.run()
+        wall = time.perf_counter() - t0
+        return {
+            "micro_steps": micro,
+            "wall_s": wall,
+            "decode_tok_s": summary["total_tokens"] / wall,
+            "decode_dispatches": summary["decode_dispatches"],
+            "decode_device_steps": summary["decode_device_steps"],
+            "dispatches_per_step": (summary["decode_dispatches"]
+                                    / max(summary["decode_device_steps"],
+                                          1)),
+        }
+
+    one_run(1)                                 # warm the jit caches
+    one_run(micro_steps)
+    return {"fused": one_run(1), "micro": one_run(micro_steps),
+            "backend": jax.default_backend()}
+
+
+def wallclock_rows(result: dict) -> list[tuple]:
+    rows = []
+    for name in ("fused", "micro"):
+        r = result[name]
+        rows.append((f"engine/wallclock_{name}_k{r['micro_steps']}",
+                     r["wall_s"] * 1e6 / max(r["decode_device_steps"], 1),
+                     f"decode_tok_s={r['decode_tok_s']:.0f} "
+                     f"dispatches_per_step={r['dispatches_per_step']:.3f}"))
     return rows

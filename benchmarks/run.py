@@ -2,11 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV. Run:
     PYTHONPATH=src python -m benchmarks.run [--section figs|kernels|engine|roofline]
+
+``--out BENCH.json`` additionally records the machine-readable bench
+trajectory point for the PR: real decode tokens/s of the serving fast path
+and device dispatches per decode step (the fused-dispatch invariant).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 
 
 def main(argv=None) -> None:
@@ -15,9 +20,15 @@ def main(argv=None) -> None:
                     choices=["all", "figs", "kernels", "engine",
                              "roofline"])
     ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--out", default=None, metavar="BENCH.json",
+                    help="write decode tokens/s + dispatch counts (and all "
+                         "section rows) as JSON — the bench trajectory")
     args = ap.parse_args(argv)
+    if args.out:              # fail fast, not after minutes of benching
+        open(args.out, "a").close()
 
     rows: list[tuple] = []
+    wallclock = None
     if args.section in ("all", "figs"):
         from benchmarks import paper_figs
         rows += paper_figs.fig9_online_slo()
@@ -30,8 +41,10 @@ def main(argv=None) -> None:
         from benchmarks.kernel_bench import bench_kernels
         rows += bench_kernels()
     if args.section in ("all", "engine"):
-        from benchmarks.engine_bench import bench_engine
-        rows += bench_engine()
+        from benchmarks import engine_bench
+        rows += engine_bench.bench_engine()
+        wallclock = engine_bench.bench_decode_wallclock()
+        rows += engine_bench.wallclock_rows(wallclock)
     if args.section in ("all", "roofline"):
         from benchmarks.roofline import roofline_rows
         rows += roofline_rows(args.dryrun_dir)
@@ -39,6 +52,20 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
+
+    if args.out:
+        payload = {
+            "rows": [{"name": n, "us_per_call": us, "derived": d}
+                     for n, us, d in rows],
+        }
+        if wallclock is not None:
+            payload["decode_wallclock"] = wallclock
+            payload["decode_tok_s"] = wallclock["micro"]["decode_tok_s"]
+            payload["dispatches_per_step"] = \
+                wallclock["fused"]["dispatches_per_step"]
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.out}")
 
 
 if __name__ == "__main__":

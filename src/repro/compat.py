@@ -1,0 +1,56 @@
+"""JAX version compatibility shims, applied once on import.
+
+The codebase targets the 0.5+ public APIs; this module backfills them on
+0.4.x so every call site can use the modern names. Importing it anywhere
+(`from repro import compat  # noqa: F401`) is sufficient — all patches are
+idempotent and no-ops on recent jax.
+
+Owned here (do NOT copy-paste shims into individual modules):
+  jax.shard_map            (0.4: jax.experimental.shard_map, check_rep kwarg)
+  jax.set_mesh             (0.4: legacy ``with Mesh(...)`` context)
+  pltpu.CompilerParams     (0.4: pltpu.TPUCompilerParams)
+  abstract_mesh()          (0.4: thread-resources physical mesh)
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+if not hasattr(jax, "shard_map"):           # public alias is 0.5+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def _compat_shard_map(f, **kw):
+        if "check_vma" in kw:               # renamed from check_rep in 0.5
+            kw["check_rep"] = kw.pop("check_vma")
+        return _shard_map(f, **kw)
+
+    jax.shard_map = _compat_shard_map
+
+if not hasattr(jax, "set_mesh"):            # public in 0.5+
+    # 0.4.x: entering the Mesh sets the ambient mesh for shard_map /
+    # sharding constraints without 0.5's strict explicit-sharding mode
+    @contextlib.contextmanager
+    def _set_mesh(mesh):
+        with mesh:
+            yield mesh
+
+    jax.set_mesh = _set_mesh
+
+try:
+    from jax.experimental.pallas import tpu as _pltpu
+    if not hasattr(_pltpu, "CompilerParams"):   # renamed in 0.5
+        _pltpu.CompilerParams = _pltpu.TPUCompilerParams  # type: ignore[attr-defined]
+except ImportError:                             # pragma: no cover
+    pass
+
+
+def abstract_mesh():
+    """Ambient mesh across jax versions: ``jax.sharding.get_abstract_mesh``
+    is 0.5+; fall back to the thread-resources physical mesh (0.4.x)."""
+    try:
+        return jax.sharding.get_abstract_mesh()
+    except AttributeError:                      # pragma: no cover
+        from jax._src import mesh as _mesh_lib
+        return _mesh_lib.thread_resources.env.physical_mesh

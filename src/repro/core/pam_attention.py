@@ -72,21 +72,28 @@ def pam_attention_step(q: jax.Array, k: jax.Array, v: jax.Array,
         sel = sel & (ranks < k_keep)
         participate = sel
 
-    kh = jnp.repeat(k, rep, axis=1)    # (S, H, d)
-    vh = jnp.repeat(v, rep, axis=1)
+    # Grouped GQA scores, computed ONCE: query heads that share a kv head
+    # are contracted against it directly — (H_kv, rep, S), no jnp.repeat
+    # KV expansion, no duplicated QK^T across tiers or the importance mass
+    # (mirrors kernels/flash_decode's query-head grouping).
+    sc = scale if scale is not None else 1.0 / jnp.sqrt(jnp.float32(d))
+    qg = q.reshape(H_kv, rep, d)
+    s_all = jnp.einsum("grd,sgd->grs", qg.astype(jnp.float32),
+                       k.astype(jnp.float32)) * sc       # (H_kv, rep, S)
 
-    # Per-tier local attention (Alg. 1 lines 3-4) — masks select residency.
+    # Per-tier local attention (Alg. 1 lines 3-4) — masks select residency;
+    # each tier's partial reuses the shared score matrix.
     partials = []
     for tier in (HOT, WARM, COLD)[: cfg.num_tiers]:
         mask = participate & (tier_of_token == tier)      # (S,)
-        part = osm.local_attention(
-            q,                                             # (H, d)
-            jnp.moveaxis(kh, 0, 1),                        # (H, S, d)
-            jnp.moveaxis(vh, 0, 1),
-            scale=scale,
-            mask=mask[None, :],
-        )
-        partials.append(part)
+        s = jnp.where(mask[None, None, :], s_all, -jnp.inf)
+        m = jnp.max(s, axis=-1)                           # (H_kv, rep)
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("grs,sgd->grd", p, v.astype(jnp.float32))
+        partials.append(osm.AttnPartial(o=o, m=m, l=l))
 
     stacked = osm.AttnPartial(
         o=jnp.stack([p.o for p in partials]),
@@ -94,23 +101,26 @@ def pam_attention_step(q: jax.Array, k: jax.Array, v: jax.Array,
         l=jnp.stack([p.l for p in partials]),
     )
     merged = osm.tree_merge(stacked)                      # hierarchical RU
-    out = osm.finalize(merged, out_dtype=q.dtype)
+    out = osm.finalize(merged, out_dtype=q.dtype).reshape(H, d)
 
-    # Step scores for eq. (7): exact attention mass per token this step.
-    step_scores = _attention_mass(q, kh, participate, merged, scale)
+    # Step scores for eq. (7): exact attention mass per token this step,
+    # reconstructed from the shared scores and the merged (m, l) stats.
+    step_scores = _attention_mass(s_all, participate, merged)
     new_imp = imp_mod.update_importance(importance, step_scores, lam=cfg.lam)
     return PAMAttentionOutput(out=out, step_scores=step_scores,
                               new_importance=new_imp)
 
 
-def _attention_mass(q, kh, participate, merged: osm.AttnPartial, scale):
-    """Per-token softmax mass (head-mean, count-scaled) for importance."""
-    d = q.shape[-1]
-    sc = scale if scale is not None else 1.0 / jnp.sqrt(jnp.float32(d))
-    s = jnp.einsum("hd,shd->hs", q.astype(jnp.float32),
-                   kh.astype(jnp.float32)) * sc
-    s = jnp.where(participate[None, :], s, -jnp.inf)
+def _attention_mass(s_all, participate, merged: osm.AttnPartial):
+    """Per-token softmax mass (head-mean, count-scaled) for importance.
+
+    s_all: (H_kv, rep, S) precomputed grouped scores; merged m/l:
+    (H_kv, rep) global softmax statistics from the tier merge."""
+    H_kv, rep, S = s_all.shape
+    s = jnp.where(participate[None, None, :], s_all, -jnp.inf)
     m_safe = jnp.where(jnp.isfinite(merged.m), merged.m, 0.0)
-    p = jnp.exp(s - m_safe[:, None]) / jnp.maximum(merged.l, 1e-30)[:, None]
+    p = jnp.exp(s - m_safe[..., None]) / jnp.maximum(merged.l,
+                                                     1e-30)[..., None]
     p = jnp.where(jnp.isfinite(s), p, 0.0)
-    return imp_mod.step_score_from_attn_weights(p, head_axis=0)
+    return imp_mod.step_score_from_attn_weights(p.reshape(H_kv * rep, S),
+                                                head_axis=0)

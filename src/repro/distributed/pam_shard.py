@@ -22,6 +22,9 @@ import math
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat  # noqa: F401  (backfills jax.shard_map on 0.4)
+
 from jax.sharding import Mesh, PartitionSpec as P
 
 
@@ -46,34 +49,36 @@ def make_sequence_sharded_decode_attn(mesh: Mesh, *, axis: str = "model",
         pos = start + jnp.arange(S_loc)                    # global positions
         live = pos[None, :] < kv_lens[:, None]             # (B, S_loc)
 
-        kh = jnp.repeat(k, rep, axis=1)
-        vh = jnp.repeat(v, rep, axis=1)
-        s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
-                       kh.astype(jnp.float32)) * scale
-        s = jnp.where(live[:, None, :], s, -jnp.inf)
+        # grouped (GQA) form: NO jnp.repeat KV expansion — query heads are
+        # contracted against their shared kv head directly
+        qg = q.reshape(B, Hkv, rep, dh)
+        s = jnp.einsum("bgrd,bgsd->bgrs", qg.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        s = jnp.where(live[:, None, None, :], s, -jnp.inf)
 
         # ---- local partial (Alg. 1 Local_Attention) ----------------------
-        m_loc = jnp.max(s, axis=-1)                        # (B, H)
+        m_loc = jnp.max(s, axis=-1)                        # (B, Hkv, rep)
         m_safe = jnp.where(jnp.isfinite(m_loc), m_loc, 0.0)
         p = jnp.exp(s - m_safe[..., None])
-        p = jnp.where(live[:, None, :], p, 0.0)
+        p = jnp.where(live[:, None, None, :], p, 0.0)
         l_loc = jnp.sum(p, axis=-1)
-        o_loc = jnp.einsum("bhs,bhsd->bhd", p, vh.astype(jnp.float32))
+        o_loc = jnp.einsum("bgrs,bgsd->bgrd", p, v.astype(jnp.float32))
 
         # ---- inter-device reduction (Alg. 1 Reduction) --------------------
         m_star = jax.lax.pmax(m_loc, axis)
         m_star_safe = jnp.where(jnp.isfinite(m_star), m_star, 0.0)
         w = jnp.where(jnp.isfinite(m_loc),
-                      jnp.exp(m_loc - m_star_safe), 0.0)   # (B, H)
+                      jnp.exp(m_loc - m_star_safe), 0.0)   # (B, Hkv, rep)
         o = jax.lax.psum(w[..., None] * o_loc, axis)
         l = jax.lax.psum(w * l_loc, axis)
         l_safe = jnp.where(l > 0, l, 1.0)
-        out = (o / l_safe[..., None]).astype(q.dtype)
+        out = (o / l_safe[..., None]).reshape(B, H, dh).astype(q.dtype)
 
         # per-token mass on MY shard, normalized by the global (m*, l)
         p_norm = (p * w[..., None]) / l_safe[..., None]
         n_live = jax.lax.psum(jnp.sum(live, axis=-1), axis)  # (B,)
-        mass = jnp.mean(p_norm, axis=1) * n_live[:, None].astype(jnp.float32)
+        mass = (jnp.mean(p_norm, axis=(1, 2))
+                * n_live[:, None].astype(jnp.float32))
         return out, mass
 
     return jax.shard_map(
@@ -100,7 +105,8 @@ def fused_update_decode(q, k_cache, v_cache, k_new, v_new, kv_lens, *,
     k_new/v_new: (B, Hkv, dh); kv_lens: (B,) pre-append lengths.
     Returns (out, mass, k_cache, v_cache).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.models import perf_flags
+    mesh = perf_flags.abstract_mesh()
     B = q.shape[0]
     dp: tuple | None = tuple(a for a in mesh.axis_names
                              if a in ("pod", "data")) or None

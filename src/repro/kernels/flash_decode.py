@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat  # noqa: F401  (backfills pltpu.CompilerParams on 0.4)
+
 NEG_INF = float(-1e30)
 DEFAULT_BLOCK_S = 512
 
@@ -63,6 +65,7 @@ def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, *,
 def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
                  mask: jax.Array | None = None, *,
                  kv_len: int | None = None,
+                 kv_lens: jax.Array | None = None,
                  scale: float | None = None,
                  block_s: int = DEFAULT_BLOCK_S,
                  interpret: bool = False
@@ -70,6 +73,9 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     """PAMattention local stage. Returns stacked partials over splits.
 
     q: (B, H, d); k, v: (B, H_kv, S, d); mask: (B, S) participation.
+    ``kv_len`` is a static whole-batch length bound; ``kv_lens`` an optional
+    per-sequence (B,) dynamic length (ragged continuous batching) that is
+    folded into the participation mask without re-tracing per length.
     Returns (o, m, l): o (B, H, nsplit, d) fp32 unnormalized, m/l
     (B, H, nsplit) fp32. Merge with ``repro.kernels.ops.merge_decode``.
     """
@@ -84,6 +90,9 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
         mask = jnp.ones((B, S), jnp.int8)
     else:
         mask = mask.astype(jnp.int8)
+    if kv_lens is not None:
+        live = jnp.arange(S)[None, :] < kv_lens[:, None]
+        mask = mask * live.astype(jnp.int8)
 
     block_s = min(block_s, max(S, 8))
     pad = (block_s - S % block_s) % block_s

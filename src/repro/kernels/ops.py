@@ -51,31 +51,88 @@ def merge_decode(o: jax.Array, m: jax.Array, l: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("kv_len", "scale", "block_s",
                                              "interpret"))
-def decode_attention(q, k, v, mask=None, *, kv_len=None, scale=None,
-                     block_s=512, interpret=None):
+def decode_attention(q, k, v, mask=None, *, kv_len=None, kv_lens=None,
+                     scale=None, block_s=512, interpret=None):
     """Single-pool decode attention (local stage + intra-device reduction).
 
-    q: (B, H, d); k/v: (B, H_kv, S, d); mask: (B, S). Returns (B, H, d).
+    q: (B, H, d); k/v: (B, H_kv, S, d); mask: (B, S); kv_lens: optional
+    per-sequence (B,) dynamic lengths. Returns (B, H, d).
     """
     if interpret is None:
         interpret = not _on_tpu()
-    o, m, l = _flash_decode(q, k, v, mask, kv_len=kv_len, scale=scale,
-                            block_s=block_s, interpret=interpret)
+    o, m, l = _flash_decode(q, k, v, mask, kv_len=kv_len, kv_lens=kv_lens,
+                            scale=scale, block_s=block_s,
+                            interpret=interpret)
     return merge_decode(o, m, l, out_dtype=q.dtype)
 
 
-def decode_attention_partial(q, k, v, mask=None, *, kv_len=None, scale=None,
-                             block_s=512, interpret=None) -> osm.AttnPartial:
+def decode_attention_partial(q, k, v, mask=None, *, kv_len=None,
+                             kv_lens=None, scale=None, block_s=512,
+                             interpret=None) -> osm.AttnPartial:
     """Local stage only — returns the merged per-pool partial (for the
     inter-tier / inter-device reduction). Shapes as ``decode_attention``;
     partial fields are (B, H, d) / (B, H)."""
     if interpret is None:
         interpret = not _on_tpu()
-    o, m, l = _flash_decode(q, k, v, mask, kv_len=kv_len, scale=scale,
-                            block_s=block_s, interpret=interpret)
+    o, m, l = _flash_decode(q, k, v, mask, kv_len=kv_len, kv_lens=kv_lens,
+                            scale=scale, block_s=block_s,
+                            interpret=interpret)
     part = osm.AttnPartial(o=jnp.moveaxis(o, 2, 0), m=jnp.moveaxis(m, 2, 0),
                            l=jnp.moveaxis(l, 2, 0))
     return osm.merge_many(part)
+
+
+def masked_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                            participate: jax.Array | None,
+                            kv_lens: jax.Array, *, scale=None,
+                            use_kernel: bool | None = None,
+                            block_s: int = 512
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Repeat-free GQA decode attention + per-token attention mass.
+
+    The single decode-attention entry point for the serving fast path:
+    q: (B, H, d); k/v: (B, H_kv, S, d); participate: (B, S) bool or None
+    (PAM sparsity/tier union); kv_lens: (B,). Returns (out (B, H, d),
+    mass (B, S)) where ``mass`` is the head-mean, count-scaled softmax mass
+    feeding the importance EMA (eq. 7).
+
+    On TPU the local stage runs the Pallas ``flash_decode`` kernel (query
+    heads grouped per kv head) and the mass is reconstructed from the merged
+    (m, l) statistics with one grouped QK^T; elsewhere a single grouped
+    einsum computes scores once and reuses them for both the output and the
+    mass — no ``jnp.repeat`` KV expansion on either path.
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    B, H, d = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    live = jnp.arange(S)[None, :] < kv_lens[:, None]
+    if participate is not None:
+        live = live & participate
+    if not use_kernel:
+        from repro.models.attention import grouped_decode_attn
+        return grouped_decode_attn(q, k, v, live, scale=scale)
+
+    # kernel path: ragged lengths ride the kernel's kv_lens fold so the
+    # participation mask alone is the PAM operand
+    part = decode_attention_partial(q, k, v, participate, kv_lens=kv_lens,
+                                    scale=scale, block_s=min(block_s, S))
+    out = osm.finalize(part, out_dtype=q.dtype)
+    # Per-token mass from the merged (m, l): one grouped QK^T, no repeat.
+    rep = H // Hkv
+    sc = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(B, Hkv, rep, d)
+    s = jnp.einsum("bgrd,bgsd->bgrs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sc
+    s = jnp.where(live[:, None, None, :], s, -jnp.inf)
+    m = part.m.reshape(B, Hkv, rep)
+    l = part.l.reshape(B, Hkv, rep)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None]) / jnp.maximum(l, 1e-30)[..., None]
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    n_live = jnp.sum(live, axis=-1, keepdims=True).astype(jnp.float32)
+    mass = jnp.mean(p, axis=(1, 2)) * n_live
+    return out, mass
 
 
 def pam_decode_attention(q: jax.Array,

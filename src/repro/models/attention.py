@@ -120,11 +120,12 @@ def sp_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     gather instead of multi-GB score/activation reshards. q: (B,S,H,dk),
     k/v: (B,S,Hkv,d*)."""
     from jax.sharding import PartitionSpec as P
+    from repro.models import perf_flags
     B, S, H, dh = q.shape
     Hkv, dv = k.shape[2], v.shape[-1]
     rep = H // Hkv
     scale = 1.0 / math.sqrt(dh)
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = perf_flags.abstract_mesh()
     if "model" in mesh.axis_names:
         dp = tuple(a for a in mesh.axis_names
                    if a in ("pod", "data")) or None
@@ -187,6 +188,38 @@ def attention_prefill(p: AttnParams, x: jax.Array, *, n_heads: int,
     return out, jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1)
 
 
+def grouped_decode_attn(q: jax.Array, k_cache: jax.Array,
+                        v_cache: jax.Array, live: jax.Array,
+                        scale: float | None = None
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Repeat-free GQA masked decode attention.
+
+    q: (B, H, dh); caches (B, Hkv, Smax, dh); live: (B, Smax) bool — the
+    tokens that participate (length mask already folded in). Returns
+    (out (B, H, dh), mass (B, Smax)).
+
+    Query heads are grouped (B, Hkv, rep, dh) against their shared kv head,
+    so QK^T is computed once per kv head with no ``jnp.repeat``
+    materialization of the cache — the same grouping the Pallas
+    ``flash_decode`` kernel uses.
+    """
+    B, H, dh = q.shape
+    Hkv, Smax = k_cache.shape[1], k_cache.shape[2]
+    rep = H // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, Hkv, rep, dh)
+    s = jnp.einsum("bgrd,bgsd->bgrs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    s = jnp.where(live[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bgrs,bgsd->bgrd", p, v_cache.astype(jnp.float32))
+    n_live = jnp.sum(live, axis=-1, keepdims=True).astype(jnp.float32)
+    mass = jnp.mean(p, axis=(1, 2)) * n_live
+    return out.reshape(B, H, dh).astype(q.dtype), mass
+
+
 def dense_decode_attn(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                       kv_lens: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Default decode attention. q: (B, H, dh); caches (B, Hkv, Smax, dh);
@@ -196,21 +229,9 @@ def dense_decode_attn(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     by live-token count) — the per-step score S_i(j) that feeds PAM's
     importance EMA (paper eq. 7). It falls out of the softmax for free.
     """
-    B, H, dh = q.shape
-    Hkv, Smax = k_cache.shape[1], k_cache.shape[2]
-    rep = H // Hkv
-    scale = 1.0 / math.sqrt(dh)
+    Smax = k_cache.shape[2]
     live = jnp.arange(Smax)[None, :] < kv_lens[:, None]          # (B, Smax)
-    kh = jnp.repeat(k_cache, rep, axis=1)                         # (B, H, S, dh)
-    vh = jnp.repeat(v_cache, rep, axis=1)
-    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
-                   kh.astype(jnp.float32)) * scale
-    s = jnp.where(live[:, None, :], s, -jnp.inf)
-    p = jax.nn.softmax(s, axis=-1)
-    p = jnp.where(jnp.isnan(p), 0.0, p)
-    out = jnp.einsum("bhs,bhsd->bhd", p, vh.astype(jnp.float32))
-    mass = jnp.mean(p, axis=1) * kv_lens[:, None].astype(jnp.float32)
-    return out.astype(q.dtype), mass
+    return grouped_decode_attn(q, k_cache, v_cache, live)
 
 
 def attention_decode(p: AttnParams, x: jax.Array, k_cache: jax.Array,

@@ -145,7 +145,7 @@ def _sp_pin(h: jax.Array) -> jax.Array:
         return h
     from jax.sharding import PartitionSpec as P
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = perf_flags.abstract_mesh()
         dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
         return jax.lax.with_sharding_constraint(
             h, P(dp or None, "model", None))
@@ -270,14 +270,24 @@ def loss_fn(cfg: ModelConfig, params: Params, batch: dict[str, jax.Array],
 
 # ============================================================ prefill
 def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
-            max_len: int, *, patches: jax.Array | None = None
+            max_len: int, *, patches: jax.Array | None = None,
+            true_len: jax.Array | None = None
             ) -> tuple[jax.Array, "DecodeCache"]:
     """Batched prompt processing (the paper's NPU prefill phase, §4.3):
     one parallel pass that returns next-token logits AND a filled decode
     cache (KV / latent / SSM state), padded to ``max_len``.
 
     tokens: (B, S) right-aligned prompts, all the same length (the serving
-    engine buckets; ragged support lives there via per-seq lengths)."""
+    engine buckets; ragged support lives there via per-seq lengths).
+
+    ``true_len``: optional dynamic prompt length (scalar or (B,)) when
+    ``tokens`` is right-PADDED to a compile-time bucket (pow-2 padding caps
+    the jit-cache to O(log max_len) entries). Causality guarantees the
+    first ``true_len`` positions are unaffected by padding; the returned
+    logits are taken at position ``true_len - 1`` and cache lengths are set
+    to ``true_len``, so stale padded K/V past it is dead and overwritten by
+    subsequent decode appends. Only valid for positional-cache families
+    (attention); SSM/hybrid running state would absorb the padding."""
     B, S = tokens.shape
     x = params["embed"][tokens]
     n_prefix = 0
@@ -288,8 +298,15 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
     Sfull = S + n_prefix
     pad = max_len - Sfull
     assert pad >= 0, (max_len, Sfull)
+    if true_len is not None and cfg.family in ("ssm", "hybrid"):
+        raise ValueError("bucketed prefill (true_len) requires a "
+                         "positional cache; SSM state absorbs padding")
     cache = init_decode_cache(cfg, B, max_len)
-    lens = jnp.full((B,), Sfull, jnp.int32)
+    if true_len is None:
+        lens = jnp.full((B,), Sfull, jnp.int32)
+    else:
+        lens = jnp.broadcast_to(jnp.asarray(true_len, jnp.int32),
+                                (B,)) + n_prefix
 
     def pad_seq(arr, axis):
         widths = [(0, 0)] * arr.ndim
@@ -385,7 +402,12 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
     x = rms_norm(x, params["final_norm"], cfg.rms_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = jnp.einsum("bd,dv->bv", x[:, -1], head)
+    if true_len is None:
+        last = x[:, -1]
+    else:   # last REAL token of each (possibly bucket-padded) prompt
+        last = jnp.take_along_axis(x, (lens - 1)[:, None, None],
+                                   axis=1)[:, 0]
+    logits = jnp.einsum("bd,dv->bv", last, head)
     return logits, cache._replace(lengths=lens)
 
 
@@ -408,9 +430,11 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int
     L = cfg.n_layers
     z = lambda *s: jnp.zeros(s, dtype)
     zf = lambda *s: jnp.zeros(s, jnp.float32)
-    k = v = z(0)
-    ckv = krope = z(0)
-    conv = state = z(0)
+    # distinct arrays per field: a shared size-0 buffer would be donated
+    # twice by the serving engine's donated decode dispatch
+    k, v = z(0), z(0)
+    ckv, krope = z(0), z(0)
+    conv, state = z(0), z(0)
     if cfg.family in ("dense", "vlm"):
         k = z(L, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
         v = z(L, batch, cfg.n_kv_heads, max_len, cfg.head_dim)

@@ -6,15 +6,31 @@ scheduler over CUDA graphs); *hardware timing* is injectable — pass a
 ``latency_model`` (see ``repro.perfmodel``) to account each step at the
 modeled speed of a PAM / L-PIM / vLLM-offloading system, which is exactly
 the paper's simulator methodology. Without one, wall-clock is used.
+
+Decode fast path
+----------------
+The whole per-step PAM pipeline — participation mask, masked decode step,
+step-score -> importance EMA, tier-read/hit-rate counters, Alg. 2 (under a
+``schedule_interval`` cond) and greedy sampling — is ONE ``jax.jit`` with
+``donate_argnums`` for the KV cache, the PAM state and the token vector:
+a decode step is a single device dispatch with zero cache copies, and the
+host only reads back a small ``StepBufs`` stats/tokens struct. Tokens stay
+on device between steps (the sampled token feeds the next dispatch without
+a host round-trip), ``run()`` consumes step *t-1*'s buffers while step *t*
+runs (async dispatch), and ``micro_steps > 1`` wraps a ``lax.fori_loop``
+micro-loop around the fused body so the no-EOS benchmark path visits the
+host only once every k steps. Prefill lengths are bucketed to powers of
+two (capping jit-cache blowup) and each admission commits cache scatter +
+PAM placement + token seed in one donated dispatch.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import time
-from functools import partial
-from typing import Any, Callable, Optional
+from typing import Any, NamedTuple, Optional, Callable
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +38,7 @@ import numpy as np
 
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
+from repro.serving import pam_manager as pm
 from repro.serving.pam_manager import (PAMManager, PAMManagerConfig,
                                        PAMState, init_pam_state,
                                        make_masked_decode_attn,
@@ -44,6 +61,7 @@ class RequestState:
     status: str = WAITING
     slot: int = -1
     outputs: list[int] = dataclasses.field(default_factory=list)
+    planned: int = 0                   # tokens dispatched (>= len(outputs))
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     token_times: list[float] = dataclasses.field(default_factory=list)
@@ -55,12 +73,149 @@ class ServingConfig:
     max_len: int = 256
     eos_token: int = -1                # -1: run to max_new_tokens
     pam: Optional[PAMManagerConfig] = None   # None -> dense baseline
+    micro_steps: int = 1               # decode steps fused per dispatch
+                                       # (>1 needs eos_token == -1)
+    bucket_prefill: bool = True        # pow-2 prompt-length buckets
+
+
+class StepBufs(NamedTuple):
+    """Per-dispatch device->host readback: k fused decode steps' tokens and
+    stats. Small — the only thing the host ever copies back per step."""
+    tokens: jax.Array       # (k, B) int32 greedy samples per fused step
+    tier_reads: jax.Array   # (k, 3) int32 participating tokens per tier
+    hit_rate: jax.Array     # (k,)   f32 context-locality hit rate
+    moved: jax.Array        # (k,)   int32 Alg. 2 migrations this step
+    lengths: jax.Array      # (k, B) int32 post-step cache lengths
+
+
+# ---------------------------------------------------- shared jit builders
+# Compiled executables are keyed by (model config, PAM config, shapes) at
+# module level, NOT per engine instance: constructing a second engine with
+# the same configuration reuses the compiled fused step instead of paying
+# compile again (configs are frozen dataclasses, hence hashable).
+
+def _fused_decode_body(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
+                       smax: int, params, tokens, cache, pam_state, active):
+    """ONE decode step of the full PAM pipeline, pure & traceable:
+    participation -> masked decode -> stats -> observe -> argmax."""
+    lengths = cache.lengths + active.astype(jnp.int32)
+    if pcfg is not None:
+        participate = pm.participation_mask(
+            pcfg, pam_state.importance, lengths)
+    else:
+        participate = jnp.arange(smax)[None, :] < lengths[:, None]
+    d_fn = make_masked_decode_attn(participate)
+    l_fn = make_masked_latent_attn(participate)
+    old_lens = cache.lengths
+    logits, cache, scores = tf.decode_step(
+        cfg, params, tokens, cache, decode_attn_fn=d_fn,
+        latent_attn_fn=l_fn)
+    # inactive slots: freeze their lengths
+    cache = cache._replace(
+        lengths=jnp.where(active, cache.lengths, old_lens))
+
+    if pcfg is not None:
+        read_mask = participate & active[:, None]
+        tier_reads = pm.tier_read_counts_of(pam_state.tier, read_mask)
+        hit = pm.hit_rate_of(pam_state.last_hot, participate)
+        if scores is None:     # attention-free: recency-only scores
+            scores = (jnp.arange(smax)[None, :]
+                      == (cache.lengths - 1)[:, None]).astype(jnp.float32)
+        before = pam_state.moved_tokens
+        pam_state = pm.observe_update(pcfg, pam_state, scores,
+                                      cache.lengths, participate)
+        moved = pam_state.moved_tokens - before
+    else:
+        tier_reads = jnp.zeros((3,), jnp.int32)
+        hit = jnp.zeros((), jnp.float32)
+        moved = jnp.zeros((), jnp.int32)
+
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    tokens = jnp.where(active, nxt, tokens)
+    return tokens, cache, pam_state, (tier_reads, hit, moved, cache.lengths)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_decode_fn(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
+                     smax: int, batch: int, k: int):
+    """Fused decode dispatch running ``k`` steps on device. Cache, PAM
+    state and the token vector are DONATED — zero per-step copies."""
+    def run_k(params, tokens, cache, pam_state, active):
+        bufs = StepBufs(
+            tokens=jnp.zeros((k, batch), jnp.int32),
+            tier_reads=jnp.zeros((k, 3), jnp.int32),
+            hit_rate=jnp.zeros((k,), jnp.float32),
+            moved=jnp.zeros((k,), jnp.int32),
+            lengths=jnp.zeros((k, batch), jnp.int32))
+
+        def step_i(i, carry):
+            tokens, cache, pam_state, bufs = carry
+            tokens, cache, pam_state, (reads, hit, moved, lens) = \
+                _fused_decode_body(cfg, pcfg, smax, params, tokens, cache,
+                                   pam_state, active)
+            bufs = StepBufs(
+                tokens=bufs.tokens.at[i].set(tokens),
+                tier_reads=bufs.tier_reads.at[i].set(reads),
+                hit_rate=bufs.hit_rate.at[i].set(hit),
+                moved=bufs.moved.at[i].set(moved),
+                lengths=bufs.lengths.at[i].set(lens))
+            return tokens, cache, pam_state, bufs
+
+        carry = (tokens, cache, pam_state, bufs)
+        if k == 1:
+            carry = step_i(0, carry)
+        else:
+            carry = jax.lax.fori_loop(0, k, step_i, carry)
+        return carry
+
+    return jax.jit(run_k, donate_argnums=(1, 2, 3))
+
+
+@functools.lru_cache(maxsize=None)
+def _prefill_fn(cfg: ModelConfig, smax: int):
+    # one jit per (cfg, smax); jax retraces per prompt-bucket shape
+    # SSM/hybrid prompts are never padded (bucket == exact length),
+    # so the dynamic-length machinery is skipped entirely
+    exact = cfg.family in ("ssm", "hybrid")
+
+    @jax.jit
+    def pre(params, tokens, true_len):
+        logits, cache = tf.prefill(cfg, params, tokens, smax,
+                                   true_len=None if exact else true_len)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    return pre
+
+
+@functools.lru_cache(maxsize=None)
+def _admit_commit_fn(pcfg: Optional[PAMManagerConfig]):
+    """One donated dispatch per admission: scatter the prefilled sub-cache
+    into the batch cache, seed the device token vector and place the
+    sequence's initial tier layout."""
+    def commit(cache, pam_state, tokens_dev, sub, slot, length, first):
+        def put(full, one):
+            if full.ndim == 0 or full.size == 0:
+                return full
+            if full.ndim == 1:                     # lengths (B,)
+                return full.at[slot].set(one[0])
+            return full.at[:, slot].set(one[:, 0])  # (L, B, ...)
+        cache = jax.tree.map(put, cache, sub)
+        tokens_dev = tokens_dev.at[slot].set(first)
+        if pcfg is not None:
+            pam_state = pm.place_prefill_state(pcfg, pam_state, slot,
+                                               length)
+        return cache, pam_state, tokens_dev
+
+    return jax.jit(commit, donate_argnums=(0, 1, 2))
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, scfg: ServingConfig,
                  latency_model: Optional[Callable[[dict], float]] = None):
         assert cfg.has_decode, f"{cfg.name} is encoder-only"
+        if scfg.micro_steps > 1 and scfg.eos_token != -1:
+            raise ValueError("micro_steps > 1 requires eos_token == -1 "
+                             "(EOS needs a host check every step)")
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
@@ -76,41 +231,42 @@ class ServingEngine:
         self.requests: dict[int, RequestState] = {}
         self.waiting: collections.deque[int] = collections.deque()
         self.slots: list[Optional[int]] = [None] * B
-        self.last_token = np.zeros((B,), np.int32)
+        self.tokens_dev = jnp.zeros((B,), jnp.int32)  # lives on device
         self.steps = 0
+        # fast-path observability: one fused dispatch should serve one (or
+        # k) decode steps — asserted by tests and reported by benchmarks
+        self.decode_dispatches = 0
+        self.decode_device_steps = 0
 
-        self._decode_jit = self._build_decode()
-        self._prefill_jit: dict[int, Any] = {}   # keyed by prompt length
+        self._micro_jits: dict[int, Any] = {}    # keyed by fused step count
+        self._prefill_jit: dict[int, Any] = {}   # keyed by prompt bucket
+        self._admit_jit = _admit_commit_fn(self.pam_cfg)
 
     # ------------------------------------------------------------ builders
-    def _build_decode(self):
-        cfg = self.cfg
+    def _get_micro(self, k: int):
+        """Fused decode dispatch for ``k`` steps, from the shared cache."""
+        if k not in self._micro_jits:
+            self._micro_jits[k] = _fused_decode_fn(
+                self.cfg, self.pam_cfg, self.scfg.max_len,
+                self.scfg.max_batch, k)
+        return self._micro_jits[k]
 
-        @jax.jit
-        def step(params, tokens, cache, participate, active):
-            d_fn = make_masked_decode_attn(participate)
-            l_fn = make_masked_latent_attn(participate)
-            old_lens = cache.lengths
-            logits, cache, scores = tf.decode_step(
-                cfg, params, tokens, cache, decode_attn_fn=d_fn,
-                latent_attn_fn=l_fn)
-            # inactive slots: freeze their lengths
-            cache = cache._replace(
-                lengths=jnp.where(active, cache.lengths, old_lens))
-            return logits, cache, scores
+    def _bucket_len(self, s_len: int) -> int:
+        """Pow-2 prefill buckets cap the jit cache at O(log max_len)
+        entries (SSM/hybrid running state can't absorb padding: exact)."""
+        if (not self.scfg.bucket_prefill
+                or self.cfg.family in ("ssm", "hybrid")):
+            return s_len
+        b = 1
+        while b < s_len:
+            b *= 2
+        return min(b, self.scfg.max_len)
 
-        return step
-
-    def _prefill_for_len(self, s_len: int):
-        if s_len not in self._prefill_jit:
-            cfg, smax = self.cfg, self.scfg.max_len
-
-            @jax.jit
-            def pre(params, tokens):
-                return tf.prefill(cfg, params, tokens, smax)
-
-            self._prefill_jit[s_len] = pre
-        return self._prefill_jit[s_len]
+    def _prefill_for_len(self, bucket: int):
+        if bucket not in self._prefill_jit:
+            self._prefill_jit[bucket] = _prefill_fn(
+                self.cfg, self.scfg.max_len)
+        return self._prefill_jit[bucket]
 
     # ------------------------------------------------------------ lifecycle
     def submit(self, req: Request) -> None:
@@ -119,15 +275,6 @@ class ServingEngine:
 
     def _free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
-
-    def _scatter_cache(self, sub: tf.DecodeCache, slot: int) -> None:
-        def put(full, one):
-            if full.ndim == 0 or full.size == 0:
-                return full
-            if full.ndim == 1:                     # lengths (B,)
-                return full.at[slot].set(one[0])
-            return full.at[:, slot].set(one[:, 0])  # (L, B, ...)
-        self.cache = jax.tree.map(put, self.cache, sub)
 
     def _admit(self) -> int:
         """Prefill-priority admission (paper §4.2.3). Returns prompt tokens
@@ -142,25 +289,29 @@ class ServingEngine:
             if s_len + rs.request.max_new_tokens > self.scfg.max_len:
                 raise ValueError(f"request {rid} exceeds max_len")
             slot = free.pop(0)
-            pre = self._prefill_for_len(s_len)
-            logits, sub = pre(self.params, jnp.asarray(prompt[None]))
-            self._scatter_cache(sub, slot)
-            first = int(jnp.argmax(logits[0]))
+            bucket = self._bucket_len(s_len)
+            padded = np.zeros((bucket,), np.int32)
+            padded[:s_len] = prompt
+            pre = self._prefill_for_len(bucket)
+            first_dev, sub = pre(self.params, jnp.asarray(padded[None]),
+                                 jnp.int32(s_len))
+            self.cache, self.pam_state, self.tokens_dev = self._admit_jit(
+                self.cache, self.pam_state, self.tokens_dev, sub,
+                jnp.int32(slot), jnp.int32(s_len), first_dev[0])
+            first = int(first_dev[0])
             rs.status, rs.slot = RUNNING, slot
             rs.outputs.append(first)
+            rs.planned = 1
             rs.first_token_time = None     # stamped after latency charge
             self.slots[slot] = rid
-            self.last_token[slot] = first
-            if self.mgr:
-                self.pam_state = self.mgr.place_prefill(
-                    self.pam_state, jnp.int32(slot), jnp.int32(s_len))
             admitted_tokens += s_len
         return admitted_tokens
 
     # ------------------------------------------------------------ stepping
     def step(self) -> dict[str, Any]:
         """One engine iteration: admission (prefill) + one decode step for
-        all running sequences. Returns step stats."""
+        all running sequences — a single fused device dispatch. Returns
+        step stats."""
         t0 = time.perf_counter()
         prefill_tokens = self._admit()
 
@@ -170,41 +321,24 @@ class ServingEngine:
                                  "tier_reads": np.zeros(3, np.int64),
                                  "moved_tokens": 0}
         if active_np.any():
-            # post-append lengths: the step writes the new token at
-            # position ``lengths`` before attending, so it must participate
-            lengths = self.cache.lengths + jnp.asarray(active_np, jnp.int32)
+            fused = self._get_micro(1)
+            self.tokens_dev, self.cache, self.pam_state, bufs = fused(
+                self.params, self.tokens_dev, self.cache, self.pam_state,
+                jnp.asarray(active_np))
+            self.decode_dispatches += 1
+            self.decode_device_steps += 1
             if self.mgr:
-                participate = self.mgr.participation(self.pam_state, lengths)
-            else:
-                Smax = self.scfg.max_len
-                participate = (jnp.arange(Smax)[None, :]
-                               < lengths[:, None])
-            active = jnp.asarray(active_np)
-            tokens = jnp.asarray(self.last_token)
-            logits, self.cache, scores = self._decode_jit(
-                self.params, tokens, self.cache, participate, active)
-
-            if self.mgr:
-                stats["tier_reads"] = np.asarray(self.mgr.tier_read_counts(
-                    self.pam_state, participate & active[:, None]))
-                stats["hit_rate"] = float(self.mgr.hit_rate(
-                    self.pam_state, participate))
-                before_moved = int(self.pam_state.moved_tokens)
-                if scores is None:     # attention-free: recency-only scores
-                    Smax = self.scfg.max_len
-                    scores = (jnp.arange(Smax)[None, :]
-                              == (self.cache.lengths - 1)[:, None]
-                              ).astype(jnp.float32)
-                self.pam_state = self.mgr.observe(
-                    self.pam_state, scores, self.cache.lengths, participate)
-                stats["moved_tokens"] = \
-                    int(self.pam_state.moved_tokens) - before_moved
-
-            nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+                stats["tier_reads"] = np.asarray(
+                    bufs.tier_reads[0], dtype=np.int64)
+                stats["hit_rate"] = float(bufs.hit_rate[0])
+                stats["moved_tokens"] = int(bufs.moved[0])
+            stats["batch_lengths"] = np.asarray(bufs.lengths[0])
+            nxt = np.asarray(bufs.tokens[0])
             self._emit_tokens(nxt, active_np)
+        else:
+            stats["batch_lengths"] = np.asarray(self.cache.lengths)
 
         # --- timing: modeled or wall-clock --------------------------------
-        stats["batch_lengths"] = np.asarray(self.cache.lengths)
         if self.latency_model is not None:
             dt = float(self.latency_model(stats))
         else:
@@ -222,7 +356,7 @@ class ServingEngine:
             rs = self.requests[rid]
             tok = int(nxt[slot])
             rs.outputs.append(tok)
-            self.last_token[slot] = tok
+            rs.planned = len(rs.outputs)
             done = (len(rs.outputs) >= rs.request.max_new_tokens
                     or tok == self.scfg.eos_token)
             if done:
@@ -243,11 +377,95 @@ class ServingEngine:
 
     def run(self, max_steps: int = 10_000) -> dict[str, Any]:
         """Run until all submitted requests finish. Returns summary."""
+        if self.scfg.micro_steps > 1:
+            return self._run_fast(max_steps)
         for _ in range(max_steps):
             if not self.waiting and all(s is None for s in self.slots):
                 break
             self.step()
         return self.summary()
+
+    # ------------------------------------------------- pipelined fast path
+    def _run_fast(self, max_steps: int) -> dict[str, Any]:
+        """No-EOS benchmark loop: multi-step fused micro-loop + async
+        dispatch. The host consumes step *t-1*'s token/stat buffers while
+        step *t* runs on device; request lifecycle (doneness, slot frees,
+        admission) advances from *planned* token counts, which the no-EOS
+        contract makes known without reading token values."""
+        micro = self.scfg.micro_steps
+        pending: Optional[tuple] = None
+        self._wall_anchor = time.perf_counter()
+        while self.steps < max_steps:
+            if not self.waiting and all(s is None for s in self.slots):
+                break
+            prefill_tokens = self._admit()
+            pairs = [(i, rid) for i, rid in enumerate(self.slots)
+                     if rid is not None]
+            if not pairs:
+                break   # nothing runnable (all waiting requests invalid)
+            remaining = min(self.requests[rid].request.max_new_tokens
+                            - self.requests[rid].planned
+                            for _, rid in pairs)
+            k = 1       # largest pow-2 micro-count no request overshoots
+            while k * 2 <= min(remaining, micro):
+                k *= 2
+            active_np = np.zeros((self.scfg.max_batch,), bool)
+            for slot, _ in pairs:
+                active_np[slot] = True
+            fused = self._get_micro(k)
+            self.tokens_dev, self.cache, self.pam_state, bufs = fused(
+                self.params, self.tokens_dev, self.cache, self.pam_state,
+                jnp.asarray(active_np))
+            self.decode_dispatches += 1
+            self.decode_device_steps += k
+            self.steps += k
+            # advance lifecycle from planned counts — no token readback
+            for slot, rid in pairs:
+                rs = self.requests[rid]
+                rs.planned += k
+                if rs.planned >= rs.request.max_new_tokens:
+                    rs.status = DONE
+                    self.slots[slot] = None
+            if pending is not None:
+                self._consume(pending)      # overlaps with this dispatch
+            pending = (bufs, pairs, k, prefill_tokens)
+        if pending is not None:
+            self._consume(pending)
+        return self.summary()
+
+    def _consume(self, rec: tuple) -> None:
+        """Drain one dispatch's StepBufs: append token values, charge the
+        latency model per fused sub-step, stamp times."""
+        bufs, pairs, k, prefill_tokens = rec
+        toks = np.asarray(bufs.tokens)              # blocks until done
+        reads = np.asarray(bufs.tier_reads, dtype=np.int64)
+        moved = np.asarray(bufs.moved)
+        lens = np.asarray(bufs.lengths)
+        hits = np.asarray(bufs.hit_rate)
+        if self.latency_model is None:
+            wall = time.perf_counter()
+            dt_wall = (wall - self._wall_anchor) / k
+            self._wall_anchor = wall
+        for j in range(k):
+            stats = {"prefill_tokens": prefill_tokens if j == 0 else 0,
+                     "active": len(pairs), "tier_reads": reads[j],
+                     "moved_tokens": int(moved[j]),
+                     "batch_lengths": lens[j]}
+            if self.mgr:
+                stats["hit_rate"] = float(hits[j])
+            dt = (float(self.latency_model(stats))
+                  if self.latency_model is not None else dt_wall)
+            self.clock += dt
+            for slot, rid in pairs:
+                rs = self.requests[rid]
+                rs.outputs.append(int(toks[j, slot]))
+                if rs.first_token_time is None:
+                    rs.first_token_time = self.clock
+                while len(rs.token_times) < len(rs.outputs):
+                    rs.token_times.append(self.clock)
+                if (len(rs.outputs) >= rs.request.max_new_tokens
+                        and rs.finish_time is None):
+                    rs.finish_time = self.clock
 
     # ------------------------------------------------------------ metrics
     def summary(self) -> dict[str, Any]:
@@ -266,6 +484,8 @@ class ServingEngine:
             "p50_tpot_s": float(np.percentile(tpots, 50)) if tpots else 0.0,
             "p99_tpot_s": float(np.percentile(tpots, 99)) if tpots else 0.0,
             "steps": self.steps,
+            "decode_dispatches": self.decode_dispatches,
+            "decode_device_steps": self.decode_device_steps,
         }
 
     def slo_attainment(self, slo_s: float) -> float:

@@ -68,26 +68,15 @@ def init_pam_state(batch: int, max_tokens: int) -> PAMState:
 # --------------------------------------------------------------- attention
 def make_masked_decode_attn(participate: jax.Array):
     """Decode-attn factory: masks non-participating tokens (sparsity +
-    tier-partition union). participate: (B, Smax) traced array."""
-    import math as _math
+    tier-partition union). participate: (B, Smax) traced array.
 
+    Delegates to the repeat-free grouped GQA path (``ops.
+    masked_decode_attention``): Pallas ``flash_decode`` + merge on TPU, a
+    single grouped einsum elsewhere — no ``jnp.repeat`` of the KV cache."""
     def d_fn(q, k_cache, v_cache, kv_lens):
-        B, H, dh = q.shape
-        Hkv, Smax = k_cache.shape[1], k_cache.shape[2]
-        rep = H // Hkv
-        scale = 1.0 / _math.sqrt(dh)
-        live = (jnp.arange(Smax)[None, :] < kv_lens[:, None]) & participate
-        kh = jnp.repeat(k_cache, rep, axis=1)
-        vh = jnp.repeat(v_cache, rep, axis=1)
-        s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
-                       kh.astype(jnp.float32)) * scale
-        s = jnp.where(live[:, None, :], s, -jnp.inf)
-        p = jax.nn.softmax(s, axis=-1)
-        p = jnp.where(jnp.isnan(p), 0.0, p)
-        out = jnp.einsum("bhs,bhsd->bhd", p, vh.astype(jnp.float32))
-        n_live = jnp.sum(live, axis=-1, keepdims=True).astype(jnp.float32)
-        mass = jnp.mean(p, axis=1) * n_live
-        return out.astype(q.dtype), mass
+        from repro.kernels import ops as kops
+        return kops.masked_decode_attention(q, k_cache, v_cache,
+                                            participate, kv_lens)
 
     return d_fn
 
@@ -112,6 +101,111 @@ def make_masked_latent_attn(participate: jax.Array):
     return l_fn
 
 
+# ------------------------------------------------------- pure state updates
+# Module-level pure functions so the serving engine can inline the whole
+# per-step PAM pipeline (participation -> decode -> observe -> stats) into
+# ONE fused, donated jit. ``PAMManager`` methods below are thin jit'd
+# wrappers around these for standalone use.
+
+def participation_mask(cfg: PAMManagerConfig, importance: jax.Array,
+                       lengths: jax.Array) -> jax.Array:
+    """(B, Smax) bool. Top-(len/c) by importance + recency pins."""
+    B, Smax = importance.shape
+    valid = jnp.arange(Smax)[None, :] < lengths[:, None]
+    if not cfg.use_sparsity:
+        return valid
+    budget = jnp.maximum(lengths // cfg.compression, 1)     # (B,)
+    pos = jnp.arange(Smax)[None, :]
+    recent = (pos >= (lengths - cfg.recency_window)[:, None]) & valid
+    score = jnp.where(valid, importance, -jnp.inf)
+    score = jnp.where(recent, jnp.inf, score)
+    ranks = jnp.argsort(jnp.argsort(-score, axis=-1), axis=-1)
+    sel = (ranks < budget[:, None]) & valid
+    return sel | recent
+
+
+def observe_update(cfg: PAMManagerConfig, state: PAMState,
+                   scores: jax.Array, lengths: jax.Array,
+                   participate: jax.Array) -> PAMState:
+    """After a decode step: EMA update + hot append + capacity cascade
+    + (every interval) Algorithm 2."""
+    B, Smax = state.importance.shape
+    valid = jnp.arange(Smax)[None, :] < lengths[:, None]
+
+    imp = imp_mod.update_importance(state.importance,
+                                    jnp.where(valid, scores, 0.0),
+                                    lam=cfg.lam)
+    # new token (at index lengths-1 after the model appended) -> HOT,
+    # seeded with the current max importance (recency prior).
+    bidx = jnp.arange(B)
+    new_pos = jnp.maximum(lengths - 1, 0)
+    tier = state.tier.at[bidx, new_pos].set(HOT)
+    imp = imp.at[bidx, new_pos].set(
+        jnp.maximum(imp[bidx, new_pos], jnp.max(imp, axis=-1)))
+
+    if cfg.use_tiering:
+        # capacity cascade: demote least-important over-capacity tokens
+        tier = _enforce_capacity(imp, tier, valid, HOT,
+                                 cfg.hot_capacity, WARM)
+        tier = _enforce_capacity(imp, tier, valid, WARM,
+                                 cfg.warm_capacity, COLD)
+
+        def run_sched(im, ti, va):
+            new_t, moved, _ = scheduling.schedule_kv(im, ti, va,
+                                                     cfg.schedule)
+            return new_t, jnp.sum(moved)
+
+        def maybe_schedule(ti):
+            new_t, moved = jax.vmap(run_sched)(imp, ti, valid)
+            return new_t, jnp.sum(moved)
+
+        do = (state.step + 1) % cfg.schedule_interval == 0
+        tier, moved = jax.lax.cond(
+            do, maybe_schedule,
+            lambda ti: (ti, jnp.zeros((), jnp.int32)), tier)
+    else:
+        moved = jnp.zeros((), jnp.int32)
+
+    return PAMState(importance=imp, tier=tier, step=state.step + 1,
+                    moved_tokens=state.moved_tokens + moved,
+                    last_hot=participate)
+
+
+def place_prefill_state(cfg: PAMManagerConfig, state: PAMState,
+                        slot: jax.Array, length: jax.Array) -> PAMState:
+    """Initial placement for one admitted sequence (recency fill-down,
+    §4.3): tail -> HOT, middle -> DDR, head -> SSD."""
+    Smax = state.importance.shape[1]
+    idx = jnp.arange(Smax)
+    valid = idx < length
+    dist = jnp.maximum(length - 1 - idx, 0)
+    tier = jnp.where(dist < cfg.hot_capacity, HOT,
+                     jnp.where(dist < cfg.hot_capacity
+                               + cfg.warm_capacity, WARM, COLD))
+    imp = jnp.where(valid, 1.0 / (1.0 + dist.astype(jnp.float32)), 0.0)
+    return state._replace(
+        importance=state.importance.at[slot].set(imp),
+        tier=state.tier.at[slot].set(tier.astype(jnp.int32)),
+        last_hot=state.last_hot.at[slot].set(False),
+    )
+
+
+def tier_read_counts_of(tier: jax.Array, participate: jax.Array
+                        ) -> jax.Array:
+    """(3,) tokens read per tier this step — bytes = counts x token
+    bytes; drives the per-tier roofline in the perf model."""
+    return jnp.stack([jnp.sum(participate & (tier == t))
+                      for t in (HOT, WARM, COLD)])
+
+
+def hit_rate_of(last_hot: jax.Array, participate: jax.Array) -> jax.Array:
+    """Context locality: fraction of this step's working set that was
+    also in the previous step's (paper §3.2)."""
+    inter = jnp.sum(last_hot & participate, axis=-1)
+    denom = jnp.maximum(jnp.sum(participate, axis=-1), 1)
+    return jnp.mean(inter / denom)
+
+
 # ------------------------------------------------------------------ manager
 class PAMManager:
     """Stateless-jit wrapper around PAMState transitions."""
@@ -123,107 +217,28 @@ class PAMManager:
     @partial(jax.jit, static_argnames=("self",))
     def participation(self, state: PAMState, lengths: jax.Array
                       ) -> jax.Array:
-        """(B, Smax) bool. Top-(len/c) by importance + recency pins."""
-        cfg = self.cfg
-        B, Smax = state.importance.shape
-        valid = jnp.arange(Smax)[None, :] < lengths[:, None]
-        if not cfg.use_sparsity:
-            return valid
-        budget = jnp.maximum(lengths // cfg.compression, 1)     # (B,)
-        pos = jnp.arange(Smax)[None, :]
-        recent = (pos >= (lengths - cfg.recency_window)[:, None]) & valid
-        score = jnp.where(valid, state.importance, -jnp.inf)
-        score = jnp.where(recent, jnp.inf, score)
-        ranks = jnp.argsort(jnp.argsort(-score, axis=-1), axis=-1)
-        sel = (ranks < budget[:, None]) & valid
-        return sel | recent
+        return participation_mask(self.cfg, state.importance, lengths)
 
     # -- steps 3+4: importance update, append, schedule --------------------
     @partial(jax.jit, static_argnames=("self",))
     def observe(self, state: PAMState, scores: jax.Array,
                 lengths: jax.Array, participate: jax.Array) -> PAMState:
-        """After a decode step: EMA update + hot append + capacity cascade
-        + (every interval) Algorithm 2."""
-        cfg = self.cfg
-        B, Smax = state.importance.shape
-        valid = jnp.arange(Smax)[None, :] < lengths[:, None]
-
-        imp = imp_mod.update_importance(state.importance,
-                                        jnp.where(valid, scores, 0.0),
-                                        lam=cfg.lam)
-        # new token (at index lengths-1 after the model appended) -> HOT,
-        # seeded with the current max importance (recency prior).
-        bidx = jnp.arange(B)
-        new_pos = jnp.maximum(lengths - 1, 0)
-        tier = state.tier.at[bidx, new_pos].set(HOT)
-        imp = imp.at[bidx, new_pos].set(
-            jnp.maximum(imp[bidx, new_pos], jnp.max(imp, axis=-1)))
-
-        if cfg.use_tiering:
-            # capacity cascade: demote least-important over-capacity tokens
-            tier = _enforce_capacity(imp, tier, valid, HOT,
-                                     cfg.hot_capacity, WARM)
-            tier = _enforce_capacity(imp, tier, valid, WARM,
-                                     cfg.warm_capacity, COLD)
-
-            def run_sched(im, ti, va):
-                new_t, moved, _ = scheduling.schedule_kv(im, ti, va,
-                                                         cfg.schedule)
-                return new_t, jnp.sum(moved)
-
-            def maybe_schedule(ti):
-                new_t, moved = jax.vmap(run_sched)(imp, ti, valid)
-                return new_t, jnp.sum(moved)
-
-            do = (state.step + 1) % cfg.schedule_interval == 0
-            tier, moved = jax.lax.cond(
-                do, maybe_schedule,
-                lambda ti: (ti, jnp.zeros((), jnp.int32)), tier)
-        else:
-            moved = jnp.zeros((), jnp.int32)
-
-        return PAMState(importance=imp, tier=tier, step=state.step + 1,
-                        moved_tokens=state.moved_tokens + moved,
-                        last_hot=participate)
+        return observe_update(self.cfg, state, scores, lengths, participate)
 
     # -- prefill placement --------------------------------------------------
     @partial(jax.jit, static_argnames=("self",))
     def place_prefill(self, state: PAMState, slot: jax.Array,
                       length: jax.Array) -> PAMState:
-        """Initial placement for one admitted sequence (recency fill-down,
-        §4.3): tail -> HOT, middle -> DDR, head -> SSD."""
-        cfg = self.cfg
-        Smax = state.importance.shape[1]
-        idx = jnp.arange(Smax)
-        valid = idx < length
-        dist = jnp.maximum(length - 1 - idx, 0)
-        tier = jnp.where(dist < cfg.hot_capacity, HOT,
-                         jnp.where(dist < cfg.hot_capacity
-                                   + cfg.warm_capacity, WARM, COLD))
-        imp = jnp.where(valid, 1.0 / (1.0 + dist.astype(jnp.float32)), 0.0)
-        return state._replace(
-            importance=state.importance.at[slot].set(imp),
-            tier=state.tier.at[slot].set(tier.astype(jnp.int32)),
-            last_hot=state.last_hot.at[slot].set(False),
-        )
+        return place_prefill_state(self.cfg, state, slot, length)
 
     # -- stats for the latency/energy model ---------------------------------
     @partial(jax.jit, static_argnames=("self",))
     def tier_read_counts(self, state: PAMState, participate: jax.Array
                          ) -> jax.Array:
-        """(3,) tokens read per tier this step — bytes = counts x token
-        bytes; drives the per-tier roofline in the perf model."""
-        out = []
-        for t in (HOT, WARM, COLD):
-            out.append(jnp.sum(participate & (state.tier == t)))
-        return jnp.stack(out)
+        return tier_read_counts_of(state.tier, participate)
 
     def hit_rate(self, state: PAMState, participate: jax.Array) -> jax.Array:
-        """Context locality: fraction of this step's working set that was
-        also in the previous step's (paper §3.2)."""
-        inter = jnp.sum(state.last_hot & participate, axis=-1)
-        denom = jnp.maximum(jnp.sum(participate, axis=-1), 1)
-        return jnp.mean(inter / denom)
+        return hit_rate_of(state.last_hot, participate)
 
 
 def _enforce_capacity(imp, tier, valid, t_from: int, cap: int, t_to: int):

@@ -21,6 +21,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")
 
+from repro import compat  # noqa: E402,F401  (backfills jax.set_mesh on 0.4)
+
 from repro.distributed.pam_shard import (  # noqa: E402
     make_gather_based_decode_attn, make_sequence_sharded_decode_attn)
 from repro.distributed.pipeline import (pipeline_apply,  # noqa: E402

@@ -105,6 +105,44 @@ def test_flash_decode_kv_len():
                                rtol=1e-4, atol=1e-4)
 
 
+def test_flash_decode_ragged_kv_lens():
+    """Per-sequence dynamic kv_lens (the serving engine's ragged batch)
+    folds into the participation mask — equals per-batch masking."""
+    key = jax.random.PRNGKey(13)
+    B, H, Hkv, S, d = 2, 4, 2, 64, 16
+    q = jax.random.normal(jax.random.fold_in(key, 0), (B, H, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Hkv, S, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Hkv, S, d))
+    lens = jnp.array([50, 17], jnp.int32)
+    out = ops.decode_attention(q, k, v, None, kv_lens=lens, block_s=32,
+                               interpret=True)
+    live = jnp.arange(S)[None, :] < lens[:, None]
+    want = ref.flash_decode_ref(q, k, v, live)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_masked_decode_attention_kernel_equals_einsum():
+    """ops.masked_decode_attention: Pallas-kernel path (interpret) and the
+    grouped-einsum fallback agree on output AND per-token mass."""
+    key = jax.random.PRNGKey(17)
+    B, H, Hkv, S, d = 2, 4, 2, 48, 16
+    q = jax.random.normal(jax.random.fold_in(key, 0), (B, H, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Hkv, S, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Hkv, S, d))
+    part = jax.random.uniform(jax.random.fold_in(key, 3), (B, S)) < 0.7
+    part = part.at[:, 0].set(True)
+    lens = jnp.array([40, 23], jnp.int32)
+    out_k, mass_k = ops.masked_decode_attention(q, k, v, part, lens,
+                                                use_kernel=True)
+    out_e, mass_e = ops.masked_decode_attention(q, k, v, part, lens,
+                                                use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_e),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(mass_k), np.asarray(mass_e),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_pam_decode_attention_tiers_equals_dense():
     """Alg. 1 across 3 uneven tier pools == dense attention over the
     concatenated KV — the paper's exactness claim, at kernel level."""

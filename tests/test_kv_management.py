@@ -5,7 +5,7 @@ and PAM-interface layout transforms (§6.2)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or skip-stub fallback
 
 from repro.core import importance as imp
 from repro.core import mapping, pam_interface, scheduling, tiers

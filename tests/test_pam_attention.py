@@ -3,7 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or skip-stub fallback
 
 from repro.core import online_softmax as osm
 from repro.core.pam_attention import PAMAttentionConfig, pam_attention_step

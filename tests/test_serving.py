@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or skip-stub fallback
 
 from repro.core.tiers import COLD, HOT, WARM
 from repro.models import transformer as tf
