@@ -1,0 +1,16 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test verify bench quickstart
+
+test:            ## tier-1 test suite
+	python -m pytest -x -q
+
+verify:          ## tier-1 tests + fast bench smoke (scripts/verify.sh)
+	bash scripts/verify.sh
+
+bench:           ## full benchmark harness -> BENCH.json
+	python -m benchmarks.run --out BENCH.json
+
+quickstart:      ## run the examples/quickstart.py walkthrough
+	python examples/quickstart.py

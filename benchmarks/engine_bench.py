@@ -64,7 +64,11 @@ def bench_engine() -> list[tuple]:
 def bench_decode_wallclock(micro_steps: int = 8) -> dict:
     """REAL wall-clock decode throughput of the serving engine on the
     current backend (no latency model): the fused-dispatch fast path's
-    tokens/s and device dispatches per decode step. PAM config, batch 4."""
+    tokens/s and device dispatches per decode step. PAM config, batch 4.
+
+    Also runs the paged warm/cold configuration (block_size 8) and
+    records its sparse-read accounting: pool occupancy and pages touched
+    per step vs the dense window — the paged gather's win."""
     import jax
     from repro.models import transformer as tf
     from repro.models.config import get_config, reduced
@@ -76,19 +80,27 @@ def bench_decode_wallclock(micro_steps: int = 8) -> dict:
     pam_cfg = PAMManagerConfig(
         max_tokens=96, hot_capacity=16, warm_capacity=32,
         compression=4, recency_window=4, schedule_interval=2)
+    # paged runs: hot tier smaller than the participation budget so the
+    # working set spills into warm — the block-table gather must engage
+    pam_paged = PAMManagerConfig(
+        max_tokens=96, hot_capacity=8, warm_capacity=32,
+        compression=4, recency_window=4, schedule_interval=2)
 
-    def one_run(micro: int) -> dict:
+    def one_run(micro: int, block_size: int = 0) -> dict:
         rng = np.random.default_rng(0)
         eng = ServingEngine(cfg, params,
                             ServingConfig(max_batch=4, max_len=96,
-                                          pam=pam_cfg, micro_steps=micro))
+                                          pam=(pam_paged if block_size
+                                               else pam_cfg),
+                                          micro_steps=micro,
+                                          block_size=block_size))
         for i in range(8):
             eng.submit(Request(id=i, prompt=rng.integers(0, cfg.vocab, 24),
                                max_new_tokens=16))
         t0 = time.perf_counter()
         summary = eng.run()
         wall = time.perf_counter() - t0
-        return {
+        out = {
             "micro_steps": micro,
             "wall_s": wall,
             "decode_tok_s": summary["total_tokens"] / wall,
@@ -98,19 +110,39 @@ def bench_decode_wallclock(micro_steps: int = 8) -> dict:
                                     / max(summary["decode_device_steps"],
                                           1)),
         }
+        if block_size:
+            out["block_size"] = block_size
+            out["blocks_touched_per_step"] = \
+                summary["blocks_touched_per_step"]
+            out["blocks_window_per_step"] = \
+                summary["blocks_window_per_step"]
+            out["page_read_fraction"] = (
+                summary["blocks_touched_per_step"]
+                / max(summary["blocks_window_per_step"], 1e-9))
+            out["pool_occupancy_peak"] = summary["pool_occupancy_peak"]
+        return out
 
-    one_run(1)                                 # warm the jit caches
-    one_run(micro_steps)
+    for micro, bsz in ((1, 0), (micro_steps, 0), (1, 8), (micro_steps, 8)):
+        one_run(micro, bsz)                    # warm the jit caches
     return {"fused": one_run(1), "micro": one_run(micro_steps),
+            "paged": one_run(1, block_size=8),
+            "paged_micro": one_run(micro_steps, block_size=8),
             "backend": jax.default_backend()}
 
 
 def wallclock_rows(result: dict) -> list[tuple]:
     rows = []
-    for name in ("fused", "micro"):
-        r = result[name]
+    for name in ("fused", "micro", "paged", "paged_micro"):
+        r = result.get(name)
+        if r is None:
+            continue
+        derived = (f"decode_tok_s={r['decode_tok_s']:.0f} "
+                   f"dispatches_per_step={r['dispatches_per_step']:.3f}")
+        if "blocks_touched_per_step" in r:
+            derived += (f" pages_per_step={r['blocks_touched_per_step']:.1f}"
+                        f"/{r['blocks_window_per_step']:.1f}"
+                        f" pool_occ={r['pool_occupancy_peak']:.2f}")
         rows.append((f"engine/wallclock_{name}_k{r['micro_steps']}",
                      r["wall_s"] * 1e6 / max(r["decode_device_steps"], 1),
-                     f"decode_tok_s={r['decode_tok_s']:.0f} "
-                     f"dispatches_per_step={r['dispatches_per_step']:.3f}"))
+                     derived))
     return rows

@@ -63,6 +63,18 @@ def main(argv=None) -> None:
             payload["decode_tok_s"] = wallclock["micro"]["decode_tok_s"]
             payload["dispatches_per_step"] = \
                 wallclock["fused"]["dispatches_per_step"]
+            paged = wallclock.get("paged")
+            if paged is not None:
+                # paged warm/cold gather: sparse-read + occupancy point
+                payload["paged_blocks_touched_per_step"] = \
+                    paged["blocks_touched_per_step"]
+                payload["paged_blocks_window_per_step"] = \
+                    paged["blocks_window_per_step"]
+                payload["paged_page_read_fraction"] = \
+                    paged["page_read_fraction"]
+                payload["paged_pool_occupancy_peak"] = \
+                    paged["pool_occupancy_peak"]
+                payload["paged_decode_tok_s"] = paged["decode_tok_s"]
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.out}")

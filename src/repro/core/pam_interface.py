@@ -16,6 +16,16 @@ whole transfer compiles into one XLA gather + one scatter on contiguous
 buffers — the software analogue of removing the CPU from the critical path;
 the perfmodel charges it at link bandwidth (vs. host path: 2x PCIe + CPU
 reformat, the >20x gap the paper reports).
+
+Paged-pool addendum (serving fast path): when every tier's blocks live in
+ONE shared ``PagedKVPool`` and tier residency is per-token metadata
+(``PAMState.tier``), an Alg. 2 migration never moves bytes at all —
+``migrate_tier_tags`` edits the tags and the next decode step's per-tier
+masks/block tables simply select different pages. That is the degenerate
+(and cheapest) case of the §6.2 interface: a *table edit* rather than a
+tensor copy. The gather/scatter plan above remains the model for
+migrations that DO cross a physical pool boundary (inter-device, or a
+future dense-hot-window eviction).
 """
 
 from __future__ import annotations
@@ -70,6 +80,32 @@ def apply_migration(src_pool: jax.Array, dst_pool: jax.Array,
     live = (jnp.arange(n) < plan.count)[:, None, None]
     cur = dst_pool[plan.dst_token_idx]
     return dst_pool.at[plan.dst_token_idx].set(jnp.where(live, data, cur))
+
+
+def migrate_tier_tags(tier: jax.Array, moved_mask: jax.Array,
+                      dst_tier: jax.Array | int) -> jax.Array:
+    """Zero-copy migration: re-tag ``moved_mask`` tokens as ``dst_tier``.
+
+    With a shared paged pool, this IS the whole inter-tier transfer — no
+    KV bytes move; the next step's tier masks and block-table gather pick
+    up the new residency. ``tier``/``moved_mask``: (..., tokens);
+    ``dst_tier``: scalar or broadcastable tier ids.
+    """
+    return jnp.where(moved_mask, dst_tier, tier)
+
+
+def paged_gather_logical(pool: jax.Array, block_table: jax.Array
+                         ) -> jax.Array:
+    """Re-layout: paged pool -> logical-order dense view, batched tables.
+
+    pool: (NB, block, H, d); block_table: (B, nb) physical block ids in
+    logical order per sequence. Returns (B, H, nb*block, d) — the jnp
+    reference for the Pallas kernel's in-grid table walk (the kernel
+    additionally skips pages with no participating token).
+    """
+    g = pool[block_table]                       # (B, nb, block, H, d)
+    B, nb, bs, H, d = g.shape
+    return jnp.moveaxis(g, 3, 1).reshape(B, H, nb * bs, d)
 
 
 def paged_to_dense(pool: jax.Array, block_table: jax.Array,

@@ -112,6 +112,35 @@ class TieredKVState:
             num_segments=num_tiers)
 
 
+def block_residency(tier_of_token: jax.Array, valid: jax.Array,
+                    block_size: int) -> jax.Array:
+    """Per-block tier residency for the paged pool view.
+
+    tier_of_token/valid: (..., tokens) with ``tokens % block_size == 0``.
+    Returns (..., tokens // block_size) int32: the HOTTEST (minimum) tier
+    id among a block's valid tokens — a page must be served by the
+    fastest tier any of its tokens resides on — or COLD for empty blocks.
+
+    Analysis/capacity-accounting view for tools and tests; the decode
+    path itself never needs it (per-token tier masks reach the kernel
+    directly, and the engine derives its pages-touched stats from
+    ``paged_kv.token_block_mask``).
+    """
+    shape = tier_of_token.shape[:-1] + (-1, block_size)
+    t = jnp.where(valid, tier_of_token, COLD).reshape(shape)
+    return jnp.min(t, axis=-1).astype(jnp.int32)
+
+
+def blocks_per_tier(tier_of_token: jax.Array, valid: jax.Array,
+                    block_size: int, num_tiers: int = 3) -> jax.Array:
+    """(num_tiers,) count of pool blocks whose residency is each tier —
+    per-tier page populations for capacity accounting (paper Table 1)."""
+    res = block_residency(tier_of_token, valid, block_size)
+    occupied = valid.reshape(valid.shape[:-1] + (-1, block_size)).any(-1)
+    return jnp.stack([jnp.sum((res == t) & occupied)
+                      for t in range(num_tiers)])
+
+
 def initial_placement(num_tokens: int, max_tokens: int,
                       tier_capacity_tokens: Sequence[int]) -> TieredKVState:
     """Fill-down placement after prefill (§4.3): newest tokens are hottest.

@@ -209,8 +209,10 @@ def decode_cache_specs(cfg: ModelConfig, global_batch: int, mesh: Mesh
         state = ssm_spec(5, 2, H)             # (L, B, H, N, P)
     if cfg.family == "hybrid":
         k = v = seq_kv(5, 3)
+    # paged pools are a single-host serving-engine feature: size-0 in
+    # distributed caches, replicated spec
     return tf.DecodeCache(k=k, v=v, ckv=ckv, krope=krope, conv=conv,
-                          state=state, lengths=P(dp))
+                          state=state, pk=zero, pv=zero, lengths=P(dp))
 
 
 def make_sharded_zeros(spec_tree: Pytree, shape_tree: Pytree,

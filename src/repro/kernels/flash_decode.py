@@ -1,20 +1,34 @@
-"""Split-KV decode attention kernel — PAMattention's Local_Attention stage
-(paper Alg. 1 lines 9-13) as a TPU Pallas kernel.
+"""Split-KV decode attention kernels — PAMattention's Local_Attention stage
+(paper Alg. 1 lines 9-13) as TPU Pallas kernels.
 
-One decode step: each grid cell owns one KV *split* (the paper's bank group)
-for one (batch, kv-head) pair and emits the partial triple
-``(O, m, l)`` for the ``rep`` grouped query heads that share the kv head.
-The intra-device reduction (the paper's per-bank-group RU chain) happens in
-``merge_decode_partials`` (see ops.py), which is also what the inter-tier /
-inter-device reduction reuses — same algebra, different scope.
+``flash_decode`` (dense): each grid cell owns one contiguous KV *split*
+(the paper's bank group) for one (batch, kv-head) pair and emits the
+partial triple ``(O, m, l)`` for the ``rep`` grouped query heads that share
+the kv head. The intra-device reduction (the paper's per-bank-group RU
+chain) happens in ``merge_decode`` (see ops.py), which is also what the
+inter-tier / inter-device reduction reuses — same algebra, different scope.
 
-A per-token boolean ``mask`` carries PAM's tier/sparsity participation:
-tokens outside the current tier or unselected by retrieval sparsity simply
-contribute exact-zero weight, so one kernel serves dense decode, tiered
-PAMattention, and sparse attention.
+``flash_decode_paged`` (paged): the warm/cold tiers store KV in a shared
+block pool (``serving.paged_kv``), and each grid cell owns one *logical
+block* of one sequence. The per-request **block table is a kernel
+operand** (scalar-prefetched, so it is resident before the grid cell's DMA
+is issued) and the index map dereferences it to pick the physical pool
+block — the in-kernel analogue of PagedAttention's table walk, in the
+spirit of TokenStack's heterogeneous HBM-PIM runtime. A per-block
+``block_live`` operand lets cells whose block has no participating token
+emit the merge identity without touching the data: sparse tier reads skip
+untouched pages (callers additionally remap dead table entries onto the
+pool's sentinel block so their DMAs all alias one trash page).
 
-Layout: KV is (B, H_kv, S, d) — sequence-major within a head so a split is
-a contiguous VMEM block (the bank-aligned mapping of §6.1).
+A per-token boolean ``mask`` carries PAM's tier/sparsity participation on
+both kernels: tokens outside the current tier or unselected by retrieval
+sparsity contribute exact-zero weight, so the same kernels serve dense
+decode, tiered PAMattention, and sparse attention.
+
+Layouts: dense KV is (B, H_kv, S, d) — sequence-major within a head so a
+split is a contiguous VMEM block (the bank-aligned mapping of §6.1); the
+paged pool is (num_blocks + 1, block_size, H_kv, d) per layer, sentinel
+block last.
 """
 
 from __future__ import annotations
@@ -134,3 +148,114 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
 
     return (o.reshape(B, H, nsplit, d), m.reshape(B, H, nsplit),
             l.reshape(B, H, nsplit))
+
+
+# ------------------------------------------------------------- paged kernel
+def _paged_decode_kernel(bt_ref, bl_ref, q_ref, k_ref, v_ref, mask_ref,
+                         o_ref, m_ref, l_ref, *, scale: float):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    live_block = bl_ref[b, i] != 0
+
+    @pl.when(live_block)
+    def _attend():
+        q = q_ref[0, 0].astype(jnp.float32)        # (rep, d)
+        k = k_ref[0, :, 0].astype(jnp.float32)     # (block_size, d)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        msk = mask_ref[0]                          # (block_size,)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        live = msk[None, :] != 0
+        s = jnp.where(live, s, NEG_INF)
+        m = jnp.max(s, axis=-1)                    # (rep,)
+        p = jnp.exp(s - m[:, None])
+        p = jnp.where(live, p, 0.0)
+        o_ref[0, 0, :, 0, :] = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[0, 0, :, 0] = m
+        l_ref[0, 0, :, 0] = jnp.sum(p, axis=-1)
+
+    @pl.when(jnp.logical_not(live_block))
+    def _skip():
+        # Untouched page: emit the merge identity without reading KV.
+        o_ref[0, 0, :, 0, :] = jnp.zeros_like(o_ref[0, 0, :, 0, :])
+        m_ref[0, 0, :, 0] = jnp.full_like(m_ref[0, 0, :, 0], NEG_INF)
+        l_ref[0, 0, :, 0] = jnp.zeros_like(l_ref[0, 0, :, 0])
+
+
+def flash_decode_paged(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                       block_table: jax.Array, mask: jax.Array, *,
+                       block_live: jax.Array | None = None,
+                       scale: float | None = None,
+                       interpret: bool = False
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """PAMattention local stage over a paged KV pool (block-table operand).
+
+    q: (B, H, d); k_pool/v_pool: (NB+1, block_size, H_kv, d) single-layer
+    pool slices, sentinel block last; block_table: (B, nb) int32 physical
+    block per logical block (sentinel for unmapped); mask: (B, nb*bs)
+    participation at *logical* positions with any per-sequence length
+    bound already folded in.
+
+    ``block_table`` and ``block_live`` ride the grid as scalar-prefetch
+    operands: the k/v index maps dereference the table so each grid cell
+    DMAs exactly its physical block, and cells with ``block_live == 0``
+    emit the merge identity — untouched pages are skipped. Dead entries
+    are remapped onto the sentinel so their prefetches alias one block.
+
+    Returns stacked partials over logical blocks: (o (B, H, nb, d) fp32
+    unnormalized, m/l (B, H, nb)). Merge with ``ops.merge_decode``.
+    """
+    B, H, d = q.shape
+    NBp, bs, H_kv, _ = k_pool.shape
+    nb = block_table.shape[1]
+    rep = H // H_kv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    mask = mask.astype(jnp.int32)
+    if block_live is None:
+        block_live = mask.reshape(B, nb, bs).any(axis=-1)
+    block_live = block_live.astype(jnp.int32)
+    # Route dead logical blocks onto the sentinel: their (skipped) cells
+    # all alias one physical page instead of touching live data.
+    table = jnp.where(block_live != 0, block_table, NBp - 1)
+    table = table.astype(jnp.int32)
+
+    qg = q.reshape(B, H_kv, rep, d)
+    kernel = functools.partial(_paged_decode_kernel, scale=scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # block table + block_live
+        grid=(B, H_kv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, d), lambda b, h, i, bt, bl: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda b, h, i, bt, bl: (bt[b, i], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda b, h, i, bt, bl: (bt[b, i], 0, h, 0)),
+            pl.BlockSpec((1, bs), lambda b, h, i, bt, bl: (b, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, rep, 1, d),
+                         lambda b, h, i, bt, bl: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, rep, 1),
+                         lambda b, h, i, bt, bl: (b, h, 0, i)),
+            pl.BlockSpec((1, 1, rep, 1),
+                         lambda b, h, i, bt, bl: (b, h, 0, i)),
+        ],
+    )
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H_kv, rep, nb, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, H_kv, rep, nb), jnp.float32),
+            jax.ShapeDtypeStruct((B, H_kv, rep, nb), jnp.float32),
+        ],
+        interpret=interpret,
+    )(table, block_live, qg, k_pool, v_pool, mask)
+
+    return (o.reshape(B, H, nb, d), m.reshape(B, H, nb),
+            l.reshape(B, H, nb))

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.core import online_softmax as osm
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.flash_decode import flash_decode_paged as _flash_decode_paged
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
 
@@ -131,6 +132,130 @@ def masked_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     p = jnp.exp(s - m_safe[..., None]) / jnp.maximum(l, 1e-30)[..., None]
     p = jnp.where(jnp.isfinite(s), p, 0.0)
     n_live = jnp.sum(live, axis=-1, keepdims=True).astype(jnp.float32)
+    mass = jnp.mean(p, axis=(1, 2)) * n_live
+    return out, mass
+
+
+# ------------------------------------------------------------- paged tiers
+def _grouped_partial_from_scores(s: jax.Array, v: jax.Array,
+                                 live: jax.Array) -> osm.AttnPartial:
+    """Partial (o, m, l) from precomputed grouped scores.
+
+    s: (B, Hkv, rep, S) fp32; v: (B, Hkv, S, d); live: (B, S) bool.
+    Returns AttnPartial with o (B, H, d), m/l (B, H).
+    """
+    B, Hkv, rep, S = s.shape
+    d = v.shape[-1]
+    s = jnp.where(live[:, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bgrs,bgsd->bgrd", p, v.astype(jnp.float32))
+    return osm.AttnPartial(o=o.reshape(B, Hkv * rep, d),
+                           m=m.reshape(B, Hkv * rep),
+                           l=l.reshape(B, Hkv * rep))
+
+
+def _grouped_scores(q: jax.Array, k: jax.Array, scale: float) -> jax.Array:
+    """One repeat-free grouped QK^T: q (B, H, d), k (B, Hkv, S, d) ->
+    (B, Hkv, rep, S) fp32."""
+    B, H, d = q.shape
+    Hkv = k.shape[1]
+    qg = q.reshape(B, Hkv, H // Hkv, d)
+    return jnp.einsum("bgrd,bgsd->bgrs", qg.astype(jnp.float32),
+                      k.astype(jnp.float32)) * scale
+
+
+def paged_decode_attention_partial(q: jax.Array, k_pool: jax.Array,
+                                   v_pool: jax.Array,
+                                   block_table: jax.Array,
+                                   token_mask: jax.Array, *,
+                                   block_live: jax.Array | None = None,
+                                   scale=None, use_kernel: bool | None = None,
+                                   interpret: bool | None = None
+                                   ) -> osm.AttnPartial:
+    """Local stage over a paged pool: merged per-pool partial.
+
+    q: (B, H, d); k_pool/v_pool: (NB+1, bs, Hkv, d) single-layer slices
+    (sentinel last); block_table: (B, nb) physical ids; token_mask:
+    (B, nb*bs) participation at logical positions (length bound folded
+    in). On TPU the Pallas ``flash_decode_paged`` kernel walks the table
+    in-grid and skips dead pages; elsewhere a jnp gather through the same
+    table is the reference path. Partial fields are (B, H, d) / (B, H).
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        if interpret is None:
+            interpret = not _on_tpu()
+        o, m, l = _flash_decode_paged(q, k_pool, v_pool, block_table,
+                                      token_mask, block_live=block_live,
+                                      scale=scale, interpret=interpret)
+        part = osm.AttnPartial(o=jnp.moveaxis(o, 2, 0),
+                               m=jnp.moveaxis(m, 2, 0),
+                               l=jnp.moveaxis(l, 2, 0))
+        return osm.merge_many(part)
+    from repro.core.pam_interface import paged_gather_logical
+    d = q.shape[-1]
+    sc = scale if scale is not None else 1.0 / (d ** 0.5)
+    gk = paged_gather_logical(k_pool, block_table)  # (B, Hkv, nb*bs, d)
+    gv = paged_gather_logical(v_pool, block_table)
+    s = _grouped_scores(q, gk, sc)
+    return _grouped_partial_from_scores(s, gv, token_mask)
+
+
+def paged_masked_decode_attention(q: jax.Array, k_cache: jax.Array,
+                                  v_cache: jax.Array, k_pool: jax.Array,
+                                  v_pool: jax.Array, block_table: jax.Array,
+                                  hot_mask: jax.Array, paged_mask: jax.Array,
+                                  kv_lens: jax.Array, *,
+                                  block_live: jax.Array | None = None,
+                                  scale=None, use_kernel: bool | None = None
+                                  ) -> tuple[jax.Array, jax.Array]:
+    """Tiered decode attention: dense hot partial ⊕ paged warm/cold partial.
+
+    The paged serving fast path's decode-attention entry point. The hot
+    tier reads the dense kernel-ready cache (``k_cache``/``v_cache``,
+    (B, Hkv, Smax, dh)); the warm/cold tiers read the shared block pool
+    *through the block table* — ``paged_mask`` selects their tokens at
+    logical positions, and only blocks with a participating token are
+    touched. The two partials are merged exactly (Alg. 1 reduction), so
+    the result is bitwise-close to dense masked attention over the union
+    mask whenever the pool mirrors the cache.
+
+    Returns (out (B, H, d), mass (B, Smax)) where ``mass`` is the
+    head-mean count-scaled softmax mass over the union working set,
+    reconstructed from the merged (m, l) statistics with one grouped
+    QK^T — exactly the kernel-path idiom of ``masked_decode_attention``.
+    """
+    B, H, d = q.shape
+    Hkv, Smax = k_cache.shape[1], k_cache.shape[2]
+    sc = scale if scale is not None else 1.0 / (d ** 0.5)
+    live_len = jnp.arange(Smax)[None, :] < kv_lens[:, None]
+    hot = hot_mask & live_len
+    pgd = paged_mask & live_len
+
+    # One grouped QK^T over the dense cache serves both the hot partial
+    # and the union-mass reconstruction below.
+    s_dense = _grouped_scores(q, k_cache, sc)          # (B, Hkv, rep, S)
+    part = _grouped_partial_from_scores(s_dense, v_cache, hot)
+    part_paged = paged_decode_attention_partial(
+        q, k_pool, v_pool, block_table, pgd, block_live=block_live,
+        scale=sc, use_kernel=use_kernel)
+    merged = osm.merge_partials(part, part_paged)
+    out = osm.finalize(merged, out_dtype=q.dtype)
+
+    union = hot | pgd
+    rep = H // Hkv
+    m = merged.m.reshape(B, Hkv, rep)
+    l = merged.l.reshape(B, Hkv, rep)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    s = jnp.where(union[:, None, None, :], s_dense, -jnp.inf)
+    p = jnp.exp(s - m_safe[..., None]) / jnp.maximum(l, 1e-30)[..., None]
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    n_live = jnp.sum(union, axis=-1, keepdims=True).astype(jnp.float32)
     mass = jnp.mean(p, axis=(1, 2)) * n_live
     return out, mass
 

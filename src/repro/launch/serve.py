@@ -33,6 +33,10 @@ def main(argv=None):
     ap.add_argument("--system", default="pam",
                     choices=[k.value for k in SystemKind] + ["wallclock"])
     ap.add_argument("--no-sparsity", action="store_true")
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="paged warm/cold KV block tokens (0 = dense)")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="physical pool blocks (default: no overcommit)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -56,7 +60,8 @@ def main(argv=None):
     eng = ServingEngine(
         cfg, params,
         ServingConfig(max_batch=args.max_batch, max_len=args.max_len,
-                      pam=pam_cfg),
+                      pam=pam_cfg, block_size=args.block_size,
+                      pool_blocks=args.pool_blocks),
         latency_model=latency)
 
     rng = np.random.default_rng(0)

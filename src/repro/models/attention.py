@@ -238,12 +238,22 @@ def attention_decode(p: AttnParams, x: jax.Array, k_cache: jax.Array,
                      v_cache: jax.Array, kv_lens: jax.Array, *,
                      n_heads: int, n_kv: int, d_head: int, rope_theta: float,
                      rms_eps: float,
-                     decode_attn_fn: DecodeAttnFn = dense_decode_attn):
+                     decode_attn_fn: DecodeAttnFn = dense_decode_attn,
+                     paged: Optional[tuple] = None):
     """One decode step. x: (B, d) current-token activations.
 
     Writes the new token's K/V at position ``kv_lens`` (per-sequence) and
     attends over ``kv_lens + 1`` tokens. Returns (out (B, d),
     mass (B, Smax), k_cache, v_cache) with updated caches.
+
+    ``paged=(pk, pv, dst_block, dst_slot)`` additionally mirrors the
+    appended token into this layer's paged KV pool slice ((NB+1, bs,
+    Hkv, dh); dst_block/dst_slot (B,) physical coordinates, inactive rows
+    routed to the sentinel block) and calls ``decode_attn_fn`` with the
+    pool operands ``(q, k_cache, v_cache, pk, pv, kv_lens)``; the return
+    grows to (out, mass, k_cache, v_cache, pk, pv). Keys are cached
+    post-RoPE, so pool storage order is free — the block table alone
+    recovers logical order.
     """
     B, d = x.shape
     q = jnp.einsum("bd,de->be", x, p.wq).reshape(B, n_heads, d_head)
@@ -258,6 +268,9 @@ def attention_decode(p: AttnParams, x: jax.Array, k_cache: jax.Array,
 
     from repro.models import perf_flags
     if perf_flags.enabled("pam_shard_decode"):
+        if paged is not None:
+            raise ValueError("paged KV pools and the pam_shard_decode "
+                             "perf flag are mutually exclusive")
         # §Perf: fused shard_map — masked local cache write + PAMattention
         # psum merge; avoids GSPMD gathering the sequence-sharded cache for
         # the dynamic scatter
@@ -269,6 +282,15 @@ def attention_decode(p: AttnParams, x: jax.Array, k_cache: jax.Array,
         bidx = jnp.arange(B)
         k_cache = k_cache.at[bidx, :, pos].set(k)
         v_cache = v_cache.at[bidx, :, pos].set(v)
+        if paged is not None:
+            pk, pv, dst_block, dst_slot = paged
+            pk = pk.at[dst_block, dst_slot].set(k)
+            pv = pv.at[dst_block, dst_slot].set(v)
+            out, mass = decode_attn_fn(q, k_cache, v_cache, pk, pv,
+                                       kv_lens + 1)
+            out = out.reshape(B, n_heads * d_head)
+            return (jnp.einsum("be,ed->bd", out, p.wo), mass,
+                    k_cache, v_cache, pk, pv)
         out, mass = decode_attn_fn(q, k_cache, v_cache, kv_lens + 1)
     out = out.reshape(B, n_heads * d_head)
     return jnp.einsum("be,ed->bd", out, p.wo), mass, k_cache, v_cache

@@ -414,18 +414,37 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
 # ============================================================ decode
 class DecodeCache(NamedTuple):
     """Stacked per-layer decode state. Unused fields are size-0 arrays so
-    the pytree structure is family-independent under scan."""
+    the pytree structure is family-independent under scan.
+
+    ``pk``/``pv`` are the paged warm/cold-tier KV pools of the serving
+    fast path (see ``repro.serving.paged_kv``): one shared block pool per
+    layer, final physical block a write sentinel. They are size-0 unless
+    the cache is created with ``paged_blocks > 0``; when present,
+    ``decode_step`` mirrors each appended token into its mapped block
+    (``paged_append`` operand) so warm/cold attention reads can go
+    through per-request block tables while the dense ``k``/``v`` buffers
+    keep serving the hot tier.
+    """
     k: jax.Array            # (L, B, Hkv, Smax, dh)  GQA
     v: jax.Array
     ckv: jax.Array          # (L, B, Smax, r)        MLA latent
     krope: jax.Array        # (L, B, Smax, dr)
     conv: jax.Array         # (L, B, ck-1, conv_dim) SSM
     state: jax.Array        # (L, B, H, N, P)
+    pk: jax.Array           # (L, NB+1, bs, Hkv, dh) paged KV pool (K)
+    pv: jax.Array           # (L, NB+1, bs, Hkv, dh) paged KV pool (V)
     lengths: jax.Array      # (B,) tokens already cached
 
 
-def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                      paged_blocks: int = 0, block_size: int = 0
                       ) -> DecodeCache:
+    """Decode cache for ``batch`` sequences of up to ``max_len`` tokens.
+
+    ``paged_blocks``/``block_size`` > 0 additionally allocates the paged
+    KV pools (``paged_blocks`` allocatable blocks + 1 sentinel) for the
+    serving engine's block-table decode path — GQA-cache families only.
+    """
     dtype = jnp.dtype(cfg.dtype)
     L = cfg.n_layers
     z = lambda *s: jnp.zeros(s, dtype)
@@ -435,6 +454,17 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int
     k, v = z(0), z(0)
     ckv, krope = z(0), z(0)
     conv, state = z(0), z(0)
+    pk, pv = z(0), z(0)
+    if paged_blocks:
+        if not (cfg.family in ("dense", "vlm")
+                or (cfg.family == "moe" and cfg.mla is None)):
+            raise ValueError(
+                f"paged KV pools require a GQA k/v cache; family "
+                f"{cfg.family} stores none")
+        pk = z(L, paged_blocks + 1, block_size, cfg.n_kv_heads,
+               cfg.head_dim)
+        pv = z(L, paged_blocks + 1, block_size, cfg.n_kv_heads,
+               cfg.head_dim)
     if cfg.family in ("dense", "vlm"):
         k = z(L, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
         v = z(L, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
@@ -461,13 +491,15 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int
     else:
         raise ValueError(f"family {cfg.family} has no decode step")
     return DecodeCache(k=k, v=v, ckv=ckv, krope=krope, conv=conv,
-                       state=state, lengths=jnp.zeros((batch,), jnp.int32))
+                       state=state, pk=pk, pv=pv,
+                       lengths=jnp.zeros((batch,), jnp.int32))
 
 
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                 cache: DecodeCache, *,
                 decode_attn_fn: Optional[Callable] = None,
-                latent_attn_fn: Optional[Callable] = None
+                latent_attn_fn: Optional[Callable] = None,
+                paged_append: Optional[tuple] = None
                 ) -> tuple[jax.Array, DecodeCache, Optional[jax.Array]]:
     """One autoregressive step. tokens: (B,) int32. Returns
     (logits (B, V), new cache, scores (B, Smax) | None).
@@ -475,6 +507,13 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
     ``decode_attn_fn`` injects the PAM / distributed attention
     implementation. ``scores`` is the layer-mean per-token attention mass
     S_i(j) feeding PAM's importance EMA (None for attention-free archs).
+
+    When the cache carries paged pools (``cache.pk.size > 0``),
+    ``paged_append=(dst_block, dst_slot)`` — (B,) physical block + slot
+    per sequence, sentinel-routed for inactive rows — must be supplied;
+    each layer then mirrors its appended K/V into the pool and
+    ``decode_attn_fn`` is called with the per-layer pool slices
+    ``(q, k_cache, v_cache, pk, pv, kv_lens)``.
     """
     if not cfg.has_decode:
         raise ValueError(f"{cfg.name} is encoder-only")
@@ -483,18 +522,31 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
     x = params["embed"][tokens]                       # (B, d)
     lens = cache.lengths
     scores: Optional[jax.Array] = None
+    use_paged = cache.pk.size > 0
+    if use_paged and paged_append is None:
+        raise ValueError("cache has paged KV pools; decode_step requires "
+                         "paged_append=(dst_block, dst_slot)")
 
     if cfg.family in ("dense", "vlm") or (cfg.family == "moe"
                                           and cfg.mla is None):
         def body(carry, inp):
             h = carry
-            layer, kc, vc = inp
+            if use_paged:
+                layer, kc, vc, pk, pv = inp
+                paged = (pk, pv) + tuple(paged_append)
+            else:
+                layer, kc, vc = inp
+                paged = None
             hn = rms_norm(h, layer["ln1"], cfg.rms_eps)
-            attn_out, mass, kc, vc = attn_mod.attention_decode(
+            res = attn_mod.attention_decode(
                 _attn_params(layer), hn, kc, vc, lens,
                 n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
                 d_head=cfg.head_dim, rope_theta=cfg.rope_theta,
-                rms_eps=cfg.rms_eps, decode_attn_fn=d_fn)
+                rms_eps=cfg.rms_eps, decode_attn_fn=d_fn, paged=paged)
+            if use_paged:
+                attn_out, mass, kc, vc, pk, pv = res
+            else:
+                attn_out, mass, kc, vc = res
             h = h + attn_out
             hn = rms_norm(h, layer["ln2"], cfg.rms_eps)
             if cfg.moe is not None:
@@ -504,11 +556,18 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
             else:
                 m = layer["mlp"]
                 ffn = swiglu(hn, m["gate"], m["up"], m["down"])
-            return h + ffn, (kc, vc, mass)
+            ys = (kc, vc, pk, pv, mass) if use_paged else (kc, vc, mass)
+            return h + ffn, ys
 
-        x, (k_new, v_new, masses) = jax.lax.scan(
-            body, x, (params["layers"], cache.k, cache.v))
-        cache = cache._replace(k=k_new, v=v_new)
+        if use_paged:
+            x, (k_new, v_new, pk_new, pv_new, masses) = jax.lax.scan(
+                body, x, (params["layers"], cache.k, cache.v,
+                          cache.pk, cache.pv))
+            cache = cache._replace(k=k_new, v=v_new, pk=pk_new, pv=pv_new)
+        else:
+            x, (k_new, v_new, masses) = jax.lax.scan(
+                body, x, (params["layers"], cache.k, cache.v))
+            cache = cache._replace(k=k_new, v=v_new)
         scores = jnp.mean(masses, axis=0)
 
     elif cfg.family == "moe":                          # MLA path

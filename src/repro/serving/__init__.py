@@ -1,11 +1,12 @@
 """KV-centric serving engine (paper §4): request pool, continuous batching
 with prefill priority, paged + tiered KV management, PAM decode loop."""
 
-from repro.serving.paged_kv import BlockAllocator, PagedKVPool
+from repro.serving.paged_kv import (BlockAllocator, OutOfBlocks,
+                                    PagedKVPool)
 from repro.serving.pam_manager import PAMManager, PAMManagerConfig
-from repro.serving.engine import (Request, RequestState, ServingConfig,
-                                  ServingEngine)
+from repro.serving.engine import (PAMEngine, Request, RequestState,
+                                  ServingConfig, ServingEngine)
 
-__all__ = ["BlockAllocator", "PagedKVPool", "PAMManager",
-           "PAMManagerConfig", "Request", "RequestState", "ServingConfig",
-           "ServingEngine"]
+__all__ = ["BlockAllocator", "OutOfBlocks", "PagedKVPool", "PAMEngine",
+           "PAMManager", "PAMManagerConfig", "Request", "RequestState",
+           "ServingConfig", "ServingEngine"]

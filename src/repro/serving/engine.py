@@ -22,6 +22,24 @@ micro-loop around the fused body so the no-EOS benchmark path visits the
 host only once every k steps. Prefill lengths are bucketed to powers of
 two (capping jit-cache blowup) and each admission commits cache scatter +
 PAM placement + token seed in one donated dispatch.
+
+Paged warm/cold tiers
+---------------------
+With ``ServingConfig.block_size > 0`` the warm/cold tiers additionally
+live on a shared ``PagedKVPool`` (paper §4.2.2): a host ``BlockAllocator``
+maps each request to physical pool blocks at admission (one table write
+per request — never per step), the table rides ``PAMState.block_table``
+through the donated dispatch, and the fused step splits the participation
+set by tier: hot tokens read the dense kernel-ready cache, warm/cold
+tokens are gathered from the pool *through the block table* (a kernel
+operand — ``flash_decode_paged`` on TPU, a jnp table gather elsewhere)
+so pages with no participating token are never touched. Both partials
+merge exactly (Alg. 1), the single-dispatch/donation invariants are
+unchanged, and ``StepBufs`` additionally reports pages touched vs. the
+dense window for the sparse-read accounting. Pool capacity is admission
+backpressure: requests wait (instead of erroring) until finished
+sequences free their blocks, so a pool smaller than ``max_batch``'s
+worst case overcommits gracefully.
 """
 
 from __future__ import annotations
@@ -39,6 +57,8 @@ import numpy as np
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
 from repro.serving import pam_manager as pm
+from repro.serving import paged_kv as pkv
+from repro.serving.paged_kv import BlockAllocator, OutOfBlocks
 from repro.serving.pam_manager import (PAMManager, PAMManagerConfig,
                                        PAMState, init_pam_state,
                                        make_masked_decode_attn,
@@ -69,6 +89,15 @@ class RequestState:
 
 @dataclasses.dataclass(frozen=True)
 class ServingConfig:
+    """Engine configuration.
+
+    ``block_size > 0`` turns on the paged warm/cold KV path: the pool
+    holds ``pool_blocks`` physical blocks of ``block_size`` tokens
+    (default: enough for every slot's full window, i.e. no overcommit;
+    set it lower to exercise capacity backpressure). Requires a PAM
+    config (tier residency decides dense-vs-paged reads) and a GQA-cache
+    model family, and ``max_len`` must be a block multiple.
+    """
     max_batch: int = 4
     max_len: int = 256
     eos_token: int = -1                # -1: run to max_new_tokens
@@ -76,6 +105,8 @@ class ServingConfig:
     micro_steps: int = 1               # decode steps fused per dispatch
                                        # (>1 needs eos_token == -1)
     bucket_prefill: bool = True        # pow-2 prompt-length buckets
+    block_size: int = 0                # paged-KV block tokens (0 = dense)
+    pool_blocks: Optional[int] = None  # physical blocks (None = full)
 
 
 class StepBufs(NamedTuple):
@@ -86,6 +117,8 @@ class StepBufs(NamedTuple):
     hit_rate: jax.Array     # (k,)   f32 context-locality hit rate
     moved: jax.Array        # (k,)   int32 Alg. 2 migrations this step
     lengths: jax.Array      # (k, B) int32 post-step cache lengths
+    blocks: jax.Array       # (k, 2) int32 (paged pages touched, dense
+                            #               window pages) — paged mode
 
 
 # ---------------------------------------------------- shared jit builders
@@ -95,21 +128,51 @@ class StepBufs(NamedTuple):
 # compile again (configs are frozen dataclasses, hence hashable).
 
 def _fused_decode_body(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
-                       smax: int, params, tokens, cache, pam_state, active):
+                       smax: int, bs: int, sentinel: int,
+                       params, tokens, cache, pam_state, active):
     """ONE decode step of the full PAM pipeline, pure & traceable:
-    participation -> masked decode -> stats -> observe -> argmax."""
+    participation -> masked decode -> stats -> observe -> argmax.
+
+    ``bs`` > 0 selects the paged warm/cold path: the participation set is
+    split by tier, warm/cold reads gather the pool through
+    ``pam_state.block_table`` (dead pages remapped to ``sentinel``), and
+    the appended token is mirrored into its mapped block.
+    """
+    B = active.shape[0]
     lengths = cache.lengths + active.astype(jnp.int32)
     if pcfg is not None:
         participate = pm.participation_mask(
             pcfg, pam_state.importance, lengths)
     else:
         participate = jnp.arange(smax)[None, :] < lengths[:, None]
-    d_fn = make_masked_decode_attn(participate)
     l_fn = make_masked_latent_attn(participate)
+    paged_append = None
+    blocks = jnp.zeros((2,), jnp.int32)
+    if bs:
+        nb = smax // bs
+        hot_m, pgd_m, block_live = pm.paged_participation_split(
+            participate, pam_state.tier, lengths, bs)
+        bt_eff = jnp.where(block_live, pam_state.block_table, sentinel)
+        d_fn = pm.make_paged_decode_attn(hot_m, pgd_m, bt_eff, block_live)
+        # append coordinates for the new token (same for every layer);
+        # inactive rows write the sentinel trash page
+        pos = cache.lengths
+        lb = jnp.clip(pos // bs, 0, nb - 1)
+        dst_block = jnp.where(
+            active, pam_state.block_table[jnp.arange(B), lb], sentinel)
+        paged_append = (dst_block.astype(jnp.int32),
+                        (pos % bs).astype(jnp.int32))
+        valid = jnp.arange(smax)[None, :] < lengths[:, None]
+        window = pkv.token_block_mask(valid, bs)
+        act = active[:, None]
+        blocks = jnp.stack([jnp.sum(block_live & act),
+                            jnp.sum(window & act)]).astype(jnp.int32)
+    else:
+        d_fn = make_masked_decode_attn(participate)
     old_lens = cache.lengths
     logits, cache, scores = tf.decode_step(
         cfg, params, tokens, cache, decode_attn_fn=d_fn,
-        latent_attn_fn=l_fn)
+        latent_attn_fn=l_fn, paged_append=paged_append)
     # inactive slots: freeze their lengths
     cache = cache._replace(
         lengths=jnp.where(active, cache.lengths, old_lens))
@@ -132,33 +195,38 @@ def _fused_decode_body(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
 
     nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     tokens = jnp.where(active, nxt, tokens)
-    return tokens, cache, pam_state, (tier_reads, hit, moved, cache.lengths)
+    return tokens, cache, pam_state, (tier_reads, hit, moved,
+                                      cache.lengths, blocks)
 
 
 @functools.lru_cache(maxsize=None)
 def _fused_decode_fn(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
-                     smax: int, batch: int, k: int):
-    """Fused decode dispatch running ``k`` steps on device. Cache, PAM
-    state and the token vector are DONATED — zero per-step copies."""
+                     smax: int, batch: int, k: int, bs: int = 0,
+                     sentinel: int = 0):
+    """Fused decode dispatch running ``k`` steps on device. Cache (dense
+    buffers AND paged pools), PAM state (including the block table) and
+    the token vector are DONATED — zero per-step copies."""
     def run_k(params, tokens, cache, pam_state, active):
         bufs = StepBufs(
             tokens=jnp.zeros((k, batch), jnp.int32),
             tier_reads=jnp.zeros((k, 3), jnp.int32),
             hit_rate=jnp.zeros((k,), jnp.float32),
             moved=jnp.zeros((k,), jnp.int32),
-            lengths=jnp.zeros((k, batch), jnp.int32))
+            lengths=jnp.zeros((k, batch), jnp.int32),
+            blocks=jnp.zeros((k, 2), jnp.int32))
 
         def step_i(i, carry):
             tokens, cache, pam_state, bufs = carry
-            tokens, cache, pam_state, (reads, hit, moved, lens) = \
-                _fused_decode_body(cfg, pcfg, smax, params, tokens, cache,
-                                   pam_state, active)
+            tokens, cache, pam_state, (reads, hit, moved, lens, blk) = \
+                _fused_decode_body(cfg, pcfg, smax, bs, sentinel, params,
+                                   tokens, cache, pam_state, active)
             bufs = StepBufs(
                 tokens=bufs.tokens.at[i].set(tokens),
                 tier_reads=bufs.tier_reads.at[i].set(reads),
                 hit_rate=bufs.hit_rate.at[i].set(hit),
                 moved=bufs.moved.at[i].set(moved),
-                lengths=bufs.lengths.at[i].set(lens))
+                lengths=bufs.lengths.at[i].set(lens),
+                blocks=bufs.blocks.at[i].set(blk))
             return tokens, cache, pam_state, bufs
 
         carry = (tokens, cache, pam_state, bufs)
@@ -188,28 +256,53 @@ def _prefill_fn(cfg: ModelConfig, smax: int):
 
 
 @functools.lru_cache(maxsize=None)
-def _admit_commit_fn(pcfg: Optional[PAMManagerConfig]):
+def _admit_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int = 0):
     """One donated dispatch per admission: scatter the prefilled sub-cache
     into the batch cache, seed the device token vector and place the
-    sequence's initial tier layout."""
-    def commit(cache, pam_state, tokens_dev, sub, slot, length, first):
+    sequence's initial tier layout. In paged mode (``block_size`` > 0)
+    the same dispatch also scatters the prompt KV into the sequence's
+    allocated pool blocks and installs its block-table row."""
+    def commit(cache, pam_state, tokens_dev, sub, slot, length, first,
+               table_row=None):
         def put(full, one):
             if full.ndim == 0 or full.size == 0:
                 return full
             if full.ndim == 1:                     # lengths (B,)
                 return full.at[slot].set(one[0])
             return full.at[:, slot].set(one[:, 0])  # (L, B, ...)
-        cache = jax.tree.map(put, cache, sub)
+        if block_size:
+            # pool fields have no batch axis — peel them off the generic
+            # per-slot scatter and fill them through the block table
+            pk, pv = cache.pk, cache.pv
+            cache = cache._replace(pk=sub.pk, pv=sub.pv)
+            cache = jax.tree.map(put, cache, sub)
+            cache = cache._replace(
+                pk=pkv.write_prefill(pk, sub.k[:, 0], table_row,
+                                     block_size),
+                pv=pkv.write_prefill(pv, sub.v[:, 0], table_row,
+                                     block_size))
+        else:
+            cache = jax.tree.map(put, cache, sub)
         tokens_dev = tokens_dev.at[slot].set(first)
         if pcfg is not None:
             pam_state = pm.place_prefill_state(pcfg, pam_state, slot,
-                                               length)
+                                               length, table_row)
         return cache, pam_state, tokens_dev
 
     return jax.jit(commit, donate_argnums=(0, 1, 2))
 
 
 class ServingEngine:
+    """The PAM serving engine (alias ``PAMEngine``).
+
+    Construct with a model config + params and a ``ServingConfig``;
+    ``submit`` requests, then drive with ``step()`` (synchronous, one
+    fused dispatch per call) or ``run()`` (to completion; pipelined
+    multi-step micro-loop when ``micro_steps > 1``). See the module
+    docstring for the fused-dispatch, donation, and paged-tier
+    invariants, and ``summary()`` for the metrics contract.
+    """
+
     def __init__(self, cfg: ModelConfig, params, scfg: ServingConfig,
                  latency_model: Optional[Callable[[dict], float]] = None):
         assert cfg.has_decode, f"{cfg.name} is encoder-only"
@@ -223,10 +316,38 @@ class ServingEngine:
         self.clock = 0.0                       # simulated seconds
 
         B, Smax = scfg.max_batch, scfg.max_len
-        self.cache = tf.init_decode_cache(cfg, B, Smax)
         self.pam_cfg = scfg.pam
         self.mgr = PAMManager(scfg.pam) if scfg.pam else None
-        self.pam_state = init_pam_state(B, Smax)
+        self.block_size = scfg.block_size
+        self.allocator: Optional[BlockAllocator] = None
+        self.sentinel = 0
+        if self.block_size:
+            if scfg.pam is None:
+                raise ValueError("paged KV (block_size > 0) requires a "
+                                 "PAM config: tier residency decides "
+                                 "dense-vs-paged reads")
+            if Smax % self.block_size:
+                raise ValueError(f"max_len {Smax} not a multiple of "
+                                 f"block_size {self.block_size}")
+            nb_seq = Smax // self.block_size
+            if scfg.pool_blocks is not None and scfg.pool_blocks <= 0:
+                raise ValueError(f"pool_blocks must be positive, got "
+                                 f"{scfg.pool_blocks}")
+            pool_blocks = (scfg.pool_blocks if scfg.pool_blocks is not None
+                           else B * nb_seq)
+            self.allocator = BlockAllocator(pool_blocks, self.block_size)
+            self.sentinel = pool_blocks
+            self.cache = tf.init_decode_cache(
+                cfg, B, Smax, paged_blocks=pool_blocks,
+                block_size=self.block_size)
+            self.pam_state = init_pam_state(B, Smax, num_blocks=nb_seq,
+                                            sentinel=pool_blocks)
+            self.peak_occupancy = 0.0
+            self.blocks_touched_total = 0
+            self.blocks_window_total = 0
+        else:
+            self.cache = tf.init_decode_cache(cfg, B, Smax)
+            self.pam_state = init_pam_state(B, Smax)
 
         self.requests: dict[int, RequestState] = {}
         self.waiting: collections.deque[int] = collections.deque()
@@ -240,7 +361,7 @@ class ServingEngine:
 
         self._micro_jits: dict[int, Any] = {}    # keyed by fused step count
         self._prefill_jit: dict[int, Any] = {}   # keyed by prompt bucket
-        self._admit_jit = _admit_commit_fn(self.pam_cfg)
+        self._admit_jit = _admit_commit_fn(self.pam_cfg, self.block_size)
 
     # ------------------------------------------------------------ builders
     def _get_micro(self, k: int):
@@ -248,7 +369,7 @@ class ServingEngine:
         if k not in self._micro_jits:
             self._micro_jits[k] = _fused_decode_fn(
                 self.cfg, self.pam_cfg, self.scfg.max_len,
-                self.scfg.max_batch, k)
+                self.scfg.max_batch, k, self.block_size, self.sentinel)
         return self._micro_jits[k]
 
     def _bucket_len(self, s_len: int) -> int:
@@ -278,7 +399,10 @@ class ServingEngine:
 
     def _admit(self) -> int:
         """Prefill-priority admission (paper §4.2.3). Returns prompt tokens
-        processed (for the latency model)."""
+        processed (for the latency model). In paged mode each admission
+        first claims pool blocks for its full window (prompt + budget);
+        an exhausted pool leaves the request queued — capacity
+        backpressure instead of failure."""
         admitted_tokens = 0
         free = self._free_slots()
         while self.waiting and free:
@@ -288,6 +412,27 @@ class ServingEngine:
             s_len = len(prompt)
             if s_len + rs.request.max_new_tokens > self.scfg.max_len:
                 raise ValueError(f"request {rid} exceeds max_len")
+            table_row = None
+            if self.allocator is not None:
+                need = self.allocator.blocks_for(
+                    s_len + rs.request.max_new_tokens)
+                if need > self.allocator.num_blocks:
+                    # waiting would never help — fail loudly instead of
+                    # starving this and every queued-behind request
+                    raise ValueError(
+                        f"request {rid} needs {need} blocks but the pool "
+                        f"holds {self.allocator.num_blocks}")
+                try:
+                    self.allocator.allocate(
+                        rid, s_len + rs.request.max_new_tokens)
+                except OutOfBlocks:
+                    self.waiting.appendleft(rid)   # wait for freed blocks
+                    break
+                table_row = self.allocator.padded_table(
+                    rid, self.scfg.max_len // self.block_size,
+                    self.sentinel)
+                self.peak_occupancy = max(self.peak_occupancy,
+                                          self.allocator.occupancy)
             slot = free.pop(0)
             bucket = self._bucket_len(s_len)
             padded = np.zeros((bucket,), np.int32)
@@ -295,9 +440,12 @@ class ServingEngine:
             pre = self._prefill_for_len(bucket)
             first_dev, sub = pre(self.params, jnp.asarray(padded[None]),
                                  jnp.int32(s_len))
-            self.cache, self.pam_state, self.tokens_dev = self._admit_jit(
-                self.cache, self.pam_state, self.tokens_dev, sub,
-                jnp.int32(slot), jnp.int32(s_len), first_dev[0])
+            args = (self.cache, self.pam_state, self.tokens_dev, sub,
+                    jnp.int32(slot), jnp.int32(s_len), first_dev[0])
+            if table_row is not None:
+                args += (jnp.asarray(table_row),)
+            self.cache, self.pam_state, self.tokens_dev = \
+                self._admit_jit(*args)
             first = int(first_dev[0])
             rs.status, rs.slot = RUNNING, slot
             rs.outputs.append(first)
@@ -332,6 +480,12 @@ class ServingEngine:
                     bufs.tier_reads[0], dtype=np.int64)
                 stats["hit_rate"] = float(bufs.hit_rate[0])
                 stats["moved_tokens"] = int(bufs.moved[0])
+            if self.block_size:
+                stats["blocks_touched"] = int(bufs.blocks[0, 0])
+                stats["blocks_window"] = int(bufs.blocks[0, 1])
+                stats["pool_occupancy"] = self.allocator.occupancy
+                self.blocks_touched_total += stats["blocks_touched"]
+                self.blocks_window_total += stats["blocks_window"]
             stats["batch_lengths"] = np.asarray(bufs.lengths[0])
             nxt = np.asarray(bufs.tokens[0])
             self._emit_tokens(nxt, active_np)
@@ -363,6 +517,9 @@ class ServingEngine:
                 rs.status = DONE
                 rs.finish_time = None  # stamped in _stamp_times
                 self.slots[slot] = None
+                if self.allocator is not None:
+                    self.allocator.free(rid)   # blocks recycle; the next
+                    # owner overwrites them at prefill commit
 
     def _stamp_times(self) -> None:
         for rs in self.requests.values():
@@ -426,6 +583,8 @@ class ServingEngine:
                 if rs.planned >= rs.request.max_new_tokens:
                     rs.status = DONE
                     self.slots[slot] = None
+                    if self.allocator is not None:
+                        self.allocator.free(rid)
             if pending is not None:
                 self._consume(pending)      # overlaps with this dispatch
             pending = (bufs, pairs, k, prefill_tokens)
@@ -442,6 +601,10 @@ class ServingEngine:
         moved = np.asarray(bufs.moved)
         lens = np.asarray(bufs.lengths)
         hits = np.asarray(bufs.hit_rate)
+        if self.block_size:
+            blocks = np.asarray(bufs.blocks)
+            self.blocks_touched_total += int(blocks[:, 0].sum())
+            self.blocks_window_total += int(blocks[:, 1].sum())
         if self.latency_model is None:
             wall = time.perf_counter()
             dt_wall = (wall - self._wall_anchor) / k
@@ -469,6 +632,9 @@ class ServingEngine:
 
     # ------------------------------------------------------------ metrics
     def summary(self) -> dict[str, Any]:
+        """Run metrics: throughput, TPOT percentiles, dispatch counts; in
+        paged mode also pages-touched vs dense-window-pages per step (the
+        sparse-read win) and pool occupancy."""
         done = [r for r in self.requests.values() if r.status == DONE]
         total_tokens = sum(len(r.outputs) for r in done)
         tpots = []
@@ -476,7 +642,7 @@ class ServingEngine:
             if len(r.token_times) > 1:
                 gaps = np.diff(r.token_times)
                 tpots.extend(gaps.tolist())
-        return {
+        out = {
             "finished": len(done),
             "total_tokens": total_tokens,
             "sim_time_s": self.clock,
@@ -487,6 +653,13 @@ class ServingEngine:
             "decode_dispatches": self.decode_dispatches,
             "decode_device_steps": self.decode_device_steps,
         }
+        if self.block_size:
+            n = max(self.decode_device_steps, 1)
+            out["blocks_touched_per_step"] = self.blocks_touched_total / n
+            out["blocks_window_per_step"] = self.blocks_window_total / n
+            out["pool_occupancy_peak"] = self.peak_occupancy
+            out["pool_occupancy_now"] = self.allocator.occupancy
+        return out
 
     def slo_attainment(self, slo_s: float) -> float:
         """Fraction of decode-token gaps within the SLO (paper Fig. 9)."""
@@ -497,3 +670,7 @@ class ServingEngine:
         if not gaps:
             return 1.0
         return float(np.mean(np.asarray(gaps) <= slo_s))
+
+
+# Public alias matching the paper's naming.
+PAMEngine = ServingEngine

@@ -1,11 +1,32 @@
 """Paged KV storage (paper §4.2.2: "PAM adopts PagedAttention, using a
 block table to record the physical locations of KV tokens").
 
-``BlockAllocator`` is host-side bookkeeping (free list, per-sequence block
-tables). ``PagedKVPool`` owns the device arrays — one pool per memory tier;
-the warm/cold tiers store paged, the hot tier stores dense kernel-ready
-buffers (see ``pam_manager``). Gather/scatter between layouts goes through
-``repro.core.pam_interface`` (the hardware re-layout unit of §6.2).
+Two layers of machinery live here:
+
+``BlockAllocator`` — host-side bookkeeping (free list, per-sequence block
+tables), the analogue of vLLM's block manager. Allocation happens at
+admission time (one host decision per request, never per decode step), so
+the fused decode dispatch stays a single device call.
+
+``PagedKVPool`` + the module-level pure functions — the device side. One
+pool per hierarchy holds every block of every tier; *tier membership is
+metadata* (the per-token tier tags in ``PAMState``), so an Alg. 2
+migration between warm and cold is a table/tag edit with zero tensor
+movement (see ``repro.core.pam_interface``). Pool arrays are shaped
+
+    (L, num_blocks + 1, block_size, H_kv, d_head)
+
+where the final physical block is a *sentinel*: unmapped block-table
+entries point at it, so masked scatters/gathers need no dynamic shapes —
+writes to unmapped logical blocks land in the sentinel and reads from it
+are masked out by the participation mask.
+
+The serving engine embeds the pool arrays directly in the model's
+``DecodeCache`` (fields ``pk``/``pv``) so they ride the donated fused
+decode dispatch; ``PagedKVPool`` is the standalone container used by
+tests, examples and host-side tools. Gather/scatter between the paged and
+dense layouts goes through ``repro.core.pam_interface`` (the hardware
+re-layout unit of §6.2).
 """
 
 from __future__ import annotations
@@ -18,11 +39,25 @@ import numpy as np
 
 
 class OutOfBlocks(RuntimeError):
-    pass
+    """Raised when an allocation cannot be served from the free list.
+
+    The serving engine treats this as admission backpressure: the request
+    stays queued until finished sequences return blocks to the pool.
+    """
 
 
 class BlockAllocator:
-    """Free-list block allocator with per-sequence tables."""
+    """Free-list block allocator with per-sequence block tables.
+
+    Host-side only. ``allocate(seq_id, n_tokens)`` grows ``seq_id``'s
+    table to cover ``n_tokens`` logical tokens (idempotent for already-
+    covered prefixes) and returns the table — a list of *physical* block
+    ids in logical order. ``free(seq_id)`` returns every block of the
+    sequence to the free list; physical ids are recycled verbatim, so the
+    next owner overwrites stale KV on its prefill commit
+    (``check_no_double_mapping`` certifies the invariant that a physical
+    block never appears in two live tables).
+    """
 
     def __init__(self, num_blocks: int, block_size: int):
         self.num_blocks = num_blocks
@@ -33,6 +68,15 @@ class BlockAllocator:
     @property
     def free_blocks(self) -> int:
         return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of the pool currently mapped to live sequences."""
+        return self.used_blocks / max(self.num_blocks, 1)
 
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
@@ -54,16 +98,88 @@ class BlockAllocator:
     def table(self, seq_id: int) -> list[int]:
         return self.tables.get(seq_id, [])
 
+    def padded_table(self, seq_id: int, n_logical: int,
+                     sentinel: int) -> np.ndarray:
+        """Device-ready table row: ``(n_logical,)`` int32, physical ids in
+        logical order, ``sentinel`` for unmapped logical blocks."""
+        row = np.full((n_logical,), sentinel, np.int32)
+        tbl = self.tables.get(seq_id, [])
+        row[:len(tbl)] = tbl
+        return row
+
     def check_no_double_mapping(self) -> bool:
         used = [b for t in self.tables.values() for b in t]
         return len(used) == len(set(used)) and \
             not (set(used) & set(self._free))
 
 
+# ------------------------------------------------- device-side primitives
+# Pure functions over raw pool arrays so they can be inlined into the
+# engine's donated fused dispatches. All take a PER-LAYER-STACKED pool
+# (L, NB+1, bs, Hkv, dh) unless noted; the decode scan peels the L axis.
+
+def token_block_mask(mask: jax.Array, block_size: int) -> jax.Array:
+    """(B, S) token mask -> (B, S//block_size) "block touched" mask.
+
+    A block participates in the paged gather iff ANY of its tokens does —
+    this is the operand that lets the kernel skip untouched pages.
+    """
+    B, S = mask.shape
+    return mask.reshape(B, S // block_size, block_size).any(axis=-1)
+
+
+def sequence_to_blocks(kv: jax.Array, block_size: int) -> jax.Array:
+    """Dense cache layout -> pool block layout for one batch row.
+
+    kv: (L, Hkv, S, dh) -> (L, S//bs, bs, Hkv, dh). Used by the admission
+    commit to scatter a prefilled sequence into its allocated blocks.
+    """
+    L, Hkv, S, dh = kv.shape
+    kv = jnp.moveaxis(kv, 1, 2)                       # (L, S, Hkv, dh)
+    return kv.reshape(L, S // block_size, block_size, Hkv, dh)
+
+
+def write_prefill(pool: jax.Array, kv: jax.Array,
+                  table_row: jax.Array, block_size: int) -> jax.Array:
+    """Scatter one prefilled sequence into the pool through its table.
+
+    pool: (L, NB+1, bs, Hkv, dh); kv: (L, Hkv, S, dh) dense layout with
+    the prompt in positions [0, prompt_len); table_row: (S//bs,) physical
+    ids (sentinel for unmapped). Whole logical blocks are written — zeros
+    past the prompt are overwritten later by per-step appends; unmapped
+    entries land in the sentinel block.
+    """
+    return pool.at[:, table_row].set(sequence_to_blocks(kv, block_size))
+
+
+def gather_logical(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Reference block-table gather: pool -> logical dense layout.
+
+    pool: (NB+1, bs, Hkv, dh) single-layer slice; block_table: (B, nb)
+    physical ids. Returns (B, Hkv, nb*bs, dh) with tokens in logical
+    order — the jnp mirror of the Pallas kernel's in-grid gather (the
+    kernel additionally skips dead blocks; this reference touches all of
+    them and relies on masking). Delegates to the §6.2 re-layout unit.
+    """
+    from repro.core.pam_interface import paged_gather_logical
+    return paged_gather_logical(pool, block_table)
+
+
 @dataclasses.dataclass
 class PagedKVPool:
-    """Device-side paged KV storage for one tier: K and V pools shaped
-    (L, nblocks, block, Hkv, dh) (or latent (L, nblocks, block, r))."""
+    """Device-side paged KV storage for the memory hierarchy.
+
+    K and V pools are shaped ``(L, num_blocks + 1, block_size, H_kv,
+    d_head)``; the trailing physical block (index ``num_blocks``) is the
+    write/read sentinel for unmapped block-table entries. One pool holds
+    the blocks of *every* tier — tier residency is metadata
+    (``PAMState.tier``), which is what makes Alg. 2 migration a table
+    edit instead of a copy.
+
+    Registered as a pytree (``block_size`` is static aux data) so whole
+    pools can cross jit boundaries in tests and tools; the serving engine
+    instead embeds ``k``/``v`` directly in ``DecodeCache.pk/pv``.
+    """
     k: jax.Array
     v: jax.Array
     block_size: int
@@ -71,23 +187,51 @@ class PagedKVPool:
     @classmethod
     def create(cls, n_layers: int, num_blocks: int, block_size: int,
                n_kv: int, d_head: int, dtype=jnp.bfloat16) -> "PagedKVPool":
-        shape = (n_layers, num_blocks, block_size, n_kv, d_head)
+        shape = (n_layers, num_blocks + 1, block_size, n_kv, d_head)
         return cls(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
                    block_size=block_size)
+
+    @property
+    def num_blocks(self) -> int:
+        """Allocatable blocks (excludes the sentinel)."""
+        return self.k.shape[1] - 1
+
+    @property
+    def sentinel(self) -> int:
+        """Physical id of the trash block unmapped table entries use."""
+        return self.k.shape[1] - 1
+
+    def write_prefill(self, layer_k: jax.Array, layer_v: jax.Array,
+                      table_row: jax.Array) -> "PagedKVPool":
+        """Scatter a prefilled sequence (dense (L, Hkv, S, dh) layout)
+        into the blocks named by ``table_row`` ((S//bs,) physical ids)."""
+        return PagedKVPool(
+            k=write_prefill(self.k, layer_k, table_row, self.block_size),
+            v=write_prefill(self.v, layer_v, table_row, self.block_size),
+            block_size=self.block_size)
+
+    def gather_logical(self, block_table: jax.Array
+                       ) -> tuple[jax.Array, jax.Array]:
+        """Logical-order gather of all layers: returns K and V shaped
+        (L, B, Hkv, nb*bs, dh) for the given (B, nb) block table."""
+        gk = jax.vmap(gather_logical, in_axes=(0, None))(self.k,
+                                                         block_table)
+        gv = jax.vmap(gather_logical, in_axes=(0, None))(self.v,
+                                                         block_table)
+        return gk, gv
 
     def write_tokens(self, layer_k: jax.Array, layer_v: jax.Array,
                      block_ids: np.ndarray, slot_ids: np.ndarray
                      ) -> "PagedKVPool":
-        """Scatter tokens into (block, slot) positions.
+        """Scatter individual tokens into (block, slot) positions.
 
         layer_k/v: (L, T, Hkv, dh); block_ids/slot_ids: (T,).
         """
         bi = jnp.asarray(block_ids)
         si = jnp.asarray(slot_ids)
-        return PagedKVPool(
-            k=self.k.at[:, bi, si].set(jnp.moveaxis(layer_k, 1, 1)),
-            v=self.v.at[:, bi, si].set(jnp.moveaxis(layer_v, 1, 1)),
-            block_size=self.block_size)
+        return PagedKVPool(k=self.k.at[:, bi, si].set(layer_k),
+                           v=self.v.at[:, bi, si].set(layer_v),
+                           block_size=self.block_size)
 
     def gather_tokens(self, block_ids: np.ndarray, slot_ids: np.ndarray
                       ) -> tuple[jax.Array, jax.Array]:
@@ -95,6 +239,18 @@ class PagedKVPool:
         bi = jnp.asarray(block_ids)
         si = jnp.asarray(slot_ids)
         return self.k[:, bi, si], self.v[:, bi, si]
+
+
+def _pool_flatten(p: PagedKVPool):
+    return (p.k, p.v), p.block_size
+
+
+def _pool_unflatten(aux, children):
+    return PagedKVPool(k=children[0], v=children[1], block_size=aux)
+
+
+jax.tree_util.register_pytree_node(PagedKVPool, _pool_flatten,
+                                   _pool_unflatten)
 
 
 def token_to_block_slot(positions: np.ndarray, table: list[int],

@@ -48,20 +48,39 @@ class PAMManagerConfig:
 
 
 class PAMState(NamedTuple):
-    importance: jax.Array    # (B, Smax) fp32
-    tier: jax.Array          # (B, Smax) int32
+    """Per-batch device-side PAM bookkeeping, donated through the fused
+    decode dispatch every step.
+
+    ``block_table`` is the paged-KV mapping of the serving fast path:
+    physical pool block per (sequence, logical block), written once at
+    admission from the host ``BlockAllocator`` and read by the in-kernel
+    gather each step. It is size-0 when the engine runs dense-only.
+    Since the pool is shared across tiers, Alg. 2 migrations edit only
+    ``tier`` — the table itself never changes during decode.
+    """
+    importance: jax.Array    # (B, Smax) fp32 — eq. 7 EMA
+    tier: jax.Array          # (B, Smax) int32 — HOT/WARM/COLD residency
     step: jax.Array          # scalar int32
     moved_tokens: jax.Array  # scalar int32 — cumulative Alg.2 migrations
     last_hot: jax.Array      # (B, Smax) bool — previous participation set
+    block_table: jax.Array   # (B, Smax//bs) int32 physical ids, or (0,)
 
 
-def init_pam_state(batch: int, max_tokens: int) -> PAMState:
+def init_pam_state(batch: int, max_tokens: int, num_blocks: int = 0,
+                   sentinel: int = 0) -> PAMState:
+    """Zero state. ``num_blocks`` > 0 sizes the per-sequence block table
+    (all entries pointing at the pool's ``sentinel`` trash block)."""
+    if num_blocks:
+        table = jnp.full((batch, num_blocks), sentinel, jnp.int32)
+    else:
+        table = jnp.zeros((0,), jnp.int32)
     return PAMState(
         importance=jnp.zeros((batch, max_tokens), jnp.float32),
         tier=jnp.full((batch, max_tokens), COLD, jnp.int32),
         step=jnp.zeros((), jnp.int32),
         moved_tokens=jnp.zeros((), jnp.int32),
         last_hot=jnp.zeros((batch, max_tokens), bool),
+        block_table=table,
     )
 
 
@@ -79,6 +98,51 @@ def make_masked_decode_attn(participate: jax.Array):
                                             participate, kv_lens)
 
     return d_fn
+
+
+def make_paged_decode_attn(hot_mask: jax.Array, paged_mask: jax.Array,
+                           block_table: jax.Array, block_live: jax.Array):
+    """Paged decode-attn factory for the block-table fast path.
+
+    ``hot_mask``/``paged_mask``: (B, Smax) — the participation set split
+    by tier residency (hot reads stay on the dense kernel-ready cache;
+    warm/cold reads gather the shared pool through ``block_table``).
+    ``block_table``: (B, nb) physical ids with dead logical blocks
+    already remapped onto the sentinel; ``block_live``: (B, nb) which
+    blocks hold at least one participating warm/cold token — the pages
+    the gather actually touches.
+
+    The produced function matches the paged ``decode_attn_fn`` contract
+    of ``attention_decode``: ``d_fn(q, kc, vc, pk, pv, kv_lens)`` ->
+    (out, mass).
+    """
+    def d_fn(q, k_cache, v_cache, pk, pv, kv_lens):
+        from repro.kernels import ops as kops
+        return kops.paged_masked_decode_attention(
+            q, k_cache, v_cache, pk, pv, block_table, hot_mask,
+            paged_mask, kv_lens, block_live=block_live)
+
+    return d_fn
+
+
+def paged_participation_split(participate: jax.Array, tier: jax.Array,
+                              lengths: jax.Array, block_size: int
+                              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Split one step's participation set by storage tier.
+
+    Returns (hot_mask, paged_mask, block_live): hot tokens read the dense
+    cache, warm/cold tokens read the paged pool, and ``block_live``
+    ((B, nb) bool) marks the logical blocks the paged gather must touch —
+    ``block_live.sum()`` is the step's pages-read, the sparse-read win
+    the benchmarks record.
+    """
+    from repro.serving.paged_kv import token_block_mask
+    B, Smax = participate.shape
+    valid = jnp.arange(Smax)[None, :] < lengths[:, None]
+    live = participate & valid
+    hot_mask = live & (tier == HOT)
+    paged_mask = live & (tier != HOT)
+    return hot_mask, paged_mask, token_block_mask(paged_mask, block_size)
 
 
 def make_masked_latent_attn(participate: jax.Array):
@@ -168,13 +232,17 @@ def observe_update(cfg: PAMManagerConfig, state: PAMState,
 
     return PAMState(importance=imp, tier=tier, step=state.step + 1,
                     moved_tokens=state.moved_tokens + moved,
-                    last_hot=participate)
+                    last_hot=participate,
+                    block_table=state.block_table)
 
 
 def place_prefill_state(cfg: PAMManagerConfig, state: PAMState,
-                        slot: jax.Array, length: jax.Array) -> PAMState:
+                        slot: jax.Array, length: jax.Array,
+                        table_row: jax.Array | None = None) -> PAMState:
     """Initial placement for one admitted sequence (recency fill-down,
-    §4.3): tail -> HOT, middle -> DDR, head -> SSD."""
+    §4.3): tail -> HOT, middle -> DDR, head -> SSD. ``table_row``
+    ((nb,) physical block ids from the host allocator, sentinel-padded)
+    installs the sequence's paged-KV block table in the same dispatch."""
     Smax = state.importance.shape[1]
     idx = jnp.arange(Smax)
     valid = idx < length
@@ -183,11 +251,15 @@ def place_prefill_state(cfg: PAMManagerConfig, state: PAMState,
                      jnp.where(dist < cfg.hot_capacity
                                + cfg.warm_capacity, WARM, COLD))
     imp = jnp.where(valid, 1.0 / (1.0 + dist.astype(jnp.float32)), 0.0)
-    return state._replace(
+    state = state._replace(
         importance=state.importance.at[slot].set(imp),
         tier=state.tier.at[slot].set(tier.astype(jnp.int32)),
         last_hot=state.last_hot.at[slot].set(False),
     )
+    if table_row is not None:
+        state = state._replace(
+            block_table=state.block_table.at[slot].set(table_row))
+    return state
 
 
 def tier_read_counts_of(tier: jax.Array, participate: jax.Array
