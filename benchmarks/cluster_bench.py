@@ -1,0 +1,119 @@
+"""Multi-device cluster benchmark (paper §4.3): one bursty Poisson
+request stream served by a single device vs a heterogeneous 3-device
+cluster (1x HBM-class + 2x CXL-class) with online KV balancing.
+
+Reports aggregate tok/s, per-device utilization, migrations per 1k
+router ticks and SLO attainment — the PR-4 bench trajectory point
+(``benchmarks/run.py --section cluster --out BENCH_pr4.json``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def bursty_trace(n: int, vocab: int, *, seed: int = 1, burst: int = 16,
+                 gap_in_burst: float = 0.0005, gap_between: float = 0.05,
+                 prompt_len: int = 16, max_new: int = 16):
+    """Bursty Poisson arrivals: exponential gaps with a short mean inside
+    a burst and a long mean between bursts (paper's heavy-traffic online
+    setting)."""
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    t, reqs = 0.0, []
+    for i in range(n):
+        mean = gap_in_burst if (i % burst) else gap_between
+        t += float(rng.exponential(mean))
+        reqs.append(Request(id=i,
+                            prompt=rng.integers(0, vocab, prompt_len),
+                            max_new_tokens=max_new, arrival=t))
+    return reqs
+
+
+def _run_cluster(cfg, params, classes, scfg, trace, balanced: bool,
+                 slo_s: float):
+    from repro.cluster import BalancerConfig, KVBalancer, build_cluster
+    bal = (KVBalancer(BalancerConfig(rebalance_interval=4, hysteresis=1.2,
+                                     cooldown_ticks=8))
+           if balanced else None)
+    router = build_cluster(cfg, params, classes, scfg=scfg, balancer=bal)
+    for req in trace:
+        router.submit(req)
+    summary = router.run()
+    summary["slo_attainment"] = router.slo_attainment(slo_s)
+    summary["slo_s"] = slo_s
+    summary["migrations_per_1k_ticks"] = (
+        1000.0 * summary["migrations"] / max(summary["ticks"], 1))
+    return summary
+
+
+def bench_cluster(n_requests: int = 96, slo_s: float = 0.05,
+                  seed: int = 1) -> dict:
+    """1-device vs heterogeneous 3-device under the same bursty trace.
+
+    Returns the machine-readable comparison: the heterogeneous cluster
+    must beat the best single device on aggregate tok/s with balancer
+    migrations > 0 (the PR-4 acceptance point)."""
+    import jax
+    from repro.models import transformer as tf
+    from repro.models.config import get_config, reduced
+    from repro.perfmodel.devices import CXL_CLASS, HBM_CLASS
+    from repro.serving import PAMManagerConfig, ServingConfig
+
+    cfg = reduced(get_config("pam-llama-7b"))
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    pam = PAMManagerConfig(max_tokens=64, hot_capacity=4, warm_capacity=8,
+                           compression=4, recency_window=2,
+                           schedule_interval=2)
+    scfg = ServingConfig(max_batch=4, max_len=64, pam=pam, block_size=8)
+    trace = lambda: bursty_trace(n_requests, cfg.vocab, seed=seed)
+
+    out = {
+        "config": {
+            "model": cfg.name, "n_requests": n_requests,
+            "prompt_len": 16, "max_new_tokens": 16,
+            "burst": 16, "block_size": 8, "max_len": 64,
+            "devices_single_fast": "hbm:1",
+            "devices_single_slow": "cxl:1",
+            "devices_cluster": "hbm:1,cxl:2",
+            "balancer": {"rebalance_interval": 4, "hysteresis": 1.2,
+                         "cooldown_ticks": 8},
+            "seed": seed,
+        },
+        "single_hbm": _run_cluster(cfg, params, [HBM_CLASS], scfg,
+                                   trace(), balanced=False, slo_s=slo_s),
+        "single_cxl": _run_cluster(cfg, params, [CXL_CLASS], scfg,
+                                   trace(), balanced=False, slo_s=slo_s),
+        "cluster_3dev": _run_cluster(
+            cfg, params, [HBM_CLASS, CXL_CLASS, CXL_CLASS], scfg,
+            trace(), balanced=True, slo_s=slo_s),
+    }
+    best_single = max(out["single_hbm"]["throughput_tok_s"],
+                      out["single_cxl"]["throughput_tok_s"])
+    out["best_single_tok_s"] = best_single
+    out["cluster_tok_s"] = out["cluster_3dev"]["throughput_tok_s"]
+    out["cluster_speedup_vs_best_single"] = (
+        out["cluster_tok_s"] / max(best_single, 1e-9))
+    out["migrations"] = out["cluster_3dev"]["migrations"]
+    return out
+
+
+def cluster_rows(result: Optional[dict] = None) -> tuple[dict, list]:
+    """CSV rows for the harness (+ the computed result)."""
+    res = result if result is not None else bench_cluster()
+    rows = []
+    for name in ("single_hbm", "single_cxl", "cluster_3dev"):
+        s = res[name]
+        util = " ".join(f"{d}={v['utilization']:.2f}"
+                        for d, v in s["devices"].items())
+        rows.append((f"cluster/{name}", s["makespan_s"] * 1e6,
+                     f"tok_s={s['throughput_tok_s']:.1f} "
+                     f"migrations={s['migrations']} "
+                     f"slo={s['slo_attainment']:.3f} util[{util}]"))
+    rows.append(("cluster/speedup_vs_best_single", 0.0,
+                 f"{res['cluster_speedup_vs_best_single']:.2f}x "
+                 f"migrations_per_1k="
+                 f"{res['cluster_3dev']['migrations_per_1k_ticks']:.1f}"))
+    return res, rows

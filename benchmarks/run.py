@@ -18,7 +18,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
                     choices=["all", "figs", "kernels", "engine",
-                             "roofline"])
+                             "roofline", "cluster"])
     ap.add_argument("--dryrun-dir", default="experiments/dryrun")
     ap.add_argument("--out", default=None, metavar="BENCH.json",
                     help="write decode tokens/s + dispatch counts (and all "
@@ -48,6 +48,11 @@ def main(argv=None) -> None:
     if args.section in ("all", "roofline"):
         from benchmarks.roofline import roofline_rows
         rows += roofline_rows(args.dryrun_dir)
+    cluster = None
+    if args.section in ("all", "cluster"):
+        from benchmarks.cluster_bench import cluster_rows
+        cluster, crows = cluster_rows()
+        rows += crows
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
@@ -57,7 +62,18 @@ def main(argv=None) -> None:
         payload = {
             "rows": [{"name": n, "us_per_call": us, "derived": d}
                      for n, us, d in rows],
+            "suite": {"section": args.section, "n_rows": len(rows)},
         }
+        if cluster is not None:
+            # heterogeneous-cluster trajectory point (paper §4.3):
+            # 1 device vs 3-device cluster under the same bursty trace
+            payload["cluster"] = cluster
+            payload["cluster_tok_s"] = cluster["cluster_tok_s"]
+            payload["cluster_best_single_tok_s"] = \
+                cluster["best_single_tok_s"]
+            payload["cluster_speedup_vs_best_single"] = \
+                cluster["cluster_speedup_vs_best_single"]
+            payload["cluster_migrations"] = cluster["migrations"]
         if wallclock is not None:
             payload["decode_wallclock"] = wallclock
             payload["decode_tok_s"] = wallclock["micro"]["decode_tok_s"]

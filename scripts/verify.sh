@@ -23,5 +23,8 @@ print(f"smoke OK: {d['decode_tok_s']:.0f} tok/s, "
       f"{d['paged_blocks_touched_per_step']:.1f}"
       f"/{d['paged_blocks_window_per_step']:.1f}")
 EOF
+
+    echo "== cluster smoke (2 device classes, migration exactness) =="
+    python scripts/cluster_smoke.py
 fi
 echo "verify OK"

@@ -1,0 +1,12 @@
+"""Multi-device PAM cluster (paper §4.3): heterogeneous-device router,
+inter-device KV migration, and online load balancing over N serving
+engines."""
+
+from repro.cluster.balancer import BalancerConfig, KVBalancer
+from repro.cluster.migration import KVSnapshot, can_migrate, migrate
+from repro.cluster.router import (ClusterDevice, ClusterRouter,
+                                  RouterConfig, TokenEvent, build_cluster)
+
+__all__ = ["BalancerConfig", "KVBalancer", "KVSnapshot", "can_migrate",
+           "migrate", "ClusterDevice", "ClusterRouter", "RouterConfig",
+           "TokenEvent", "build_cluster"]

@@ -1,0 +1,140 @@
+"""Inter-device KV migration (paper §4.3 / §6.2) — move a *running*
+request between serving engines.
+
+The currency is the ``KVSnapshot``: the request's KV in the portable
+logical layout (hot tokens read from the source's dense cache, warm/cold
+tokens gathered from the paged pool THROUGH the block table —
+``paged_kv.gather_sequence``, the §6.2 command-reorder/sender step),
+plus the per-token PAM state (importance EMA, tier tags, participation
+history) and the host bookkeeping (emitted tokens, timing marks, the
+on-device next-token seed).
+
+Export frees the source's slot and pool blocks *without finishing* the
+request; import is an admission-style donated dispatch on the target
+that scatters the snapshot into a free slot and a freshly-allocated
+block table (the §6.2 address-generation/receiver step). Physical block
+ids never travel — they are device-local; only logical-layout KV does.
+
+Because the fused decode step's token choice depends only on the KV
+bytes, the importance EMA and the cache length — never on tier tags or
+the engine's global step parity (tier residency selects *which storage
+is read*, and Alg. 1 merging makes the output exact under any split) —
+a GREEDY (temperature=0) request's migrated token stream is IDENTICAL
+to an unmigrated twin's; ``tests/test_cluster.py`` pins that exactness
+across device classes. Sampled (temperature>0) requests migrate too,
+but continue under the target engine's own threaded PRNG —
+``can_migrate`` therefore requires matching sampling policy, not
+matching PRNG state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.serving.engine import Request, ServingEngine
+
+
+@dataclasses.dataclass
+class KVSnapshot:
+    """Portable mid-decode state of one request (see module docstring).
+
+    ``kv_bytes`` is the transfer volume a real interconnect would carry
+    — only the *live* window (length tokens x layers x heads x head_dim
+    x 2 tensors), which the router charges against the migration link.
+    """
+    request: Request
+    outputs: list[int]             # tokens emitted so far (incl. prefill)
+    length: int                    # cache length at export
+    token: int                     # on-device next-token seed
+    k: np.ndarray                  # (L, Hkv, Smax, dh) logical layout
+    v: np.ndarray
+    importance: Optional[np.ndarray]   # (Smax,) eq. 7 EMA, or None
+    tier: Optional[np.ndarray]         # (Smax,) tier tags, or None
+    last_hot: Optional[np.ndarray]     # (Smax,) participation history
+    first_token_time: Optional[float]
+    token_times: list[float]
+    src: str                       # exporting device name
+
+    @property
+    def kv_bytes(self) -> int:
+        L, Hkv, _, dh = self.k.shape
+        return 2 * L * Hkv * dh * self.length * self.k.dtype.itemsize
+
+    @classmethod
+    def export(cls, engine: ServingEngine, rid: int) -> "KVSnapshot":
+        """Detach a running request from ``engine`` (frees its slot and
+        blocks) and wrap its state portably."""
+        d = engine.export_request(rid)
+        return cls(request=d["request"], outputs=d["outputs"],
+                   length=d["length"], token=d["token"], k=d["k"],
+                   v=d["v"], importance=d["importance"], tier=d["tier"],
+                   last_hot=d["last_hot"],
+                   first_token_time=d["first_token_time"],
+                   token_times=d["token_times"], src=d["src"])
+
+    def commit(self, engine: ServingEngine) -> None:
+        """Install this snapshot on ``engine`` (one donated dispatch);
+        decode resumes at the next engine step."""
+        engine.import_request({
+            "request": self.request, "outputs": self.outputs,
+            "planned": len(self.outputs), "length": self.length,
+            "token": self.token, "k": self.k, "v": self.v,
+            "importance": self.importance, "tier": self.tier,
+            "last_hot": self.last_hot,
+            "first_token_time": self.first_token_time,
+            "token_times": self.token_times,
+        })
+
+
+def can_migrate(src: ServingEngine, dst: ServingEngine, rid: int) -> bool:
+    """Feasibility precheck: ``rid`` runs on ``src`` and ``dst`` can take
+    its window right now (free slot + pool blocks) with a matching cache
+    geometry AND an identical PAM policy — the participation mask (and
+    hence the token stream) depends on the PAM config, so migrating
+    between mismatched policies would silently break exactness. (Model
+    config/params equality is the cluster builder's invariant: every
+    device serves one model.)"""
+    rs = src.requests.get(rid)
+    if rs is None or rs.status != "running":
+        return False
+    if dst.scfg.max_len != src.scfg.max_len:
+        return False
+    if dst.pam_cfg != src.pam_cfg:
+        return False
+    # sampling policy must match too; note the exactness guarantee is a
+    # GREEDY (temperature=0) property — sampled streams continue under
+    # the target's own threaded PRNG after a migration
+    if (dst.scfg.temperature, dst.scfg.top_k) != (src.scfg.temperature,
+                                                  src.scfg.top_k):
+        return False
+    window = len(rs.request.prompt) + rs.request.max_new_tokens
+    # reserve_queued=False: a rescue may compete with the target's own
+    # queued admissions (see ServingEngine.can_accept)
+    return dst.serviceable(window) and dst.can_accept(
+        window, reserve_queued=False)
+
+
+def migrate(src: ServingEngine, dst: ServingEngine, rid: int,
+            link_bw: float = 0.0) -> dict[str, Any]:
+    """Move running request ``rid`` from ``src`` to ``dst``.
+
+    Returns a migration record (bytes moved, modeled transfer seconds at
+    ``link_bw`` — 0 disables the charge). The caller (normally the
+    balancer) is responsible for the feasibility precheck and for
+    advancing the destination clock by ``transfer_s``.
+    """
+    snap = KVSnapshot.export(src, rid)
+    try:
+        snap.commit(dst)
+    except Exception:
+        # roll back: the source freed slot/blocks on export, so it can
+        # always take its own request back
+        snap.commit(src)
+        raise
+    transfer_s = snap.kv_bytes / link_bw if link_bw > 0 else 0.0
+    return {"rid": rid, "src": src.name, "dst": dst.name,
+            "tokens": snap.length, "bytes": snap.kv_bytes,
+            "transfer_s": transfer_s}

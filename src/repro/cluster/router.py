@@ -1,0 +1,334 @@
+"""Multi-device cluster router (paper §4.3): one request stream served
+across N heterogeneous ``ServingEngine`` instances.
+
+The router owns a SHARED arrival queue and binds requests to devices as
+late as possible: a queued request is dispatched only when some device
+can admit it *right now*, to the device with the lowest admission cost
+
+    cost = (queue + running + 1) * modeled_step_latency
+           + occupancy_weight * pool_occupancy
+
+— modeled load plus pool pressure, the paper's inter-device cost signal.
+Each device keeps its own simulated clock (its perfmodel latency model
+charges every step); the router advances the fleet EVENT-DRIVEN, always
+stepping the busy device whose clock is furthest behind, so fast devices
+take more steps per simulated second exactly as real hardware would.
+Completed tokens stream out through ``drain_events`` as they are
+emitted, and an attached ``KVBalancer`` periodically migrates running
+requests off overloaded devices (``repro.cluster.migration``).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Iterable, Optional
+
+import numpy as np
+
+from repro.cluster.balancer import BalancerConfig, KVBalancer
+from repro.perfmodel.devices import (DeviceClass, make_device_latency_model,
+                                     step_time_prior)
+from repro.serving.engine import DONE, Request, ServingEngine, ServingConfig
+
+
+@dataclasses.dataclass
+class TokenEvent:
+    """One streamed completion token (the router's streaming API)."""
+    time: float                  # device sim-clock at emission
+    request_id: int
+    token: int
+    index: int                   # position in the request's output
+    device: str
+    done: bool                   # True on the request's final token
+
+
+@dataclasses.dataclass
+class ClusterDevice:
+    """One engine + its device class inside the router."""
+    name: str
+    cls: DeviceClass
+    engine: ServingEngine
+    step_prior: float = 0.0      # a-priori step latency (cost signal seed)
+    prefill_tok_prior: float = 0.0   # modeled seconds per prefill token
+    tokens_emitted: int = 0
+    steps: int = 0
+
+    def has_work(self) -> bool:
+        eng = self.engine
+        return bool(eng.waiting) or any(s is not None for s in eng.slots)
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    occupancy_weight: float = 1e-3   # pool-pressure term in the cost
+    max_ticks: int = 200_000
+
+
+class ClusterRouter:
+    """Route one request stream over heterogeneous serving engines."""
+
+    def __init__(self, devices: list[ClusterDevice],
+                 balancer: Optional[KVBalancer] = None,
+                 rcfg: RouterConfig = RouterConfig()):
+        if not devices:
+            raise ValueError("cluster needs at least one device")
+        names = [d.name for d in devices]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate device names: {names}")
+        self.devices = devices
+        self.balancer = balancer
+        self.rcfg = rcfg
+        self.arrivals: collections.deque[Request] = collections.deque()
+        self.queue: collections.deque[Request] = collections.deque()
+        self.ticks = 0
+        self.finished: dict[int, Any] = {}       # rid -> RequestState
+        self._events: list[TokenEvent] = []
+        self._seen_tokens: dict[int, int] = {}   # rid -> emitted count
+        self._shape: dict[int, tuple[int, int]] = {}  # rid -> (prompt, gen)
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        """Add a request to the shared stream (``req.arrival`` is its
+        simulated arrival time; submissions must be time-ordered)."""
+        window = len(req.prompt) + req.max_new_tokens
+        if not any(d.engine.serviceable(window) for d in self.devices):
+            raise ValueError(f"request {req.id}: window {window} fits no "
+                             f"device in the cluster")
+        if self.arrivals and req.arrival < self.arrivals[-1].arrival:
+            raise ValueError("submit arrivals in nondecreasing time order")
+        self.arrivals.append(req)
+        self._shape[req.id] = (len(req.prompt), req.max_new_tokens)
+
+    def submit_to(self, req: Request, device_name: str) -> None:
+        """Pin a request to one device, bypassing cost-based dispatch
+        (tests/demos use this to pre-load a device; real traffic should
+        go through ``submit``). Registers the router bookkeeping so
+        completions, events and migrations track the request normally."""
+        dev = self._by_name(device_name)
+        window = len(req.prompt) + req.max_new_tokens
+        if not dev.engine.serviceable(window):
+            raise ValueError(f"request {req.id}: window {window} does not "
+                             f"fit device {device_name}")
+        self._shape[req.id] = (len(req.prompt), req.max_new_tokens)
+        dev.engine.submit(req)
+
+    # ------------------------------------------------------------ signals
+    def now(self) -> float:
+        """Cluster frontier: the slowest busy device's clock (all-idle:
+        the max clock — nothing is in flight before it)."""
+        busy = [d.engine.clock for d in self.devices if d.has_work()]
+        if busy:
+            return min(busy)
+        return max(d.engine.clock for d in self.devices)
+
+    def admission_cost(self, dev: ClusterDevice, prompt_len: int,
+                       gen_len: int, pending: int = 0) -> float:
+        """Expected completion cost of placing one request on ``dev``:
+        its full service time there (modeled prefill of the prompt +
+        ``gen_len`` modeled decode steps), multiplied by the admission
+        waves already ahead of it (device queue, ``pending`` shared-queue
+        requests deferred toward it this round, and half the mid-flight
+        running batch), plus pool pressure. Pricing the *whole* service
+        — prefill included — is what stops bursts from sinking onto a
+        slow device whose queue-free slots look temptingly open."""
+        sig = dev.engine.load_signal()
+        step = sig["last_step_time"] or dev.step_prior
+        service = prompt_len * dev.prefill_tok_prior + gen_len * step
+        ahead = (sig["queue_depth"] + pending + 0.5 * sig["running"])
+        waves = -(-int(ahead + 1) // max(dev.engine.scfg.max_batch, 1))
+        return (waves * service
+                + self.rcfg.occupancy_weight * sig["pool_occupancy"])
+
+    # ----------------------------------------------------------- dispatch
+    def _release_arrivals(self) -> None:
+        horizon = self.now()
+        while self.arrivals and self.arrivals[0].arrival <= horizon:
+            self.queue.append(self.arrivals.popleft())
+
+    def _dispatch(self) -> None:
+        """Cost-based late binding. Each queued request is priced on
+        every serviceable device — including busy ones it would have to
+        WAIT for — and bound to the cheapest. If the winner cannot admit
+        it right now the request stays in the shared queue (deferred:
+        queueing for a fast device beats sinking a burst onto a slow
+        one), with a virtual-depth mark so the rest of the round prices
+        that device as one deeper."""
+        still: collections.deque[Request] = collections.deque()
+        virtual = {d.name: 0 for d in self.devices}
+        while self.queue:
+            req = self.queue.popleft()
+            prompt_len, gen_len = self._shape[req.id]
+            window = prompt_len + gen_len
+            cands = [d for d in self.devices
+                     if d.engine.serviceable(window)]
+            best = min(cands, key=lambda d: self.admission_cost(
+                d, prompt_len, gen_len, pending=virtual[d.name]))
+            # can_accept nets out the device's own waiting queue, so one
+            # dispatch round cannot over-assign a device
+            if best.engine.can_accept(window):
+                # an idle device may have an old clock; it cannot serve
+                # a request before the request exists
+                best.engine.clock = max(best.engine.clock, req.arrival)
+                best.engine.submit(req)
+            else:
+                virtual[best.name] += 1
+                still.append(req)
+        self.queue = still
+
+    # ------------------------------------------------------------ stepping
+    def _collect(self, dev: ClusterDevice) -> None:
+        """Diff the device's request states into stream events and pick
+        up completions."""
+        eng = dev.engine
+        done_rids = []
+        for rid, rs in eng.requests.items():
+            seen = self._seen_tokens.get(rid, 0)
+            for i in range(seen, len(rs.outputs)):
+                t = (rs.token_times[i] if i < len(rs.token_times)
+                     else eng.clock)
+                self._events.append(TokenEvent(
+                    time=t, request_id=rid, token=rs.outputs[i], index=i,
+                    device=dev.name,
+                    done=(rs.status == DONE and i == len(rs.outputs) - 1)))
+                dev.tokens_emitted += 1
+            self._seen_tokens[rid] = len(rs.outputs)
+            if rs.status == DONE:
+                done_rids.append(rid)
+        for rid in done_rids:
+            self.finished[rid] = eng.requests.pop(rid)
+
+    def tick(self) -> bool:
+        """One router iteration. Returns False when the stream is fully
+        served (no arrivals, no queue, no running work)."""
+        # idle fleet + future arrivals: jump the fleet to the next event
+        if (self.arrivals and not self.queue
+                and not any(d.has_work() for d in self.devices)):
+            t = self.arrivals[0].arrival
+            for d in self.devices:
+                d.engine.clock = max(d.engine.clock, t)
+        self._release_arrivals()
+        self._dispatch()
+        busy = [d for d in self.devices if d.has_work()]
+        if not busy:
+            return bool(self.arrivals or self.queue)
+        # event-driven: advance the furthest-behind busy device
+        dev = min(busy, key=lambda d: d.engine.clock)
+        dev.engine.step()
+        dev.steps += 1
+        self._collect(dev)
+        self.ticks += 1
+        if (self.balancer is not None
+                and self.ticks % self.balancer.cfg.rebalance_interval == 0):
+            # migrated requests carry their outputs with them; pending
+            # tokens surface at the destination's next _collect
+            self.balancer.rebalance(self.devices, self.ticks)
+        return True
+
+    def run(self, max_ticks: Optional[int] = None) -> dict[str, Any]:
+        limit = max_ticks if max_ticks is not None else self.rcfg.max_ticks
+        for _ in range(limit):
+            if not self.tick():
+                break
+        else:
+            raise RuntimeError(f"cluster did not drain in {limit} ticks")
+        return self.summary()
+
+    def _by_name(self, name: str) -> ClusterDevice:
+        return next(d for d in self.devices if d.name == name)
+
+    # ----------------------------------------------------------- streaming
+    def drain_events(self) -> list[TokenEvent]:
+        """Streaming completion API: token events emitted since the last
+        drain, in emission order."""
+        out, self._events = self._events, []
+        return out
+
+    # ------------------------------------------------------------- metrics
+    def summary(self) -> dict[str, Any]:
+        makespan = max(d.engine.clock for d in self.devices)
+        total_tokens = sum(len(rs.outputs) for rs in self.finished.values())
+        per_device = {}
+        for d in self.devices:
+            per_device[d.name] = {
+                "class": d.cls.name,
+                "steps": d.steps,
+                "tokens_emitted": d.tokens_emitted,
+                "busy_time_s": d.engine.busy_time,
+                "utilization": (d.engine.busy_time / makespan
+                                if makespan > 0 else 0.0),
+                "decode_dispatches": d.engine.decode_dispatches,
+                "decode_device_steps": d.engine.decode_device_steps,
+                "migrations_in": d.engine.migrations_in,
+                "migrations_out": d.engine.migrations_out,
+            }
+        out = {
+            "finished": len(self.finished),
+            "total_tokens": total_tokens,
+            "makespan_s": makespan,
+            "throughput_tok_s": (total_tokens / makespan
+                                 if makespan > 0 else 0.0),
+            "migrations": (self.balancer.migrations
+                           if self.balancer is not None else 0),
+            "migrated_bytes": (self.balancer.moved_bytes
+                               if self.balancer is not None else 0),
+            "ticks": self.ticks,
+            "devices": per_device,
+        }
+        return out
+
+    def slo_attainment(self, slo_s: float) -> float:
+        """Fraction of decode-token gaps within the SLO, fleet-wide
+        (migration seams clamp at 0 — clocks resync on transfer)."""
+        gaps: list[float] = []
+        for rs in self.finished.values():
+            if len(rs.token_times) > 1:
+                gaps.extend(np.maximum(np.diff(rs.token_times), 0.0)
+                            .tolist())
+        if not gaps:
+            return 1.0
+        return float(np.mean(np.asarray(gaps) <= slo_s))
+
+
+# ------------------------------------------------------------ construction
+def build_cluster(cfg, params, device_classes: Iterable[DeviceClass], *,
+                  scfg: ServingConfig, model_desc=None,
+                  balancer: Optional[KVBalancer] = None,
+                  bcfg: Optional[BalancerConfig] = None,
+                  rcfg: RouterConfig = RouterConfig(),
+                  wallclock: bool = False) -> ClusterRouter:
+    """Build a heterogeneous cluster serving one model.
+
+    ``scfg`` is the per-engine template; each device class overrides
+    ``max_batch``/``pool_blocks`` from its own capacity profile and gets
+    its own perfmodel latency model (``wallclock=True`` disables modeled
+    timing — used by wall-clock benches). Engines share ``params`` (one
+    replica per device, as on real fleets)."""
+    from repro.perfmodel.model import PAM_LLAMA_7B
+    model_desc = model_desc or PAM_LLAMA_7B
+    devices: list[ClusterDevice] = []
+    counts: dict[str, int] = {}
+    for dc in device_classes:
+        idx = counts.get(dc.name, 0)
+        counts[dc.name] = idx + 1
+        name = f"{dc.name}{idx}"
+        dev_scfg = dataclasses.replace(
+            scfg, max_batch=dc.max_batch,
+            pool_blocks=(dc.pool_blocks(scfg.max_len, scfg.block_size)
+                         if scfg.block_size else None))
+        lat = None if wallclock else make_device_latency_model(dc,
+                                                               model_desc)
+        eng = ServingEngine(cfg, params, dev_scfg, latency_model=lat,
+                            name=name)
+        prior = (step_time_prior(dc, model_desc) if not wallclock else 0.0)
+        ppt = (float(lat({"prefill_tokens": 1, "active": 0}))
+               if lat is not None else 0.0)
+        devices.append(ClusterDevice(name=name, cls=dc, engine=eng,
+                                     step_prior=prior,
+                                     prefill_tok_prior=ppt))
+    if balancer is None and bcfg is not None:
+        balancer = KVBalancer(bcfg)
+    if balancer is not None and not wallclock and not balancer.token_bytes:
+        # charge migrations for the MODELED per-token KV volume
+        balancer.token_bytes = model_desc.kv_bytes_per_token()
+    return ClusterRouter(devices, balancer=balancer, rcfg=rcfg)

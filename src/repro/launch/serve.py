@@ -3,6 +3,12 @@ stream, with the paper's timing model attached.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
         --reduced --requests 16 --system pam
+
+Multi-device cluster mode (paper §4.3) — route the stream across
+heterogeneous devices with online KV balancing:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+        --reduced --requests 32 --devices hbm:1,cxl:2 --block-size 8
 """
 
 from __future__ import annotations
@@ -37,6 +43,14 @@ def main(argv=None):
                     help="paged warm/cold KV block tokens (0 = dense)")
     ap.add_argument("--pool-blocks", type=int, default=None,
                     help="physical pool blocks (default: no overcommit)")
+    ap.add_argument("--devices", default=None, metavar="SPEC",
+                    help="cluster mode: heterogeneous device spec, e.g. "
+                         "'hbm:1,cxl:2' (see repro.perfmodel.devices)")
+    ap.add_argument("--arrival-gap-ms", type=float, default=2.0,
+                    help="cluster mode: mean Poisson arrival gap")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="on-device sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -53,18 +67,41 @@ def main(argv=None):
             compression=4, recency_window=8, schedule_interval=2,
             use_sparsity=not args.no_sparsity)
 
+    scfg = ServingConfig(max_batch=args.max_batch, max_len=args.max_len,
+                         pam=pam_cfg, block_size=args.block_size,
+                         pool_blocks=args.pool_blocks,
+                         temperature=args.temperature, top_k=args.top_k)
+    rng = np.random.default_rng(0)
+
+    if args.devices:                   # ---- cluster mode (paper §4.3)
+        if args.system not in ("pam", "wallclock"):
+            ap.error("--devices models PAM-class devices; --system must "
+                     "be 'pam' (modeled, the default) or 'wallclock'")
+        from repro.cluster import BalancerConfig, KVBalancer, build_cluster
+        from repro.perfmodel.devices import parse_devices
+        router = build_cluster(
+            cfg, params, parse_devices(args.devices), scfg=scfg,
+            balancer=KVBalancer(BalancerConfig()),
+            wallclock=(args.system == "wallclock"))
+        t = 0.0
+        for i in range(args.requests):
+            t += float(rng.exponential(args.arrival_gap_ms / 1e3))
+            router.submit(Request(
+                id=i, prompt=rng.integers(0, cfg.vocab, args.prompt_len),
+                max_new_tokens=args.gen_len, arrival=t))
+        summary = router.run()
+        print(json.dumps(summary, indent=1))
+        for slo_ms in (100, 150, 200):
+            print(f"SLO {slo_ms}ms attainment: "
+                  f"{router.slo_attainment(slo_ms/1e3):.3f}")
+        return
+
     latency = None
     if args.system != "wallclock":
         latency = make_latency_model(make_system(args.system), PAM_LLAMA_7B)
 
-    eng = ServingEngine(
-        cfg, params,
-        ServingConfig(max_batch=args.max_batch, max_len=args.max_len,
-                      pam=pam_cfg, block_size=args.block_size,
-                      pool_blocks=args.pool_blocks),
-        latency_model=latency)
+    eng = ServingEngine(cfg, params, scfg, latency_model=latency)
 
-    rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(
             id=i, prompt=rng.integers(0, cfg.vocab, args.prompt_len),

@@ -5,7 +5,13 @@ from repro.perfmodel.model import (SystemModel, SystemKind, StepWorkload,
                                    make_system, simulate_decode_step,
                                    simulate_offline, simulate_online)
 from repro.perfmodel.latency import make_latency_model
+from repro.perfmodel.devices import (DEVICE_CLASSES, DeviceClass,
+                                     get_device_class,
+                                     make_device_latency_model,
+                                     parse_devices, step_time_prior)
 
 __all__ = ["SystemModel", "SystemKind", "StepWorkload", "make_system",
            "simulate_decode_step", "simulate_offline", "simulate_online",
-           "make_latency_model"]
+           "make_latency_model", "DEVICE_CLASSES", "DeviceClass",
+           "get_device_class", "make_device_latency_model",
+           "parse_devices", "step_time_prior"]

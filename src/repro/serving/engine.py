@@ -18,10 +18,26 @@ host only reads back a small ``StepBufs`` stats/tokens struct. Tokens stay
 on device between steps (the sampled token feeds the next dispatch without
 a host round-trip), ``run()`` consumes step *t-1*'s buffers while step *t*
 runs (async dispatch), and ``micro_steps > 1`` wraps a ``lax.fori_loop``
-micro-loop around the fused body so the no-EOS benchmark path visits the
-host only once every k steps. Prefill lengths are bucketed to powers of
-two (capping jit-cache blowup) and each admission commits cache scatter +
-PAM placement + token seed in one donated dispatch.
+micro-loop around the fused body so the host is visited only once every k
+steps. Sampling is on-device too: ``temperature``/``top_k`` with a
+threaded+donated PRNG key (0 = exact greedy argmax), and ``eos_token >=
+0`` folds EOS detection into the dispatch — a slot that samples EOS drops
+out of the ``active`` carry, so the micro-loop serves EOS traffic as well.
+Prefill lengths are bucketed to powers of two (capping jit-cache blowup)
+and admissions sharing a bucket commit as a GROUP: one batched prefill +
+one donated multi-slot dispatch for cache scatter + PAM placement + token
+seeds.
+
+Cluster hooks
+-------------
+``export_request``/``import_request`` detach and re-admit a RUNNING
+request mid-decode (inter-device KV migration, paper §4.3/§6.2): export
+gathers the request's KV into the portable logical layout — hot tokens
+from the dense cache, warm/cold THROUGH the block table — and frees the
+slot and pool blocks without finishing; import is one donated
+admission-style dispatch on the target. ``load_signal``/``can_accept``/
+``slot_importance_mass`` feed the router and balancer cost signals
+(``repro.cluster``).
 
 Paged warm/cold tiers
 ---------------------
@@ -54,6 +70,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.tiers import HOT
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
 from repro.serving import pam_manager as pm
@@ -103,10 +120,12 @@ class ServingConfig:
     eos_token: int = -1                # -1: run to max_new_tokens
     pam: Optional[PAMManagerConfig] = None   # None -> dense baseline
     micro_steps: int = 1               # decode steps fused per dispatch
-                                       # (>1 needs eos_token == -1)
     bucket_prefill: bool = True        # pow-2 prompt-length buckets
     block_size: int = 0                # paged-KV block tokens (0 = dense)
     pool_blocks: Optional[int] = None  # physical blocks (None = full)
+    temperature: float = 0.0           # 0 = greedy argmax (exact tests)
+    top_k: int = 0                     # 0 = full softmax when sampling
+    sample_seed: int = 0               # threaded on-device PRNG key seed
 
 
 class StepBufs(NamedTuple):
@@ -127,16 +146,38 @@ class StepBufs(NamedTuple):
 # the same configuration reuses the compiled fused step instead of paying
 # compile again (configs are frozen dataclasses, hence hashable).
 
+def _sample_tokens(logits, rng, temperature: float, top_k: int):
+    """On-device sampling: greedy argmax when ``temperature == 0``
+    (static — compiles to the exact PR-1 fast path), else temperature
+    softmax with optional top-k filtering, drawn from the threaded PRNG
+    key. Returns (tokens, new_rng)."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), rng
+    lg = logits.astype(jnp.float32) / temperature
+    if 0 < top_k < lg.shape[-1]:
+        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    rng, sub = jax.random.split(rng)
+    return jax.random.categorical(sub, lg, axis=-1).astype(jnp.int32), rng
+
+
 def _fused_decode_body(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
                        smax: int, bs: int, sentinel: int,
-                       params, tokens, cache, pam_state, active):
+                       temperature: float, top_k: int, eos: int,
+                       params, tokens, cache, pam_state, active, rng):
     """ONE decode step of the full PAM pipeline, pure & traceable:
-    participation -> masked decode -> stats -> observe -> argmax.
+    participation -> masked decode -> stats -> observe -> sample.
 
     ``bs`` > 0 selects the paged warm/cold path: the participation set is
     split by tier, warm/cold reads gather the pool through
     ``pam_state.block_table`` (dead pages remapped to ``sentinel``), and
     the appended token is mirrored into its mapped block.
+
+    ``eos >= 0`` folds EOS detection into the dispatch: a slot that
+    samples EOS is deactivated *on device* (returned ``active`` drops
+    it), so the multi-step micro-loop can serve eos traffic without a
+    host check between fused steps — finished slots freeze their cache
+    lengths and token for the remaining micro-steps.
     """
     B = active.shape[0]
     lengths = cache.lengths + active.astype(jnp.int32)
@@ -193,20 +234,25 @@ def _fused_decode_body(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
         hit = jnp.zeros((), jnp.float32)
         moved = jnp.zeros((), jnp.int32)
 
-    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    nxt, rng = _sample_tokens(logits, rng, temperature, top_k)
     tokens = jnp.where(active, nxt, tokens)
-    return tokens, cache, pam_state, (tier_reads, hit, moved,
-                                      cache.lengths, blocks)
+    if eos >= 0:
+        active = active & (tokens != eos)   # EOS emitted -> slot freezes
+    return tokens, cache, pam_state, active, rng, (tier_reads, hit, moved,
+                                                   cache.lengths, blocks)
 
 
 @functools.lru_cache(maxsize=None)
 def _fused_decode_fn(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
                      smax: int, batch: int, k: int, bs: int = 0,
-                     sentinel: int = 0):
+                     sentinel: int = 0, temperature: float = 0.0,
+                     top_k: int = 0, eos: int = -1):
     """Fused decode dispatch running ``k`` steps on device. Cache (dense
-    buffers AND paged pools), PAM state (including the block table) and
-    the token vector are DONATED — zero per-step copies."""
-    def run_k(params, tokens, cache, pam_state, active):
+    buffers AND paged pools), PAM state (including the block table), the
+    token vector and the PRNG key are DONATED — zero per-step copies.
+    The active mask rides the micro-loop carry so on-device EOS
+    detection (``eos >= 0``) freezes finished slots mid-dispatch."""
+    def run_k(params, tokens, cache, pam_state, active, rng):
         bufs = StepBufs(
             tokens=jnp.zeros((k, batch), jnp.int32),
             tier_reads=jnp.zeros((k, 3), jnp.int32),
@@ -216,10 +262,11 @@ def _fused_decode_fn(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
             blocks=jnp.zeros((k, 2), jnp.int32))
 
         def step_i(i, carry):
-            tokens, cache, pam_state, bufs = carry
-            tokens, cache, pam_state, (reads, hit, moved, lens, blk) = \
-                _fused_decode_body(cfg, pcfg, smax, bs, sentinel, params,
-                                   tokens, cache, pam_state, active)
+            tokens, cache, pam_state, active, rng, bufs = carry
+            tokens, cache, pam_state, active, rng, \
+                (reads, hit, moved, lens, blk) = _fused_decode_body(
+                    cfg, pcfg, smax, bs, sentinel, temperature, top_k,
+                    eos, params, tokens, cache, pam_state, active, rng)
             bufs = StepBufs(
                 tokens=bufs.tokens.at[i].set(tokens),
                 tier_reads=bufs.tier_reads.at[i].set(reads),
@@ -227,69 +274,133 @@ def _fused_decode_fn(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
                 moved=bufs.moved.at[i].set(moved),
                 lengths=bufs.lengths.at[i].set(lens),
                 blocks=bufs.blocks.at[i].set(blk))
-            return tokens, cache, pam_state, bufs
+            return tokens, cache, pam_state, active, rng, bufs
 
-        carry = (tokens, cache, pam_state, bufs)
+        carry = (tokens, cache, pam_state, active, rng, bufs)
         if k == 1:
             carry = step_i(0, carry)
         else:
             carry = jax.lax.fori_loop(0, k, step_i, carry)
-        return carry
+        tokens, cache, pam_state, active, rng, bufs = carry
+        return tokens, cache, pam_state, rng, bufs
 
-    return jax.jit(run_k, donate_argnums=(1, 2, 3))
+    return jax.jit(run_k, donate_argnums=(1, 2, 3, 5))
 
 
 @functools.lru_cache(maxsize=None)
 def _prefill_fn(cfg: ModelConfig, smax: int):
     # one jit per (cfg, smax); jax retraces per prompt-bucket shape
     # SSM/hybrid prompts are never padded (bucket == exact length),
-    # so the dynamic-length machinery is skipped entirely
+    # so the dynamic-length machinery is skipped entirely.
+    # Returns LOGITS (not a token): the admission commit samples the
+    # first token under the same temperature/top-k/PRNG policy as the
+    # fused decode dispatch.
     exact = cfg.family in ("ssm", "hybrid")
 
     @jax.jit
     def pre(params, tokens, true_len):
         logits, cache = tf.prefill(cfg, params, tokens, smax,
                                    true_len=None if exact else true_len)
-        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+        return logits, cache
 
     return pre
 
 
 @functools.lru_cache(maxsize=None)
-def _admit_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int = 0):
-    """One donated dispatch per admission: scatter the prefilled sub-cache
-    into the batch cache, seed the device token vector and place the
-    sequence's initial tier layout. In paged mode (``block_size`` > 0)
-    the same dispatch also scatters the prompt KV into the sequence's
-    allocated pool blocks and installs its block-table row."""
-    def commit(cache, pam_state, tokens_dev, sub, slot, length, first,
-               table_row=None):
-        def put(full, one):
+def _admit_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int,
+                     n: int, temperature: float = 0.0, top_k: int = 0):
+    """One donated dispatch per admission GROUP: scatter ``n`` prefilled
+    sequences (one batched prefill's sub-cache) into their slots, SAMPLE
+    each first token from the prefill logits (same temperature/top-k/
+    threaded-PRNG policy as the decode dispatch), seed the device token
+    vector and place each sequence's initial tier layout. In paged mode
+    (``block_size`` > 0) the same dispatch also scatters each prompt's
+    KV into its allocated pool blocks and installs its block-table row.
+    ``n == 1`` is the single-admission case; same-bucket admission
+    bursts ride one dispatch."""
+    def commit(cache, pam_state, tokens_dev, sub, logits, slots, lengths,
+               rng, table_rows=None):
+        firsts, rng = _sample_tokens(logits, rng, temperature, top_k)
+        def put(full, batch_rows):
             if full.ndim == 0 or full.size == 0:
                 return full
-            if full.ndim == 1:                     # lengths (B,)
-                return full.at[slot].set(one[0])
-            return full.at[:, slot].set(one[:, 0])  # (L, B, ...)
+            if full.ndim == 1:                      # lengths (B,) <- (n,)
+                return full.at[slots].set(batch_rows)
+            return full.at[:, slots].set(batch_rows)    # (L, B, ...)
         if block_size:
             # pool fields have no batch axis — peel them off the generic
-            # per-slot scatter and fill them through the block table
+            # per-slot scatter and fill them through the block tables
             pk, pv = cache.pk, cache.pv
             cache = cache._replace(pk=sub.pk, pv=sub.pv)
             cache = jax.tree.map(put, cache, sub)
-            cache = cache._replace(
-                pk=pkv.write_prefill(pk, sub.k[:, 0], table_row,
-                                     block_size),
-                pv=pkv.write_prefill(pv, sub.v[:, 0], table_row,
-                                     block_size))
+            for i in range(n):
+                pk = pkv.write_prefill(pk, sub.k[:, i], table_rows[i],
+                                       block_size)
+                pv = pkv.write_prefill(pv, sub.v[:, i], table_rows[i],
+                                       block_size)
+            cache = cache._replace(pk=pk, pv=pv)
         else:
             cache = jax.tree.map(put, cache, sub)
-        tokens_dev = tokens_dev.at[slot].set(first)
+        tokens_dev = tokens_dev.at[slots].set(firsts)
         if pcfg is not None:
-            pam_state = pm.place_prefill_state(pcfg, pam_state, slot,
-                                               length, table_row)
+            for i in range(n):
+                pam_state = pm.place_prefill_state(
+                    pcfg, pam_state, slots[i], lengths[i],
+                    table_rows[i] if block_size else None)
+        return cache, pam_state, tokens_dev, rng, firsts
+
+    return jax.jit(commit, donate_argnums=(0, 1, 2, 7))
+
+
+@functools.lru_cache(maxsize=None)
+def _import_commit_fn(has_pam: bool, block_size: int):
+    """One donated dispatch per migrated-request import: install the
+    snapshot's logical-layout KV into the dense cache slot (and, in
+    paged mode, scatter it through the target's freshly-allocated block
+    table — the §6.2 address-generation/receiver step), insert the PAM
+    rows and seed the device token vector. The admission twin of
+    ``export``: a migrated request resumes with zero host state left on
+    the source."""
+    def commit(cache, pam_state, tokens_dev, k_row, v_row, imp_row,
+               tier_row, lh_row, slot, length, token, table_row=None):
+        cache = cache._replace(
+            k=cache.k.at[:, slot].set(k_row),
+            v=cache.v.at[:, slot].set(v_row),
+            lengths=cache.lengths.at[slot].set(length))
+        if block_size:
+            cache = cache._replace(
+                pk=pkv.write_prefill(cache.pk, k_row, table_row,
+                                     block_size),
+                pv=pkv.write_prefill(cache.pv, v_row, table_row,
+                                     block_size))
+        tokens_dev = tokens_dev.at[slot].set(token)
+        if has_pam:
+            pam_state = pm.insert_slot_state(
+                pam_state, slot, imp_row, tier_row, lh_row,
+                table_row if block_size else None)
         return cache, pam_state, tokens_dev
 
     return jax.jit(commit, donate_argnums=(0, 1, 2))
+
+
+@functools.lru_cache(maxsize=None)
+def _export_gather_fn(block_size: int):
+    """Snapshot gather for inter-device migration (§6.2 sender side):
+    hot tokens read the dense cache row, warm/cold tokens are gathered
+    from the pool THROUGH the block table (``paged_kv.gather_sequence``)
+    — one fused gather producing the portable logical (L, Hkv, Smax, dh)
+    layout. Dense-only engines just slice the cache."""
+    @jax.jit
+    def go(k, v, pk, pv, table_row, tier_row, slot):
+        kc, vc = k[:, slot], v[:, slot]           # (L, Hkv, Smax, dh)
+        if not block_size:
+            return kc, vc
+        gk = pkv.gather_sequence(pk, table_row)
+        gv = pkv.gather_sequence(pv, table_row)
+        hot = (tier_row == HOT)[None, None, :, None]
+        return jnp.where(hot, kc, gk), jnp.where(hot, vc, gv)
+
+    return go
 
 
 class ServingEngine:
@@ -304,16 +415,17 @@ class ServingEngine:
     """
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServingConfig,
-                 latency_model: Optional[Callable[[dict], float]] = None):
+                 latency_model: Optional[Callable[[dict], float]] = None,
+                 name: str = "dev0"):
         assert cfg.has_decode, f"{cfg.name} is encoder-only"
-        if scfg.micro_steps > 1 and scfg.eos_token != -1:
-            raise ValueError("micro_steps > 1 requires eos_token == -1 "
-                             "(EOS needs a host check every step)")
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
         self.latency_model = latency_model
+        self.name = name                       # cluster device handle
         self.clock = 0.0                       # simulated seconds
+        self.busy_time = 0.0                   # sim seconds with active>0
+        self.last_step_time = 0.0              # modeled latency, last step
 
         B, Smax = scfg.max_batch, scfg.max_len
         self.pam_cfg = scfg.pam
@@ -353,15 +465,20 @@ class ServingEngine:
         self.waiting: collections.deque[int] = collections.deque()
         self.slots: list[Optional[int]] = [None] * B
         self.tokens_dev = jnp.zeros((B,), jnp.int32)  # lives on device
+        self.rng_dev = jax.random.PRNGKey(scfg.sample_seed)
         self.steps = 0
         # fast-path observability: one fused dispatch should serve one (or
         # k) decode steps — asserted by tests and reported by benchmarks
         self.decode_dispatches = 0
         self.decode_device_steps = 0
+        self.prefill_dispatches = 0
+        self.admit_dispatches = 0
+        self.migrations_in = 0
+        self.migrations_out = 0
 
         self._micro_jits: dict[int, Any] = {}    # keyed by fused step count
         self._prefill_jit: dict[int, Any] = {}   # keyed by prompt bucket
-        self._admit_jit = _admit_commit_fn(self.pam_cfg, self.block_size)
+        self._admit_jit = self._admit_commit_dispatch
 
     # ------------------------------------------------------------ builders
     def _get_micro(self, k: int):
@@ -369,8 +486,24 @@ class ServingEngine:
         if k not in self._micro_jits:
             self._micro_jits[k] = _fused_decode_fn(
                 self.cfg, self.pam_cfg, self.scfg.max_len,
-                self.scfg.max_batch, k, self.block_size, self.sentinel)
+                self.scfg.max_batch, k, self.block_size, self.sentinel,
+                self.scfg.temperature, self.scfg.top_k,
+                self.scfg.eos_token)
         return self._micro_jits[k]
+
+    def _admit_commit_dispatch(self, cache, pam_state, tokens_dev, sub,
+                               logits, slots, lengths, rng,
+                               table_rows=None):
+        """ONE donated device dispatch committing an admission group
+        (resolved per group size from the shared compile cache)."""
+        fn = _admit_commit_fn(self.pam_cfg, self.block_size,
+                              int(slots.shape[0]), self.scfg.temperature,
+                              self.scfg.top_k)
+        args = (cache, pam_state, tokens_dev, sub, logits, slots, lengths,
+                rng)
+        if table_rows is not None:
+            args += (table_rows,)
+        return fn(*args)
 
     def _bucket_len(self, s_len: int) -> int:
         """Pow-2 prefill buckets cap the jit cache at O(log max_len)
@@ -402,8 +535,14 @@ class ServingEngine:
         processed (for the latency model). In paged mode each admission
         first claims pool blocks for its full window (prompt + budget);
         an exhausted pool leaves the request queued — capacity
-        backpressure instead of failure."""
-        admitted_tokens = 0
+        backpressure instead of failure.
+
+        Admissions sharing a prefill bucket are BATCHED: one bucket group
+        = one prefill dispatch + one donated commit dispatch (scatter,
+        pool fill, PAM placement and token seeds for every member), so a
+        router burst of n same-length prompts costs 2 dispatches, not 2n.
+        """
+        admitted: list[tuple] = []     # (rid, rs, prompt, s_len, slot, row)
         free = self._free_slots()
         while self.waiting and free:
             rid = self.waiting.popleft()
@@ -434,26 +573,58 @@ class ServingEngine:
                 self.peak_occupancy = max(self.peak_occupancy,
                                           self.allocator.occupancy)
             slot = free.pop(0)
-            bucket = self._bucket_len(s_len)
-            padded = np.zeros((bucket,), np.int32)
-            padded[:s_len] = prompt
-            pre = self._prefill_for_len(bucket)
-            first_dev, sub = pre(self.params, jnp.asarray(padded[None]),
-                                 jnp.int32(s_len))
-            args = (self.cache, self.pam_state, self.tokens_dev, sub,
-                    jnp.int32(slot), jnp.int32(s_len), first_dev[0])
-            if table_row is not None:
-                args += (jnp.asarray(table_row),)
-            self.cache, self.pam_state, self.tokens_dev = \
-                self._admit_jit(*args)
-            first = int(first_dev[0])
+            admitted.append((rid, rs, prompt, s_len, slot, table_row))
+
+        # group by prefill bucket, preserving admission order
+        groups: dict[int, list[tuple]] = {}
+        for item in admitted:
+            groups.setdefault(self._bucket_len(item[3]), []).append(item)
+        return sum(self._commit_group(bucket, group)
+                   for bucket, group in groups.items())
+
+    def _commit_group(self, bucket: int, group: list[tuple]) -> int:
+        """Prefill + commit one same-bucket admission group: ONE batched
+        prefill dispatch and ONE donated multi-slot commit dispatch."""
+        n = len(group)
+        padded = np.zeros((n, bucket), np.int32)
+        lens = np.zeros((n,), np.int32)
+        for i, (_, _, prompt, s_len, _, _) in enumerate(group):
+            padded[i, :s_len] = prompt
+            lens[i] = s_len
+        pre = self._prefill_for_len(bucket)
+        logits, sub = pre(self.params, jnp.asarray(padded),
+                          jnp.asarray(lens))
+        self.prefill_dispatches += 1
+        slots = np.array([g[4] for g in group], np.int32)
+        args = (self.cache, self.pam_state, self.tokens_dev, sub, logits,
+                jnp.asarray(slots), jnp.asarray(lens), self.rng_dev)
+        if self.allocator is not None:
+            args += (jnp.asarray(np.stack([g[5] for g in group])),)
+        (self.cache, self.pam_state, self.tokens_dev, self.rng_dev,
+         first_dev) = self._admit_jit(*args)
+        self.admit_dispatches += 1
+        firsts = np.asarray(first_dev)
+        eos = self.scfg.eos_token
+        for i, (rid, rs, _, _, slot, _) in enumerate(group):
             rs.status, rs.slot = RUNNING, slot
-            rs.outputs.append(first)
+            tok = int(firsts[i])
+            rs.outputs.append(tok)
             rs.planned = 1
             rs.first_token_time = None     # stamped after latency charge
             self.slots[slot] = rid
-            admitted_tokens += s_len
-        return admitted_tokens
+            # the PREFILL's token can already end the request (EOS, or a
+            # max_new_tokens budget of 1) — finish before any decode,
+            # stamped here because such requests never join a decode
+            # wave (the fast path's _consume would otherwise skip them)
+            if (eos >= 0 and tok == eos) or rs.request.max_new_tokens <= 1:
+                rs.status = DONE
+                rs.first_token_time = self.clock
+                rs.token_times = [self.clock]
+                rs.finish_time = self.clock
+                self.slots[slot] = None
+                if self.allocator is not None:
+                    self.allocator.free(rid)
+        return int(lens.sum())
 
     # ------------------------------------------------------------ stepping
     def step(self) -> dict[str, Any]:
@@ -470,9 +641,10 @@ class ServingEngine:
                                  "moved_tokens": 0}
         if active_np.any():
             fused = self._get_micro(1)
-            self.tokens_dev, self.cache, self.pam_state, bufs = fused(
+            (self.tokens_dev, self.cache, self.pam_state, self.rng_dev,
+             bufs) = fused(
                 self.params, self.tokens_dev, self.cache, self.pam_state,
-                jnp.asarray(active_np))
+                jnp.asarray(active_np), self.rng_dev)
             self.decode_dispatches += 1
             self.decode_device_steps += 1
             if self.mgr:
@@ -498,6 +670,13 @@ class ServingEngine:
         else:
             dt = time.perf_counter() - t0
         self.clock += dt
+        if not prefill_tokens:
+            # load signal: steady DECODE latency only — admission steps
+            # carry a prefill spike that would whipsaw router/balancer
+            # cost comparisons (prefill is priced separately there)
+            self.last_step_time = dt
+        if active_np.any():
+            self.busy_time += dt
         stats["step_time"] = dt
         self._stamp_times()
         self.steps += 1
@@ -544,12 +723,19 @@ class ServingEngine:
 
     # ------------------------------------------------- pipelined fast path
     def _run_fast(self, max_steps: int) -> dict[str, Any]:
-        """No-EOS benchmark loop: multi-step fused micro-loop + async
-        dispatch. The host consumes step *t-1*'s token/stat buffers while
-        step *t* runs on device; request lifecycle (doneness, slot frees,
-        admission) advances from *planned* token counts, which the no-EOS
-        contract makes known without reading token values."""
+        """Multi-step fused micro-loop. With ``eos_token == -1`` the loop
+        is PIPELINED: the host consumes step *t-1*'s token/stat buffers
+        while step *t* runs on device, and request lifecycle (doneness,
+        slot frees, admission) advances from *planned* token counts —
+        known without reading token values.
+
+        With ``eos_token >= 0`` the micro-loop still fuses k device steps
+        per dispatch (EOS detection runs ON DEVICE: a slot that samples
+        EOS freezes for the remaining micro-steps), but each dispatch's
+        buffers are consumed synchronously so EOS completions free their
+        slot before the next admission pass."""
         micro = self.scfg.micro_steps
+        pipelined = self.scfg.eos_token < 0
         pending: Optional[tuple] = None
         self._wall_anchor = time.perf_counter()
         while self.steps < max_steps:
@@ -559,6 +745,9 @@ class ServingEngine:
             pairs = [(i, rid) for i, rid in enumerate(self.slots)
                      if rid is not None]
             if not pairs:
+                if prefill_tokens:
+                    continue   # the whole admission wave finished at
+                    # prefill (EOS / 1-token budgets); admit the rest
                 break   # nothing runnable (all waiting requests invalid)
             remaining = min(self.requests[rid].request.max_new_tokens
                             - self.requests[rid].planned
@@ -570,32 +759,41 @@ class ServingEngine:
             for slot, _ in pairs:
                 active_np[slot] = True
             fused = self._get_micro(k)
-            self.tokens_dev, self.cache, self.pam_state, bufs = fused(
+            (self.tokens_dev, self.cache, self.pam_state, self.rng_dev,
+             bufs) = fused(
                 self.params, self.tokens_dev, self.cache, self.pam_state,
-                jnp.asarray(active_np))
+                jnp.asarray(active_np), self.rng_dev)
             self.decode_dispatches += 1
             self.decode_device_steps += k
             self.steps += k
-            # advance lifecycle from planned counts — no token readback
-            for slot, rid in pairs:
-                rs = self.requests[rid]
-                rs.planned += k
-                if rs.planned >= rs.request.max_new_tokens:
-                    rs.status = DONE
-                    self.slots[slot] = None
-                    if self.allocator is not None:
-                        self.allocator.free(rid)
-            if pending is not None:
-                self._consume(pending)      # overlaps with this dispatch
-            pending = (bufs, pairs, k, prefill_tokens)
+            rec = (bufs, pairs, k, prefill_tokens)
+            if pipelined:
+                # advance lifecycle from planned counts — no token readback
+                for slot, rid in pairs:
+                    rs = self.requests[rid]
+                    rs.planned += k
+                    if rs.planned >= rs.request.max_new_tokens:
+                        rs.status = DONE
+                        self.slots[slot] = None
+                        if self.allocator is not None:
+                            self.allocator.free(rid)
+                if pending is not None:
+                    self._consume(pending)  # overlaps with this dispatch
+                pending = rec
+            else:
+                self._consume(rec)          # EOS needs the token values
         if pending is not None:
             self._consume(pending)
         return self.summary()
 
     def _consume(self, rec: tuple) -> None:
         """Drain one dispatch's StepBufs: append token values, charge the
-        latency model per fused sub-step, stamp times."""
+        latency model per fused sub-step, stamp times. In EOS mode this
+        also drives the lifecycle: the first EOS (or the max_new_tokens
+        boundary) marks the request DONE and frees its slot and blocks —
+        post-EOS micro-steps were frozen on device and are skipped."""
         bufs, pairs, k, prefill_tokens = rec
+        eos = self.scfg.eos_token
         toks = np.asarray(bufs.tokens)              # blocks until done
         reads = np.asarray(bufs.tier_reads, dtype=np.int64)
         moved = np.asarray(bufs.moved)
@@ -619,16 +817,203 @@ class ServingEngine:
             dt = (float(self.latency_model(stats))
                   if self.latency_model is not None else dt_wall)
             self.clock += dt
+            if not stats["prefill_tokens"]:
+                self.last_step_time = dt     # decode-only load signal
+            self.busy_time += dt
             for slot, rid in pairs:
                 rs = self.requests[rid]
-                rs.outputs.append(int(toks[j, slot]))
+                if eos >= 0 and rs.status == DONE:
+                    continue                 # froze at EOS mid-dispatch
+                tok = int(toks[j, slot])
+                rs.outputs.append(tok)
+                rs.planned = max(rs.planned, len(rs.outputs))
                 if rs.first_token_time is None:
                     rs.first_token_time = self.clock
                 while len(rs.token_times) < len(rs.outputs):
                     rs.token_times.append(self.clock)
-                if (len(rs.outputs) >= rs.request.max_new_tokens
-                        and rs.finish_time is None):
+                done = (len(rs.outputs) >= rs.request.max_new_tokens
+                        or (eos >= 0 and tok == eos))
+                if done and rs.finish_time is None:
                     rs.finish_time = self.clock
+                if done and rs.status != DONE:
+                    rs.status = DONE
+                    if eos >= 0:             # EOS mode frees slots here
+                        self.slots[slot] = None
+                        if self.allocator is not None:
+                            self.allocator.free(rid)
+
+    # ------------------------------------------ cluster / migration hooks
+    def can_accept(self, n_tokens: int, *,
+                   reserve_queued: bool = True) -> bool:
+        """True iff a request with an ``n_tokens`` window (prompt +
+        generation budget) could be admitted RIGHT NOW: a free slot and,
+        in paged mode, enough free pool blocks.
+
+        With ``reserve_queued`` (default) both are counted NET of the
+        engine's own waiting queue — requests already bound here but not
+        yet prefilled — so a router's dispatch round cannot over-assign
+        a device. Migration rescues pass ``reserve_queued=False`` on
+        purpose: pulling a straggler off a slow device is allowed to
+        compete with queued admissions for slots/blocks (shortage
+        degrades to admission backpressure, never failure), which beats
+        strict admission order when the alternative is the straggler
+        finishing on a device several times slower."""
+        queued_slots = len(self.waiting) if reserve_queued else 0
+        if len(self._free_slots()) - queued_slots < 1:
+            return False
+        if self.allocator is None:
+            return True
+        queued = sum(
+            self.allocator.blocks_for(
+                len(self.requests[rid].request.prompt)
+                + self.requests[rid].request.max_new_tokens)
+            for rid in self.waiting) if reserve_queued else 0
+        return (self.allocator.blocks_for(n_tokens)
+                <= self.allocator.free_blocks - queued)
+
+    def serviceable(self, n_tokens: int) -> bool:
+        """True iff an ``n_tokens`` window fits this device at all
+        (``max_len`` and total pool size) — the admission feasibility
+        check routers use before assigning a request."""
+        if n_tokens > self.scfg.max_len:
+            return False
+        if self.allocator is None:
+            return True
+        return self.allocator.blocks_for(n_tokens) <= self.allocator.num_blocks
+
+    def load_signal(self) -> dict[str, Any]:
+        """Host-visible load snapshot for routers/balancers: queue depth,
+        running count, modeled last-step latency and pool occupancy —
+        the paper's inter-device scheduling cost signal (§4.3)."""
+        running = sum(s is not None for s in self.slots)
+        return {
+            "queue_depth": len(self.waiting),
+            "running": running,
+            "free_slots": self.scfg.max_batch - running,
+            "last_step_time": self.last_step_time,
+            "pool_occupancy": (self.allocator.occupancy
+                               if self.allocator is not None else 0.0),
+            "free_blocks": (self.allocator.free_blocks
+                            if self.allocator is not None else -1),
+            "clock": self.clock,
+        }
+
+    def slot_importance_mass(self) -> dict[int, float]:
+        """Per running request: total importance mass (sum of the eq. 7
+        EMA over its tokens) — the balancer's migration-victim signal
+        (move the LOWEST mass first: cheapest accuracy stake)."""
+        if self.pam_cfg is None:
+            return {rid: 0.0 for rid in self.slots if rid is not None}
+        mass = np.asarray(jnp.sum(self.pam_state.importance, axis=-1))
+        return {rid: float(mass[slot])
+                for slot, rid in enumerate(self.slots) if rid is not None}
+
+    def _require_migratable(self) -> None:
+        if self.cache.k.size == 0 or self.cache.conv.size > 0 \
+                or self.cache.ckv.size > 0:
+            raise ValueError(f"{self.cfg.name}: KV migration requires a "
+                             f"pure GQA decode cache")
+
+    def export_request(self, rid: int) -> dict[str, Any]:
+        """Export a RUNNING request for inter-device migration: gather
+        its KV into the portable logical layout (hot tokens from the
+        dense cache, warm/cold through the block table — the §6.2 sender
+        side), copy its PAM rows and host bookkeeping, then free the slot
+        and pool blocks WITHOUT finishing the request. Returns the
+        snapshot dict consumed by ``import_request`` (see
+        ``repro.cluster.migration.KVSnapshot``)."""
+        self._require_migratable()
+        rs = self.requests.get(rid)
+        if rs is None or rs.status != RUNNING:
+            raise ValueError(f"request {rid} is not running here")
+        slot = rs.slot
+        nb = self.scfg.max_len // self.block_size if self.block_size else 0
+        table_row = (jnp.asarray(self.allocator.padded_table(
+            rid, nb, self.sentinel)) if self.allocator is not None
+            else jnp.zeros((0,), jnp.int32))
+        tier_row = (self.pam_state.tier[slot] if self.pam_cfg is not None
+                    else jnp.zeros((self.scfg.max_len,), jnp.int32))
+        k_row, v_row = _export_gather_fn(self.block_size)(
+            self.cache.k, self.cache.v, self.cache.pk, self.cache.pv,
+            table_row, tier_row, jnp.int32(slot))
+        snap = {
+            "request": rs.request,
+            "outputs": list(rs.outputs),
+            "planned": len(rs.outputs),
+            "length": int(np.asarray(self.cache.lengths[slot])),
+            "token": int(np.asarray(self.tokens_dev[slot])),
+            "k": np.asarray(k_row),
+            "v": np.asarray(v_row),
+            "importance": (np.asarray(self.pam_state.importance[slot])
+                           if self.pam_cfg is not None else None),
+            "tier": (np.asarray(tier_row)
+                     if self.pam_cfg is not None else None),
+            "last_hot": (np.asarray(self.pam_state.last_hot[slot])
+                         if self.pam_cfg is not None else None),
+            "first_token_time": rs.first_token_time,
+            "token_times": list(rs.token_times),
+            "arrival": rs.request.arrival,
+            "src": self.name,
+        }
+        # free-without-finish: slot and blocks recycle; the request's
+        # only live copy is now the snapshot
+        self.slots[slot] = None
+        if self.allocator is not None:
+            self.allocator.free(rid)
+        del self.requests[rid]
+        self.migrations_out += 1
+        return snap
+
+    def import_request(self, snap: dict[str, Any]) -> None:
+        """Admit a migrated request mid-decode (§6.2 receiver side): ONE
+        donated dispatch installs the snapshot KV into a free slot (and
+        through a freshly-allocated block table in paged mode), inserts
+        the PAM rows and seeds the device token vector; decode resumes
+        exactly where the source stopped. Raises ``OutOfBlocks`` /
+        ``ValueError`` when this device cannot take the request — check
+        ``can_accept`` first."""
+        self._require_migratable()
+        req: Request = snap["request"]
+        free = self._free_slots()
+        if not free:
+            raise ValueError(f"{self.name}: no free slot for migrated "
+                             f"request {req.id}")
+        if snap["k"].shape[2] != self.scfg.max_len:
+            raise ValueError("snapshot window does not match max_len "
+                             f"({snap['k'].shape[2]} vs {self.scfg.max_len})")
+        window = len(req.prompt) + req.max_new_tokens
+        table_row = None
+        if self.allocator is not None:
+            self.allocator.allocate(req.id, window)   # may raise OutOfBlocks
+            table_row = self.allocator.padded_table(
+                req.id, self.scfg.max_len // self.block_size, self.sentinel)
+            self.peak_occupancy = max(self.peak_occupancy,
+                                      self.allocator.occupancy)
+        slot = free[0]
+        Smax = self.scfg.max_len
+        imp = (snap["importance"] if snap["importance"] is not None
+               else np.zeros((Smax,), np.float32))
+        tier = (snap["tier"] if snap["tier"] is not None
+                else np.zeros((Smax,), np.int32))
+        lh = (snap["last_hot"] if snap["last_hot"] is not None
+              else np.zeros((Smax,), bool))
+        args = (self.cache, self.pam_state, self.tokens_dev,
+                jnp.asarray(snap["k"]), jnp.asarray(snap["v"]),
+                jnp.asarray(imp), jnp.asarray(tier), jnp.asarray(lh),
+                jnp.int32(slot), jnp.int32(snap["length"]),
+                jnp.int32(snap["token"]))
+        if table_row is not None:
+            args += (jnp.asarray(table_row),)
+        fn = _import_commit_fn(self.pam_cfg is not None, self.block_size)
+        self.cache, self.pam_state, self.tokens_dev = fn(*args)
+        rs = RequestState(
+            request=req, status=RUNNING, slot=slot,
+            outputs=list(snap["outputs"]), planned=snap["planned"],
+            first_token_time=snap["first_token_time"],
+            token_times=list(snap["token_times"]))
+        self.requests[req.id] = rs
+        self.slots[slot] = req.id
+        self.migrations_in += 1
 
     # ------------------------------------------------------------ metrics
     def summary(self) -> dict[str, Any]:

@@ -92,6 +92,11 @@ class BlockAllocator:
         return tbl
 
     def free(self, seq_id: int) -> None:
+        """Return every block of the sequence to the free list. Also the
+        free-WITHOUT-finish primitive of inter-device migration: the
+        exporter gathers the blocks' KV into a snapshot first, then
+        frees; the importing engine allocates fresh blocks on its own
+        pool (physical ids never travel)."""
         for b in self.tables.pop(seq_id, []):
             self._free.append(b)
 
@@ -163,6 +168,21 @@ def gather_logical(pool: jax.Array, block_table: jax.Array) -> jax.Array:
     """
     from repro.core.pam_interface import paged_gather_logical
     return paged_gather_logical(pool, block_table)
+
+
+def gather_sequence(pool: jax.Array, table_row: jax.Array) -> jax.Array:
+    """Inverse of ``write_prefill``: gather one sequence's blocks back
+    into the dense cache layout.
+
+    pool: (L, NB+1, bs, Hkv, dh); table_row: (nb,) physical ids in
+    logical order (sentinel for unmapped — those positions gather the
+    trash block and are masked by validity downstream). Returns
+    (L, Hkv, nb*bs, dh) — the export half of the §6.2 re-layout
+    interface, used to build inter-device migration snapshots.
+    """
+    g = pool[:, table_row]                            # (L, nb, bs, Hkv, dh)
+    L, nb, bs, Hkv, dh = g.shape
+    return jnp.moveaxis(g.reshape(L, nb * bs, Hkv, dh), 2, 1)
 
 
 @dataclasses.dataclass

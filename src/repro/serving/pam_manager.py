@@ -262,6 +262,32 @@ def place_prefill_state(cfg: PAMManagerConfig, state: PAMState,
     return state
 
 
+def extract_slot_state(state: PAMState, slot) -> tuple[jax.Array, ...]:
+    """One sequence's migratable PAM state: (importance, tier, last_hot)
+    rows. The block table row is deliberately excluded — physical block
+    ids are device-local and rebuilt by the importing engine's own
+    allocator (see ``repro.cluster.migration``)."""
+    return (state.importance[slot], state.tier[slot], state.last_hot[slot])
+
+
+def insert_slot_state(state: PAMState, slot, importance: jax.Array,
+                      tier: jax.Array, last_hot: jax.Array,
+                      table_row: jax.Array | None = None) -> PAMState:
+    """Install one migrated sequence's PAM rows at ``slot`` (the inverse
+    of ``extract_slot_state``). ``table_row`` — the *importing* engine's
+    freshly-allocated physical block ids — is written when the target
+    runs the paged KV path."""
+    state = state._replace(
+        importance=state.importance.at[slot].set(importance),
+        tier=state.tier.at[slot].set(tier),
+        last_hot=state.last_hot.at[slot].set(last_hot),
+    )
+    if table_row is not None:
+        state = state._replace(
+            block_table=state.block_table.at[slot].set(table_row))
+    return state
+
+
 def tier_read_counts_of(tier: jax.Array, participate: jax.Array
                         ) -> jax.Array:
     """(3,) tokens read per tier this step — bytes = counts x token

@@ -1,0 +1,280 @@
+"""Multi-device cluster (paper §4.3): inter-device migration exactness,
+router dispatch/streaming, online balancer behaviour, and the fused
+single-dispatch/donation invariants on cluster engines.
+
+The headline acceptance test: a request migrated mid-decode between
+device classes emits a token stream IDENTICAL to the same request
+served unmigrated on one device.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import (BalancerConfig, KVBalancer, KVSnapshot,
+                           build_cluster, can_migrate, migrate)
+from repro.models import transformer as tf
+from repro.models.config import get_config, reduced
+from repro.perfmodel.devices import (CXL_CLASS, HBM_CLASS, DeviceClass,
+                                     get_device_class,
+                                     make_device_latency_model,
+                                     parse_devices, step_time_prior)
+from repro.serving import (PAMManagerConfig, Request, ServingConfig,
+                           ServingEngine)
+from repro.serving.paged_kv import OutOfBlocks
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+_CFG = reduced(get_config("qwen3-0.6b"))
+_PARAMS = tf.init_params(_CFG, jax.random.PRNGKey(0))
+
+
+def _pam(max_len=64):
+    return PAMManagerConfig(max_tokens=max_len, hot_capacity=4,
+                            warm_capacity=8, compression=4,
+                            recency_window=2, schedule_interval=2)
+
+
+def _engine(name="dev", max_batch=3, max_len=64, block_size=8, pool=None,
+            latency=None):
+    scfg = ServingConfig(max_batch=max_batch, max_len=max_len,
+                         pam=_pam(max_len), block_size=block_size,
+                         pool_blocks=pool)
+    return ServingEngine(_CFG, _PARAMS, scfg, latency_model=latency,
+                         name=name)
+
+
+def _submit(eng_or_router, n, plen=20, max_new=12, seed=0, arrivals=False):
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    for i in range(n):
+        t += float(rng.exponential(0.001))
+        eng_or_router.submit(Request(
+            id=i, prompt=rng.integers(0, _CFG.vocab, plen),
+            max_new_tokens=max_new, arrival=t if arrivals else 0.0))
+
+
+# ------------------------------------------------------ migration exactness
+def test_migration_exactness_across_device_classes():
+    """A request migrated mid-decode HBM-class -> CXL-class emits the
+    exact token stream of its unmigrated twin (acceptance criterion)."""
+    twin = _engine("twin")
+    _submit(twin, 3)
+    twin.run()
+
+    src = _engine("src", latency=make_device_latency_model(HBM_CLASS))
+    dst = _engine("dst", max_batch=2,
+                  latency=make_device_latency_model(CXL_CLASS))
+    _submit(src, 3)
+    for _ in range(5):                 # mid-decode: past prefill, mid-gen
+        src.step()
+    assert can_migrate(src, dst, 1)
+    rec = migrate(src, dst, 1)
+    assert rec["tokens"] > 0 and rec["bytes"] > 0
+    assert 1 not in src.requests       # free-without-finish on the source
+    while any(s is not None for s in src.slots) or src.waiting:
+        src.step()
+    while any(s is not None for s in dst.slots) or dst.waiting:
+        dst.step()
+    for rid in range(3):
+        ref = twin.requests[rid].outputs
+        got = (dst if rid == 1 else src).requests[rid].outputs
+        assert got == ref, rid
+    assert dst.migrations_in == 1 and src.migrations_out == 1
+
+
+def test_migration_exactness_dense_engines():
+    """Migration also serves dense (non-paged) engines: the snapshot is
+    the dense cache row."""
+    twin = _engine("twin", block_size=0)
+    _submit(twin, 2)
+    twin.run()
+    src = _engine("src", block_size=0)
+    dst = _engine("dst", block_size=0)
+    _submit(src, 2)
+    for _ in range(4):
+        src.step()
+    migrate(src, dst, 0)
+    while any(s is not None for s in src.slots):
+        src.step()
+    while any(s is not None for s in dst.slots):
+        dst.step()
+    assert dst.requests[0].outputs == twin.requests[0].outputs
+    assert src.requests[1].outputs == twin.requests[1].outputs
+
+
+def test_export_gathers_warm_tokens_through_block_table():
+    """The snapshot's non-hot positions come from the POOL through the
+    block table and equal the dense mirror — the §6.2 export path is
+    exercised, not just the dense slice."""
+    eng = _engine("e")
+    _submit(eng, 1, plen=30, max_new=8)
+    for _ in range(4):
+        eng.step()
+    slot = eng.requests[0].slot
+    tier = np.asarray(eng.pam_state.tier[slot])
+    length = int(np.asarray(eng.cache.lengths[slot]))
+    assert (tier[:length] != 0).any()      # warm/cold tokens exist
+    dense_k = np.asarray(eng.cache.k[:, slot])
+    snap = KVSnapshot.export(eng, 0)
+    np.testing.assert_allclose(snap.k[:, :, :length], dense_k[:, :, :length],
+                               rtol=0, atol=0)
+
+
+def test_import_backpressure_and_rollback():
+    """A full target refuses the import (OutOfBlocks / no slot) and
+    ``migrate`` rolls the request back onto the source unharmed."""
+    src = _engine("src")
+    dst = _engine("dst", max_batch=1, pool=3)   # too few blocks for 4
+    _submit(src, 2)
+    for _ in range(3):
+        src.step()
+    assert not can_migrate(src, dst, 0)         # pre-check refuses
+    with pytest.raises(OutOfBlocks):
+        migrate(src, dst, 0)                    # forced: rolls back
+    assert 0 in src.requests                    # request back on source
+    assert src.requests[0].status == "running"
+    src.run()
+    assert len(src.requests[0].outputs) == 12
+
+
+# -------------------------------------------------------------- router
+def _router(classes, n=8, bal=None, seed=3, max_new=10):
+    scfg = ServingConfig(max_batch=4, max_len=64, pam=_pam(), block_size=8)
+    router = build_cluster(_CFG, _PARAMS, classes, scfg=scfg, balancer=bal)
+    _submit(router, n, plen=16, max_new=max_new, seed=seed, arrivals=True)
+    return router
+
+
+def test_router_serves_stream_and_streams_tokens():
+    router = _router([HBM_CLASS, CXL_CLASS], n=8)
+    s = router.run()
+    assert s["finished"] == 8
+    assert s["total_tokens"] == 8 * 10
+    ev = router.drain_events()
+    assert len(ev) == 80
+    # per-request event indices are gapless and in order; done marks end
+    by_rid = {}
+    for e in ev:
+        assert e.index == by_rid.get(e.request_id, 0)
+        by_rid[e.request_id] = e.index + 1
+        # reconstructed streams match the finished requests
+    for rid, rs in router.finished.items():
+        toks = [e.token for e in ev if e.request_id == rid]
+        assert toks == rs.outputs
+    assert sum(e.done for e in ev) == 8
+    assert router.drain_events() == []          # drained
+
+
+def test_router_spills_to_slow_device_under_overload():
+    """When the fast device cannot hold a burst, the router admits the
+    overflow on the slow device instead of queueing forever."""
+    # hbm alone: 4 slots; 10 concurrent requests force a spill
+    router = _router([HBM_CLASS, CXL_CLASS, CXL_CLASS], n=12, max_new=16)
+    s = router.run()
+    assert s["finished"] == 12
+    used = [n for n, d in s["devices"].items() if d["tokens_emitted"] > 0]
+    assert len(used) >= 2
+    assert s["throughput_tok_s"] > 0
+    assert 0.0 <= router.slo_attainment(1.0) <= 1.0
+
+
+def test_router_rejects_unserviceable_request():
+    router = _router([HBM_CLASS], n=1)
+    with pytest.raises(ValueError, match="fits no device"):
+        router.submit(Request(id=99, prompt=np.arange(60, dtype=np.int32),
+                              max_new_tokens=30, arrival=99.0))
+
+
+# -------------------------------------------------------------- balancer
+def test_balancer_migrates_off_overloaded_device():
+    """Load a slow device while a fast one idles: the balancer moves the
+    lowest-importance-mass request over and the stream still completes
+    exactly (every request emits its full budget)."""
+    bal = KVBalancer(BalancerConfig(rebalance_interval=2, hysteresis=1.1,
+                                    cooldown_ticks=4, min_remaining=2))
+    scfg = ServingConfig(max_batch=4, max_len=64, pam=_pam(), block_size=8)
+    router = build_cluster(_CFG, _PARAMS, [HBM_CLASS, CXL_CLASS],
+                           scfg=scfg, balancer=bal)
+    # pre-load the SLOW device directly; fast device idle
+    rng = np.random.default_rng(7)
+    for i in range(4):
+        router.submit_to(
+            Request(id=100 + i, prompt=rng.integers(0, _CFG.vocab, 16),
+                    max_new_tokens=14, arrival=0.0), "cxl0")
+    s = router.run()
+    assert s["migrations"] >= 1
+    hbm = router._by_name("hbm0")
+    assert hbm.engine.migrations_in >= 1
+    for rs in router.finished.values():
+        assert len(rs.outputs) == rs.request.max_new_tokens
+    # hysteresis bookkeeping: migrated requests are in cooldown
+    assert bal._last_moved
+
+
+def test_balancer_hysteresis_blocks_marginal_moves():
+    """A nearly-balanced pair of identical devices must not migrate."""
+    bal = KVBalancer(BalancerConfig(rebalance_interval=1, hysteresis=10.0))
+    scfg = ServingConfig(max_batch=4, max_len=64, pam=_pam(), block_size=8)
+    router = build_cluster(_CFG, _PARAMS, [HBM_CLASS, HBM_CLASS],
+                           scfg=scfg, balancer=bal)
+    _submit(router, 8, plen=16, max_new=8, arrivals=True)
+    s = router.run()
+    assert s["finished"] == 8
+    assert s["migrations"] == 0
+
+
+# ------------------------------------------- fused-dispatch invariants
+def test_cluster_engines_keep_single_dispatch_and_donation():
+    """Every cluster engine still runs exactly ONE fused dispatch per
+    decode step with donated cache/state (the PR-1/PR-2 invariants
+    survive routing and migration)."""
+    router = _router([HBM_CLASS, CXL_CLASS], n=6, max_new=8,
+                     bal=KVBalancer(BalancerConfig(rebalance_interval=2,
+                                                   hysteresis=1.1,
+                                                   cooldown_ticks=2)))
+    # run a few ticks, then capture buffers and confirm donation
+    for _ in range(6):
+        router.tick()
+    dev = next(d for d in router.devices if d.engine.decode_dispatches > 0)
+    k_buf = dev.engine.cache.k
+    pk_buf = dev.engine.cache.pk
+    tbl_buf = dev.engine.pam_state.block_table
+    router.run()
+    assert k_buf.is_deleted()
+    assert pk_buf.is_deleted()
+    assert tbl_buf.is_deleted()
+    for d in router.devices:
+        assert d.engine.decode_dispatches == d.engine.decode_device_steps
+        if d.engine.allocator is not None:
+            assert d.engine.allocator.check_no_double_mapping()
+
+
+# ----------------------------------------------------- device classes
+def test_device_class_registry_and_parse():
+    assert get_device_class("hbm") is HBM_CLASS
+    devs = parse_devices("hbm:1,cxl:2")
+    assert [d.name for d in devs] == ["hbm", "cxl", "cxl"]
+    assert parse_devices("ddr")[0].name == "ddr"
+    with pytest.raises(ValueError):
+        parse_devices("warp:1")
+    with pytest.raises(ValueError):
+        parse_devices("hbm:0")
+
+
+def test_device_class_latency_ordering():
+    """The CXL-class device is modeled strictly slower than the
+    HBM-class device, and priors reflect it."""
+    assert step_time_prior(CXL_CLASS) > step_time_prior(HBM_CLASS)
+    stats = {"prefill_tokens": 0, "active": 2,
+             "tier_reads": np.array([8, 4, 0], np.int64),
+             "moved_tokens": 0,
+             "batch_lengths": np.array([32, 32], np.int64)}
+    t_hbm = make_device_latency_model(HBM_CLASS)(dict(stats))
+    t_cxl = make_device_latency_model(CXL_CLASS)(dict(stats))
+    assert t_cxl > t_hbm
+
+    dc = DeviceClass("t", max_batch=2, pool_scale=0.5)
+    assert dc.pool_blocks(64, 8) == 8       # 0.5 * 2 * (64/8)

@@ -267,10 +267,37 @@ def test_fastpath_midstream_admission():
         assert len(rs.outputs) == rs.request.max_new_tokens, rid
 
 
-def test_micro_steps_requires_no_eos():
+def test_micro_loop_serves_eos_token_stream():
+    """EOS detection is folded into the fused dispatch (slots that
+    sample EOS freeze on device), so micro_steps > 1 now serves
+    eos_token >= 0 traffic with streams identical to the synchronous
+    step() loop — and stops early at the EOS."""
     cfg = reduced(get_config("qwen3-0.6b"))
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    with pytest.raises(ValueError):
-        ServingEngine(cfg, params,
-                      ServingConfig(max_batch=2, max_len=32, eos_token=5,
-                                    micro_steps=4))
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, 6) for _ in range(3)]
+
+    # probe run: pick an actually-emitted mid-stream token as EOS
+    probe = ServingEngine(cfg, params,
+                          ServingConfig(max_batch=3, max_len=64))
+    for i, p in enumerate(prompts):
+        probe.submit(Request(id=i, prompt=p, max_new_tokens=12))
+    probe.run()
+    eos = probe.requests[0].outputs[4]
+
+    outs = []
+    for micro in (1, 4):
+        eng = ServingEngine(cfg, params,
+                            ServingConfig(max_batch=3, max_len=64,
+                                          eos_token=int(eos),
+                                          micro_steps=micro))
+        for i, p in enumerate(prompts):
+            eng.submit(Request(id=i, prompt=p, max_new_tokens=12))
+        eng.run()
+        outs.append({rid: rs.outputs for rid, rs in eng.requests.items()})
+    assert outs[0] == outs[1]
+    assert all(rs.status == "done"
+               for rs in eng.requests.values())
+    # the EOS actually cut request 0 short on both paths
+    assert outs[0][0][-1] == eos
+    assert len(outs[0][0]) < 12

@@ -84,6 +84,67 @@ def test_schedule_bounded_movement():
     assert int(jnp.sum(moved)) <= 4 * cfg.max_swaps  # 2 tokens per swap
 
 
+def test_schedule_empty_tier_is_safe():
+    """Capacity-zero tiers (a tier holding NO tokens) must not produce
+    NaNs, phantom swaps into the empty tier, or count changes — the
+    cluster balancer leans on schedule_kv under skewed occupancy."""
+    n = 24
+    impv = jnp.linspace(0.1, 1.0, n)
+    valid = jnp.ones((n,), bool)
+    for empty in (0, 1, 2):
+        tier = jnp.where(jnp.arange(n) % 2 == 0, (empty + 1) % 3,
+                         (empty + 2) % 3).astype(jnp.int32)
+        cfg = scheduling.ScheduleConfig(x=4.0, y=2.0, max_swaps=8)
+        new_tier, moved, swaps = scheduling.schedule_kv(impv, tier, valid,
+                                                        cfg)
+        assert not bool(jnp.any(new_tier == empty))   # stays empty
+        err = scheduling.ratio_error(impv, new_tier, valid, cfg)
+        assert bool(jnp.isfinite(err))
+        for t in range(3):
+            assert int(jnp.sum((new_tier == t) & valid)) == \
+                int(jnp.sum((tier == t) & valid))
+
+
+def test_schedule_all_invalid_is_noop():
+    n = 16
+    impv = jnp.zeros((n,))
+    tier = jnp.zeros((n,), jnp.int32)
+    valid = jnp.zeros((n,), bool)
+    new_tier, moved, swaps = scheduling.schedule_kv(
+        impv, tier, valid, scheduling.ScheduleConfig(max_swaps=8))
+    assert int(swaps) == 0
+    assert not bool(jnp.any(moved))
+    np.testing.assert_array_equal(np.asarray(new_tier), np.asarray(tier))
+
+
+def test_schedule_all_equal_importance_makes_no_swaps():
+    """Ties everywhere: no swap is importance-improving (strict >), so
+    Alg. 2 terminates immediately instead of cycling equal tokens."""
+    n = 30
+    impv = jnp.full((n,), 0.5)
+    tier = (jnp.arange(n) % 3).astype(jnp.int32)
+    valid = jnp.ones((n,), bool)
+    new_tier, moved, swaps = scheduling.schedule_kv(
+        impv, tier, valid, scheduling.ScheduleConfig(x=8.0, y=3.0,
+                                                     max_swaps=16))
+    assert int(swaps) == 0
+    np.testing.assert_array_equal(np.asarray(new_tier), np.asarray(tier))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(8, 64),
+       x=st.floats(1.0, 16.0), y=st.floats(0.5, 8.0))
+def test_ratio_error_monotone_under_schedule_kv(seed, n, x, y):
+    """ratio_error never increases under schedule_kv, for arbitrary
+    targets — including extreme x/y and degenerate occupancies."""
+    impv, tier, valid = _rand_state(seed, n)
+    cfg = scheduling.ScheduleConfig(x=float(x), y=float(y), max_swaps=12)
+    before = float(scheduling.ratio_error(impv, tier, valid, cfg))
+    new_tier, _, _ = scheduling.schedule_kv(impv, tier, valid, cfg)
+    after = float(scheduling.ratio_error(impv, new_tier, valid, cfg))
+    assert after <= before + 1e-4
+
+
 def test_schedule_promotes_hot_tokens():
     """A very important token stuck on SSD gets promoted."""
     n = 32

@@ -1,0 +1,199 @@
+"""On-device sampling + EOS in the fused dispatch (ROADMAP item): the
+PRNG key is threaded and donated through the fused step, temperature=0
+is exactly argmax, top_k=1 is greedy at any temperature, sampling is
+seed-reproducible, and batched same-bucket admissions commit in one
+prefill + one donated dispatch."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import transformer as tf
+from repro.models.config import get_config, reduced
+from repro.serving import (PAMManagerConfig, Request, ServingConfig,
+                           ServingEngine)
+
+jax.config.update("jax_platform_name", "cpu")
+
+_CFG = reduced(get_config("qwen3-0.6b"))
+_PARAMS = tf.init_params(_CFG, jax.random.PRNGKey(0))
+
+
+def _engine(**kw):
+    pam = PAMManagerConfig(max_tokens=64, hot_capacity=8, warm_capacity=16,
+                           compression=4, recency_window=4,
+                           schedule_interval=2)
+    scfg = ServingConfig(max_batch=3, max_len=64, pam=pam, **kw)
+    return ServingEngine(_CFG, _PARAMS, scfg)
+
+
+def _run(eng, n=3, seed=0, max_new=8):
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        eng.submit(Request(id=i, prompt=rng.integers(0, _CFG.vocab, 6),
+                           max_new_tokens=max_new))
+    eng.run()
+    return {rid: rs.outputs for rid, rs in eng.requests.items()}
+
+
+def test_temperature_zero_is_argmax():
+    """temperature=0 (the default) compiles to the exact greedy fast
+    path — identical streams whether stated or defaulted."""
+    assert _run(_engine()) == _run(_engine(temperature=0.0))
+
+
+def test_top_k_one_equals_greedy_at_any_temperature():
+    """top_k=1 leaves a single live logit, so categorical sampling
+    degenerates to argmax regardless of temperature or seed."""
+    greedy = _run(_engine())
+    assert greedy == _run(_engine(temperature=1.0, top_k=1))
+    assert greedy == _run(_engine(temperature=3.0, top_k=1,
+                                  sample_seed=123))
+
+
+def test_sampling_reproducible_and_seed_sensitive():
+    a = _run(_engine(temperature=1.0, sample_seed=7))
+    b = _run(_engine(temperature=1.0, sample_seed=7))
+    c = _run(_engine(temperature=1.0, sample_seed=8))
+    assert a == b                       # same threaded key -> same stream
+    assert a != c                       # different key -> diverges
+    for outs in a.values():
+        assert all(0 <= t < _CFG.vocab for t in outs)
+
+
+def test_first_token_is_sampled_too():
+    """The PREFILL token obeys the sampling policy (it is drawn in the
+    admission commit, not argmaxed): at high temperature different seeds
+    produce different first tokens, while temperature=0 keeps the greedy
+    first token."""
+    greedy_first = {rid: outs[0] for rid, outs in _run(_engine()).items()}
+    firsts = []
+    for seed in (1, 2, 3):
+        out = _run(_engine(temperature=5.0, sample_seed=seed))
+        firsts.append({rid: o[0] for rid, o in out.items()})
+    assert any(f != firsts[0] for f in firsts[1:])   # seed-sensitive
+    assert any(f != greedy_first for f in firsts)    # not just argmax
+
+
+def test_prefill_eos_finishes_request_without_decode():
+    """A request whose FIRST (prefill-sampled) token is the EOS finishes
+    at admission: one output token, no decode steps for it."""
+    probe = _engine()
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, _CFG.vocab, 6)
+    probe.submit(Request(id=0, prompt=prompt, max_new_tokens=8))
+    probe.run()
+    eos = probe.requests[0].outputs[0]          # greedy prefill token
+
+    eng = _engine(eos_token=int(eos))
+    eng.submit(Request(id=0, prompt=prompt, max_new_tokens=8))
+    eng.run()
+    rs = eng.requests[0]
+    assert rs.status == "done"
+    assert rs.outputs == [eos]
+    assert eng.decode_dispatches == 0           # never decoded
+
+
+def test_prefill_eos_wave_does_not_strand_waiting_requests():
+    """micro-loop path: when an ENTIRE admission wave finishes at
+    prefill (EOS first tokens), the fast loop admits the next wave
+    instead of breaking with requests still queued."""
+    probe = _engine()
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, _CFG.vocab, 6)
+    probe.submit(Request(id=0, prompt=prompt, max_new_tokens=4))
+    probe.run()
+    eos = probe.requests[0].outputs[0]
+
+    eng = _engine(eos_token=int(eos), micro_steps=4)
+    for i in range(5):                  # 5 identical prompts, batch 3
+        eng.submit(Request(id=i, prompt=prompt, max_new_tokens=4))
+    summary = eng.run()
+    assert summary["finished"] == 5
+    assert not eng.waiting
+    for rs in eng.requests.values():
+        assert rs.outputs == [eos]
+
+
+def test_max_new_tokens_one_emits_exactly_one():
+    eng = _engine()
+    rng = np.random.default_rng(5)
+    eng.submit(Request(id=0, prompt=rng.integers(0, _CFG.vocab, 6),
+                       max_new_tokens=1))
+    eng.run()
+    assert len(eng.requests[0].outputs) == 1
+    assert eng.requests[0].status == "done"
+
+
+def test_rng_key_is_donated_and_threaded():
+    eng = _engine(temperature=1.0)
+    rng = np.random.default_rng(0)
+    eng.submit(Request(id=0, prompt=rng.integers(0, _CFG.vocab, 6),
+                       max_new_tokens=6))
+    key_before = np.asarray(eng.rng_dev).copy()
+    eng.step()
+    key0 = eng.rng_dev
+    eng.step()
+    assert key0.is_deleted()            # donated through the dispatch
+    # and actually threaded: the live key differs from the initial one
+    assert not np.array_equal(np.asarray(eng.rng_dev), key_before)
+
+
+def test_sampled_eos_on_micro_loop():
+    """Sampling + on-device EOS + the k-step micro-loop compose: the
+    micro engine reproduces the synchronous sampled stream, EOS cuts
+    included."""
+    sync = _engine(temperature=1.0, sample_seed=11)
+    outs = _run(sync, max_new=12)
+    eos = outs[0][3]                    # an actually-sampled token
+    streams = []
+    for micro in (1, 4):
+        eng = _engine(temperature=1.0, sample_seed=11,
+                      eos_token=int(eos), micro_steps=micro)
+        streams.append(_run(eng, max_new=12))
+    assert streams[0] == streams[1]
+    assert streams[0][0][-1] == eos and len(streams[0][0]) <= 4
+
+
+# ------------------------------------------------- batched admission
+def test_same_bucket_admissions_commit_in_one_dispatch():
+    """A burst of same-bucket prompts admits with ONE prefill dispatch
+    and ONE donated commit dispatch (ROADMAP batched multi-admission),
+    and the streams equal the one-by-one admission path."""
+    eng = _engine()
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, _CFG.vocab, n) for n in (5, 6, 7)]
+
+    calls = {"admit": 0}
+    admit_real = eng._admit_jit
+    eng._admit_jit = (
+        lambda *a, **k: (calls.__setitem__("admit", calls["admit"] + 1),
+                         admit_real(*a, **k))[1])
+    for i, p in enumerate(prompts):     # 5/6/7 share the pow-2 bucket 8
+        eng.submit(Request(id=i, prompt=p, max_new_tokens=6))
+    eng.step()
+    assert calls["admit"] == 1          # one commit for the whole burst
+    assert eng.prefill_dispatches == 1  # one batched prefill
+    assert eng.admit_dispatches == 1
+    eng.run()
+
+    one_by_one = _engine()
+    for i, p in enumerate(prompts):
+        one_by_one.submit(Request(id=i, prompt=p, max_new_tokens=6))
+        one_by_one.step()               # admit each alone
+    one_by_one.run()
+    for i in range(3):
+        assert eng.requests[i].outputs == one_by_one.requests[i].outputs
+
+
+def test_mixed_bucket_burst_groups_by_bucket():
+    eng = _engine()
+    rng = np.random.default_rng(3)
+    for i, n in enumerate((5, 7, 20)):  # buckets 8, 8, 32
+        eng.submit(Request(id=i, prompt=rng.integers(0, _CFG.vocab, n),
+                           max_new_tokens=4))
+    eng.step()
+    assert eng.prefill_dispatches == 2  # one per bucket group
+    assert eng.admit_dispatches == 2
+    eng.run()
+    assert all(len(rs.outputs) == 4 for rs in eng.requests.values())
