@@ -1,10 +1,16 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test verify bench quickstart
+.PHONY: test verify bench quickstart lint format
 
 test:            ## tier-1 test suite
 	python -m pytest -x -q
+
+lint:            ## ruff correctness gate (blocking in CI)
+	ruff check .
+
+format:          ## apply ruff formatting (check runs non-blocking in CI)
+	ruff format .
 
 verify:          ## tier-1 tests + fast bench smoke (scripts/verify.sh)
 	bash scripts/verify.sh

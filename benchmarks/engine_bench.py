@@ -86,14 +86,16 @@ def bench_decode_wallclock(micro_steps: int = 8) -> dict:
         max_tokens=96, hot_capacity=8, warm_capacity=32,
         compression=4, recency_window=4, schedule_interval=2)
 
-    def one_run(micro: int, block_size: int = 0) -> dict:
+    def one_run(micro: int, block_size: int = 0,
+                hot_window: int = 0) -> dict:
         rng = np.random.default_rng(0)
         eng = ServingEngine(cfg, params,
                             ServingConfig(max_batch=4, max_len=96,
                                           pam=(pam_paged if block_size
                                                else pam_cfg),
                                           micro_steps=micro,
-                                          block_size=block_size))
+                                          block_size=block_size,
+                                          hot_window=hot_window))
         for i in range(8):
             eng.submit(Request(id=i, prompt=rng.integers(0, cfg.vocab, 24),
                                max_new_tokens=16))
@@ -120,19 +122,78 @@ def bench_decode_wallclock(micro_steps: int = 8) -> dict:
                 summary["blocks_touched_per_step"]
                 / max(summary["blocks_window_per_step"], 1e-9))
             out["pool_occupancy_peak"] = summary["pool_occupancy_peak"]
+            out["hot_window"] = summary["hot_window"]
+            out["hot_bytes_per_slot"] = summary["hot_bytes_per_slot"]
         return out
 
-    for micro, bsz in ((1, 0), (micro_steps, 0), (1, 8), (micro_steps, 8)):
-        one_run(micro, bsz)                    # warm the jit caches
+    variants = ((1, 0, 0), (micro_steps, 0, 0), (1, 8, 0),
+                (micro_steps, 8, 0), (1, 8, 32), (micro_steps, 8, 32))
+    for micro, bsz, hw in variants:
+        one_run(micro, bsz, hw)                # warm the jit caches
     return {"fused": one_run(1), "micro": one_run(micro_steps),
             "paged": one_run(1, block_size=8),
             "paged_micro": one_run(micro_steps, block_size=8),
+            "ring": one_run(1, block_size=8, hot_window=32),
+            "ring_micro": one_run(micro_steps, block_size=8,
+                                  hot_window=32),
             "backend": jax.default_backend()}
+
+
+def bench_hot_window_scaling(smax_list=(1024, 4096, 16384),
+                             hot_window: int = 64,
+                             block_size: int = 64) -> dict:
+    """The PR 5 capacity headline: hot-tier bytes per batch slot as a
+    function of ``max_len``. With the ring the number is CONSTANT (the
+    ring holds ``hot_window`` tokens regardless of context budget);
+    the pre-ring dense buffer scaled linearly — that line is reported as
+    ``dense_equiv_bytes_per_slot`` for the trajectory plot. Each point
+    also decodes a short burst for a sanity tokens/s reading."""
+    import jax
+    from repro.models import transformer as tf
+    from repro.models.config import get_config, reduced
+    from repro.serving import (PAMManagerConfig, Request, ServingConfig,
+                               ServingEngine)
+
+    cfg = reduced(get_config("pam-llama-7b"))
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    points = {}
+    for smax in smax_list:
+        pam = PAMManagerConfig(
+            max_tokens=smax, hot_capacity=16, warm_capacity=64,
+            compression=4, recency_window=4, schedule_interval=2)
+        eng = ServingEngine(cfg, params, ServingConfig(
+            max_batch=2, max_len=smax, pam=pam, block_size=block_size,
+            # small pool: each request maps only its own window's blocks
+            pool_blocks=8, hot_window=hot_window))
+        rng = np.random.default_rng(0)
+        for i in range(4):
+            eng.submit(Request(id=i,
+                               prompt=rng.integers(0, cfg.vocab, 24),
+                               max_new_tokens=8))
+        t0 = time.perf_counter()
+        summary = eng.run()
+        wall = time.perf_counter() - t0
+        kv_elt_bytes = (summary["hot_bytes_per_slot"]
+                        // (2 * hot_window))    # k+v, per token per slot
+        points[str(smax)] = {
+            "hot_bytes_per_slot": summary["hot_bytes_per_slot"],
+            "dense_equiv_bytes_per_slot": 2 * kv_elt_bytes * smax,
+            "decode_tok_s": summary["total_tokens"] / wall,
+            "dispatches_per_step": (summary["decode_dispatches"]
+                                    / max(summary["decode_device_steps"],
+                                          1)),
+        }
+    vals = [p["hot_bytes_per_slot"] for p in points.values()]
+    return {"hot_window": hot_window, "block_size": block_size,
+            "points": points,
+            "hot_bytes_per_slot": vals[0],
+            "hot_bytes_constant_across_smax": len(set(vals)) == 1}
 
 
 def wallclock_rows(result: dict) -> list[tuple]:
     rows = []
-    for name in ("fused", "micro", "paged", "paged_micro"):
+    for name in ("fused", "micro", "paged", "paged_micro", "ring",
+                 "ring_micro"):
         r = result.get(name)
         if r is None:
             continue
@@ -142,7 +203,25 @@ def wallclock_rows(result: dict) -> list[tuple]:
             derived += (f" pages_per_step={r['blocks_touched_per_step']:.1f}"
                         f"/{r['blocks_window_per_step']:.1f}"
                         f" pool_occ={r['pool_occupancy_peak']:.2f}")
+        if r.get("hot_window"):
+            derived += (f" hot_window={r['hot_window']}"
+                        f" hot_bytes_per_slot={r['hot_bytes_per_slot']}")
         rows.append((f"engine/wallclock_{name}_k{r['micro_steps']}",
                      r["wall_s"] * 1e6 / max(r["decode_device_steps"], 1),
                      derived))
+    return rows
+
+
+def hot_window_rows(result: dict) -> list[tuple]:
+    rows = []
+    for smax, p in result["points"].items():
+        rows.append((f"engine/hot_bytes_smax{smax}",
+                     0.0,
+                     f"hot_bytes_per_slot={p['hot_bytes_per_slot']} "
+                     f"dense_equiv={p['dense_equiv_bytes_per_slot']} "
+                     f"decode_tok_s={p['decode_tok_s']:.0f}"))
+    rows.append(("engine/hot_bytes_constant", 0.0,
+                 f"constant_across_smax="
+                 f"{result['hot_bytes_constant_across_smax']} "
+                 f"(ring W={result['hot_window']})"))
     return rows

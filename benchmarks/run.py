@@ -29,6 +29,7 @@ def main(argv=None) -> None:
 
     rows: list[tuple] = []
     wallclock = None
+    hot_scaling = None
     if args.section in ("all", "figs"):
         from benchmarks import paper_figs
         rows += paper_figs.fig9_online_slo()
@@ -45,6 +46,8 @@ def main(argv=None) -> None:
         rows += engine_bench.bench_engine()
         wallclock = engine_bench.bench_decode_wallclock()
         rows += engine_bench.wallclock_rows(wallclock)
+        hot_scaling = engine_bench.bench_hot_window_scaling()
+        rows += engine_bench.hot_window_rows(hot_scaling)
     if args.section in ("all", "roofline"):
         from benchmarks.roofline import roofline_rows
         rows += roofline_rows(args.dryrun_dir)
@@ -91,6 +94,19 @@ def main(argv=None) -> None:
                 payload["paged_pool_occupancy_peak"] = \
                     paged["pool_occupancy_peak"]
                 payload["paged_decode_tok_s"] = paged["decode_tok_s"]
+            ring = wallclock.get("ring")
+            if ring is not None:
+                # hot-window ring trajectory point (PR 5)
+                payload["ring_decode_tok_s"] = ring["decode_tok_s"]
+                payload["ring_hot_window"] = ring["hot_window"]
+                payload["ring_hot_bytes_per_slot"] = \
+                    ring["hot_bytes_per_slot"]
+        if hot_scaling is not None:
+            payload["hot_window_scaling"] = hot_scaling
+            payload["hot_bytes_per_slot"] = \
+                hot_scaling["hot_bytes_per_slot"]
+            payload["hot_bytes_constant_across_smax"] = \
+                hot_scaling["hot_bytes_constant_across_smax"]
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.out}")

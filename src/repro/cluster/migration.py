@@ -2,12 +2,16 @@
 request between serving engines.
 
 The currency is the ``KVSnapshot``: the request's KV in the portable
-logical layout (hot tokens read from the source's dense cache, warm/cold
-tokens gathered from the paged pool THROUGH the block table —
-``paged_kv.gather_sequence``, the §6.2 command-reorder/sender step),
-plus the per-token PAM state (importance EMA, tier tags, participation
-history) and the host bookkeeping (emitted tokens, timing marks, the
-on-device next-token seed).
+logical layout (hot tokens read from the source's dense hot-tier buffer
+— THROUGH the rotated ring index map when the source runs a hot-window
+ring (``ServingConfig.hot_window``) — warm/cold tokens gathered from
+the paged pool THROUGH the block table — ``paged_kv.gather_sequence``,
+the §6.2 command-reorder/sender step), plus the per-token PAM state
+(importance EMA, tier tags, participation history) and the host
+bookkeeping (emitted tokens, timing marks, the on-device next-token
+seed). Because the snapshot is always absolute-coordinate, engines with
+DIFFERENT hot windows (or none) interoperate: the importer re-bases
+onto its own ring at commit.
 
 Export frees the source's slot and pool blocks *without finishing* the
 request; import is an admission-style donated dispatch on the target

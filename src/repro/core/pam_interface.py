@@ -94,6 +94,76 @@ def migrate_tier_tags(tier: jax.Array, moved_mask: jax.Array,
     return jnp.where(moved_mask, dst_tier, tier)
 
 
+# --------------------------------------------------- hot-window ring (PR 5)
+# The hot tier's dense buffer is a ring of ``window`` slots (absolute
+# position p at slot p % window; see ``kernels.flash_decode.
+# ring_position_map``). These are the §6.2 re-layout transforms between
+# the ring layout and the logical (absolute-position) layout:
+# demotion *is* the ring append overwriting the evicted slot (the evicted
+# token's bytes already live in its mapped pool block — the engine mirrors
+# every append), and promotion of an in-window token is a block->ring
+# copy (``promote_block_to_ring``).
+
+def logical_to_ring(kv: jax.Array, ring_pos: jax.Array,
+                    valid: jax.Array) -> jax.Array:
+    """Re-layout one sequence's logical KV onto ring coordinates.
+
+    kv: (..., S, dh) absolute-position layout; ring_pos/valid: (W,) from
+    ``ring_position_map``. Returns (..., W, dh) — slot j holds position
+    ring_pos[j], dead slots zeroed. The admission-commit / migration-
+    import half of the ring interface.
+    """
+    smax = kv.shape[-2]
+    idx = jnp.clip(ring_pos, 0, smax - 1)
+    g = jnp.take(kv, idx, axis=-2)
+    return jnp.where(valid[:, None], g, jnp.zeros((), kv.dtype))
+
+
+def ring_to_logical(ring_kv: jax.Array, ring_pos: jax.Array,
+                    valid: jax.Array, base: jax.Array) -> jax.Array:
+    """Scatter one sequence's ring-resident KV back into an absolute-
+    position layout on top of ``base`` (normally the pool gather, so
+    out-of-window positions keep their capacity-tier bytes).
+
+    ring_kv: (..., W, dh); base: (..., S, dh). The migration-export half
+    of the ring interface (§6.2 sender: hot rows stream through the ring
+    index map, warm/cold rows come from the block-table gather).
+    """
+    smax = base.shape[-2]
+    # Invalid slots (ring_pos < 0, only when the sequence is shorter
+    # than the window) are routed to smax + ring_pos: in-bounds, above
+    # every valid position, and distinct per slot — so the scatter has
+    # UNIQUE indices (well-defined order) and invalid slots rewrite
+    # their own gathered value, a true no-op at a dead position.
+    idx = jnp.where(valid, jnp.clip(ring_pos, 0, smax - 1),
+                    smax + ring_pos)
+    cur = jnp.take(base, idx, axis=-2)
+    vals = jnp.where(valid[:, None], ring_kv, cur)
+    return _put_along_seq(base, idx, vals)
+
+
+def _put_along_seq(base: jax.Array, idx: jax.Array,
+                   vals: jax.Array) -> jax.Array:
+    """base (..., S, dh) .at[..., idx, :] <- vals (..., W, dh)."""
+    return base.at[..., idx, :].set(vals)
+
+
+def promote_block_to_ring(ring_kv: jax.Array, pool: jax.Array,
+                          table_row: jax.Array, position: jax.Array,
+                          block_size: int, window: int) -> jax.Array:
+    """Promotion: copy token ``position`` from its mapped pool block into
+    its ring slot — one on-device gather + scatter, no host round-trip.
+
+    ring_kv: (L, Hkv, W, dh) one sequence's ring; pool: (L, NB+1, bs,
+    Hkv, dh); table_row: (nb,) physical ids. Only meaningful for
+    in-window positions (out-of-window tokens have no ring slot; callers
+    read them through the block table instead).
+    """
+    blk = table_row[position // block_size]
+    tok = pool[:, blk, position % block_size]          # (L, Hkv, dh)
+    return ring_kv.at[:, :, position % window, :].set(tok)
+
+
 def paged_gather_logical(pool: jax.Array, block_table: jax.Array
                          ) -> jax.Array:
     """Re-layout: paged pool -> logical-order dense view, batched tables.

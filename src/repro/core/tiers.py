@@ -112,6 +112,28 @@ class TieredKVState:
             num_segments=num_tiers)
 
 
+def clamp_hot_to_window(tier: jax.Array, lengths: jax.Array,
+                        window: int) -> jax.Array:
+    """Demote HOT tokens that slid out of the hot-window ring (PR 5).
+
+    With a ring-buffered hot tier only the last ``window`` positions of a
+    sequence have hot-tier storage; a token at position ``p < lengths -
+    window`` was overwritten by the append that evicted it (its bytes
+    live on in its mapped pool block), so a HOT tag there is stale — this
+    re-tags it WARM. Demotion through the ring is therefore a *tag* edit:
+    the eviction itself already happened in the append's overwrite.
+
+    tier: (B, S) int32; lengths: (B,) int32. Returns the clamped tags.
+    Alg. 2 promotions of out-of-window tokens are likewise undone here —
+    a token with no ring slot cannot be hot-tier resident, however
+    important; it stays a capacity-tier (block-table) read.
+    """
+    B, S = tier.shape
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+    out_of_window = pos < (lengths[:, None] - window)
+    return jnp.where(out_of_window & (tier == HOT), WARM, tier)
+
+
 def block_residency(tier_of_token: jax.Array, valid: jax.Array,
                     block_size: int) -> jax.Array:
     """Per-block tier residency for the paged pool view.

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 

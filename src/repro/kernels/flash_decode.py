@@ -47,6 +47,43 @@ NEG_INF = float(-1e30)
 DEFAULT_BLOCK_S = 512
 
 
+def ring_position_map(lengths: jax.Array, window: int
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Rotated position map of the hot-window ring buffer (PR 5).
+
+    The hot tier stores only the last ``window`` tokens of each sequence
+    in a ring: absolute position ``p`` lives at ring slot ``p % window``,
+    so the per-step append (one write at ``lengths % window``) implicitly
+    evicts position ``lengths - window``. This map is the address-
+    generation step every ring consumer shares — the hot partial's mask
+    gather, the admission-commit scatter, and migration export.
+
+    lengths: (B,) int32 current cache lengths. Returns
+    ``(ring_pos (B, window) int32, valid (B, window) bool)`` where
+    ``ring_pos[b, j]`` is the absolute position resident in slot ``j``
+    (some value ``< lengths[b]`` congruent to ``j`` mod ``window``) and
+    ``valid`` marks slots holding a live token. When ``window`` covers
+    the whole cache (``window >= lengths``) the map degenerates to the
+    identity on ``[0, lengths)`` — the legacy dense layout.
+    """
+    lengths = jnp.asarray(lengths, jnp.int32)
+    base = (lengths - window)[:, None]                     # (B, 1)
+    slots = jnp.arange(window, dtype=jnp.int32)[None, :]   # (1, W)
+    ring_pos = base + ((slots - base) % window)            # in [base, base+W)
+    valid = ring_pos >= 0                                  # ring_pos < len
+    return ring_pos, valid
+
+
+def ring_gather_mask(mask: jax.Array, ring_pos: jax.Array,
+                     valid: jax.Array) -> jax.Array:
+    """Pull a (B, Smax) absolute-coordinate boolean mask onto ring
+    coordinates: (B, W) with dead slots False. The hot partial's
+    participation operand."""
+    smax = mask.shape[-1]
+    idx = jnp.clip(ring_pos, 0, smax - 1)
+    return valid & jnp.take_along_axis(mask, idx, axis=-1)
+
+
 def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, *,
                    scale: float, block_s: int, kv_len: int):
     isplit = pl.program_id(2)

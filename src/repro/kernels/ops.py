@@ -214,50 +214,98 @@ def paged_masked_decode_attention(q: jax.Array, k_cache: jax.Array,
                                   block_live: jax.Array | None = None,
                                   scale=None, use_kernel: bool | None = None
                                   ) -> tuple[jax.Array, jax.Array]:
-    """Tiered decode attention: dense hot partial ⊕ paged warm/cold partial.
+    """Tiered decode attention: hot-ring partial ⊕ paged warm/cold partial.
 
     The paged serving fast path's decode-attention entry point. The hot
-    tier reads the dense kernel-ready cache (``k_cache``/``v_cache``,
-    (B, Hkv, Smax, dh)); the warm/cold tiers read the shared block pool
-    *through the block table* — ``paged_mask`` selects their tokens at
-    logical positions, and only blocks with a participating token are
-    touched. The two partials are merged exactly (Alg. 1 reduction), so
-    the result is bitwise-close to dense masked attention over the union
-    mask whenever the pool mirrors the cache.
+    tier reads the dense kernel-ready **ring buffer** (``k_cache``/
+    ``v_cache``, (B, Hkv, W, dh) — absolute position p at ring slot
+    ``p % W``; W == Smax degenerates to the legacy full-window layout):
+    the hot participation mask, given in absolute coordinates
+    ``(B, Smax)``, is pulled onto ring coordinates through the rotated
+    position map (``flash_decode.ring_position_map``). The warm/cold
+    tiers read the shared block pool *through the block table* —
+    ``paged_mask`` selects their tokens at logical positions, and only
+    blocks with a participating token are touched. The two partials are
+    merged exactly (Alg. 1 reduction), so the result equals dense masked
+    attention over the union mask whenever the pool mirrors the cache.
+
+    Callers must keep ``hot_mask`` inside the ring window (positions
+    ``>= kv_lens - W``); out-of-window hot tokens have no ring slot and
+    are silently dropped from the hot partial (the serving engine's tier
+    clamp guarantees they were re-tagged onto the paged side).
 
     Returns (out (B, H, d), mass (B, Smax)) where ``mass`` is the
-    head-mean count-scaled softmax mass over the union working set,
-    reconstructed from the merged (m, l) statistics with one grouped
-    QK^T — exactly the kernel-path idiom of ``masked_decode_attention``.
+    head-mean count-scaled softmax mass over the union working set in
+    absolute coordinates, reconstructed from the merged (m, l)
+    statistics: the hot contribution is scattered back through the ring
+    index map, the paged contribution comes from the pool's logical
+    gather — one grouped QK^T each, the kernel-path idiom of
+    ``masked_decode_attention``.
     """
+    from repro.core.pam_interface import paged_gather_logical
+    from repro.kernels.flash_decode import (ring_gather_mask,
+                                            ring_position_map)
     B, H, d = q.shape
-    Hkv, Smax = k_cache.shape[1], k_cache.shape[2]
+    Hkv, W = k_cache.shape[1], k_cache.shape[2]
+    Smax = hot_mask.shape[1]
+    rep = H // Hkv
     sc = scale if scale is not None else 1.0 / (d ** 0.5)
     live_len = jnp.arange(Smax)[None, :] < kv_lens[:, None]
     hot = hot_mask & live_len
     pgd = paged_mask & live_len
 
-    # One grouped QK^T over the dense cache serves both the hot partial
-    # and the union-mass reconstruction below.
-    s_dense = _grouped_scores(q, k_cache, sc)          # (B, Hkv, rep, S)
-    part = _grouped_partial_from_scores(s_dense, v_cache, hot)
-    part_paged = paged_decode_attention_partial(
-        q, k_pool, v_pool, block_table, pgd, block_live=block_live,
-        scale=sc, use_kernel=use_kernel)
+    # Hot partial over the ring: scores on ring coordinates, participation
+    # pulled through the rotated position map.
+    ring_pos, ring_valid = ring_position_map(kv_lens, W)
+    hot_ring = ring_gather_mask(hot, ring_pos, ring_valid)
+    s_ring = _grouped_scores(q, k_cache, sc)           # (B, Hkv, rep, W)
+    part = _grouped_partial_from_scores(s_ring, v_cache, hot_ring)
+
+    # Paged partial + logical-order pool scores (the latter also feed the
+    # union-mass reconstruction — the pool mirrors every token, so its
+    # gathered scores are the absolute-coordinate truth).
+    # NOTE: the union-mass reconstruction below needs absolute-coordinate
+    # scores for the paged side, which this (reference) formulation takes
+    # from a full logical pool gather — O(Smax) per step even when few
+    # blocks participate. Folding the mass emission into the Pallas
+    # kernel's block walk (so only live pages are scored) is the ROADMAP
+    # kernel-fusion follow-on; the partial itself already skips dead
+    # pages on the kernel path.
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    gk = paged_gather_logical(k_pool, block_table)     # (B, Hkv, Smax, d)
+    s_pool = _grouped_scores(q, gk, sc)                # (B, Hkv, rep, Smax)
+    if use_kernel:
+        part_paged = paged_decode_attention_partial(
+            q, k_pool, v_pool, block_table, pgd, block_live=block_live,
+            scale=sc, use_kernel=True)
+    else:
+        gv = paged_gather_logical(v_pool, block_table)
+        part_paged = _grouped_partial_from_scores(s_pool, gv, pgd)
     merged = osm.merge_partials(part, part_paged)
     out = osm.finalize(merged, out_dtype=q.dtype)
 
-    union = hot | pgd
-    rep = H // Hkv
+    # Union mass in absolute coordinates from the merged (m, l).
     m = merged.m.reshape(B, Hkv, rep)
     l = merged.l.reshape(B, Hkv, rep)
     m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
-    s = jnp.where(union[:, None, None, :], s_dense, -jnp.inf)
-    p = jnp.exp(s - m_safe[..., None]) / jnp.maximum(l, 1e-30)[..., None]
-    p = jnp.where(jnp.isfinite(s), p, 0.0)
-    n_live = jnp.sum(union, axis=-1, keepdims=True).astype(jnp.float32)
-    mass = jnp.mean(p, axis=(1, 2)) * n_live
-    return out, mass
+    inv_l = 1.0 / jnp.maximum(l, 1e-30)[..., None]
+
+    def probs(s, mask):
+        s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+        p = jnp.exp(s - m_safe[..., None]) * inv_l
+        return jnp.where(jnp.isfinite(s), p, 0.0)
+
+    ph = jnp.mean(probs(s_ring, hot_ring), axis=(1, 2))      # (B, W)
+    pp = jnp.mean(probs(s_pool, pgd), axis=(1, 2))           # (B, Smax)
+    bidx = jnp.arange(B)[:, None]
+    scatter_idx = jnp.clip(ring_pos, 0, Smax - 1)
+    mass = pp.at[bidx, scatter_idx].add(jnp.where(hot_ring, ph, 0.0))
+    hot_eff = jnp.zeros((B, Smax), jnp.int32).at[bidx, scatter_idx].max(
+        hot_ring.astype(jnp.int32)).astype(bool)       # hot ∩ window, abs
+    n_live = jnp.sum(hot_eff | pgd, axis=-1,
+                     keepdims=True).astype(jnp.float32)
+    return out, mass * n_live
 
 
 def pam_decode_attention(q: jax.Array,

@@ -43,6 +43,10 @@ def main(argv=None):
                     help="paged warm/cold KV block tokens (0 = dense)")
     ap.add_argument("--pool-blocks", type=int, default=None,
                     help="physical pool blocks (default: no overcommit)")
+    ap.add_argument("--hot-window", type=int, default=0,
+                    help="hot-tier ring slots (0 = full window; requires "
+                         "--block-size): per-slot HBM-tier bytes stop "
+                         "scaling with --max-len")
     ap.add_argument("--devices", default=None, metavar="SPEC",
                     help="cluster mode: heterogeneous device spec, e.g. "
                          "'hbm:1,cxl:2' (see repro.perfmodel.devices)")
@@ -70,6 +74,7 @@ def main(argv=None):
     scfg = ServingConfig(max_batch=args.max_batch, max_len=args.max_len,
                          pam=pam_cfg, block_size=args.block_size,
                          pool_blocks=args.pool_blocks,
+                         hot_window=args.hot_window,
                          temperature=args.temperature, top_k=args.top_k)
     rng = np.random.default_rng(0)
 

@@ -278,10 +278,15 @@ def attention_decode(p: AttnParams, x: jax.Array, k_cache: jax.Array,
         out, mass, k_cache, v_cache = fused_update_decode(
             q, k_cache, v_cache, k, v, kv_lens)
     else:
-        # scatter new kv at per-sequence position
+        # scatter new kv at per-sequence position — modulo the buffer's
+        # slot count: a hot-window RING cache (slots < Smax) wraps, so
+        # this one write is also the ring eviction (the overwritten
+        # token's bytes live on in its mapped pool block); a full-window
+        # buffer reduces to the absolute position
         bidx = jnp.arange(B)
-        k_cache = k_cache.at[bidx, :, pos].set(k)
-        v_cache = v_cache.at[bidx, :, pos].set(v)
+        slot = pos % k_cache.shape[2]
+        k_cache = k_cache.at[bidx, :, slot].set(k)
+        v_cache = v_cache.at[bidx, :, slot].set(v)
         if paged is not None:
             pk, pv, dst_block, dst_slot = paged
             pk = pk.at[dst_block, dst_slot].set(k)

@@ -437,13 +437,20 @@ class DecodeCache(NamedTuple):
 
 
 def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int, *,
-                      paged_blocks: int = 0, block_size: int = 0
-                      ) -> DecodeCache:
+                      paged_blocks: int = 0, block_size: int = 0,
+                      hot_window: int = 0) -> DecodeCache:
     """Decode cache for ``batch`` sequences of up to ``max_len`` tokens.
 
     ``paged_blocks``/``block_size`` > 0 additionally allocates the paged
     KV pools (``paged_blocks`` allocatable blocks + 1 sentinel) for the
     serving engine's block-table decode path — GQA-cache families only.
+
+    ``hot_window`` > 0 shrinks the dense ``k``/``v`` buffers to a
+    hot-sized RING of that many slots (absolute position p at slot
+    ``p % hot_window``): per-slot hot-tier bytes stop scaling with
+    ``max_len`` — warm/cold tokens exist only in the paged pools, which
+    is why a ring cache requires ``paged_blocks`` (the capacity tier
+    backs every evicted token).
     """
     dtype = jnp.dtype(cfg.dtype)
     L = cfg.n_layers
@@ -455,6 +462,10 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     ckv, krope = z(0), z(0)
     conv, state = z(0), z(0)
     pk, pv = z(0), z(0)
+    if hot_window and not paged_blocks:
+        raise ValueError("a hot-window ring cache needs paged pools to "
+                         "back evicted tokens (paged_blocks > 0)")
+    kv_len = min(hot_window, max_len) if hot_window else max_len
     if paged_blocks:
         if not (cfg.family in ("dense", "vlm")
                 or (cfg.family == "moe" and cfg.mla is None)):
@@ -466,15 +477,15 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int, *,
         pv = z(L, paged_blocks + 1, block_size, cfg.n_kv_heads,
                cfg.head_dim)
     if cfg.family in ("dense", "vlm"):
-        k = z(L, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
-        v = z(L, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+        k = z(L, batch, cfg.n_kv_heads, kv_len, cfg.head_dim)
+        v = z(L, batch, cfg.n_kv_heads, kv_len, cfg.head_dim)
     elif cfg.family == "moe":
         if cfg.mla is not None:
             ckv = z(L, batch, max_len, cfg.mla.kv_lora_rank)
             krope = z(L, batch, max_len, cfg.mla.qk_rope_head_dim)
         else:
-            k = z(L, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
-            v = z(L, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+            k = z(L, batch, cfg.n_kv_heads, kv_len, cfg.head_dim)
+            v = z(L, batch, cfg.n_kv_heads, kv_len, cfg.head_dim)
     elif cfg.family == "ssm":
         di, H, conv_dim = ssm_mod._dims(cfg.d_model, cfg.ssm)
         conv = z(L, batch, cfg.ssm.conv_kernel - 1, conv_dim)

@@ -18,7 +18,6 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Optional
 
 from repro.core.tiers import DDR_PIM, HBM_PIM, SSD_PIM, TierSpec
 

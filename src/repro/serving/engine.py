@@ -56,6 +56,27 @@ dense window for the sparse-read accounting. Pool capacity is admission
 backpressure: requests wait (instead of erroring) until finished
 sequences free their blocks, so a pool smaller than ``max_batch``'s
 worst case overcommits gracefully.
+
+Hot-window ring (PR 5)
+----------------------
+With ``ServingConfig.hot_window > 0`` the dense hot-tier buffer shrinks
+from ``(L, B, Hkv, max_len, dh)`` to a RING ``(L, B, Hkv, W, dh)``:
+absolute position ``p`` lives at ring slot ``p % W``, so per-slot
+hot-tier bytes are independent of ``max_len`` — the paper's §4.1-4.2
+capacity argument (only the hot window needs dense high-bandwidth
+storage; warm/cold tokens live ONLY in pool blocks). The per-step
+append is one ring write whose overwrite IS the eviction (the evicted
+token was mirrored into its mapped pool block when it was appended, in
+the same donated dispatch), demotion completes as a tier-tag clamp, and
+promotion of an in-window token needs no copy at all — the ring already
+holds every in-window position, so Alg. 2 promotions just flip which
+storage the split reads. The hot partial reads the ring through the
+rotated position map (``kernels.flash_decode.ring_position_map``) and
+merges with the paged partial exactly (Alg. 1), so token streams are
+bit-for-bit those of the full-window engine; admission commit,
+migration export/import and the micro-loop are all rebased onto ring
+coordinates while participation, importance and block tables stay
+absolute.
 """
 
 from __future__ import annotations
@@ -70,14 +91,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import pam_interface as pam_if
+from repro.core import tiers as tiers_mod
 from repro.core.tiers import HOT
+from repro.kernels.flash_decode import ring_position_map
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
 from repro.serving import pam_manager as pm
 from repro.serving import paged_kv as pkv
 from repro.serving.paged_kv import BlockAllocator, OutOfBlocks
 from repro.serving.pam_manager import (PAMManager, PAMManagerConfig,
-                                       PAMState, init_pam_state,
+                                       init_pam_state,
                                        make_masked_decode_attn,
                                        make_masked_latent_attn)
 
@@ -114,6 +138,17 @@ class ServingConfig:
     set it lower to exercise capacity backpressure). Requires a PAM
     config (tier residency decides dense-vs-paged reads) and a GQA-cache
     model family, and ``max_len`` must be a block multiple.
+
+    ``hot_window > 0`` (paged mode only) shrinks the dense hot-tier
+    buffer to a RING of that many slots — absolute position ``p`` lives
+    at ring slot ``p % hot_window`` — so per-slot hot-tier bytes are
+    ``O(hot_window)`` instead of ``O(max_len)``. Every appended token is
+    mirrored into its mapped pool block in the same donated dispatch, so
+    the append's ring overwrite IS the eviction (the evicted token's
+    only live copy becomes its pool block, where warm/cold reads already
+    go); token streams are exactly those of the full-window engine.
+    0 keeps the legacy full-window buffer (a ring with ``max_len``
+    slots, i.e. the identity rotation).
     """
     max_batch: int = 4
     max_len: int = 256
@@ -123,6 +158,7 @@ class ServingConfig:
     bucket_prefill: bool = True        # pow-2 prompt-length buckets
     block_size: int = 0                # paged-KV block tokens (0 = dense)
     pool_blocks: Optional[int] = None  # physical blocks (None = full)
+    hot_window: int = 0                # hot ring slots (0 = max_len)
     temperature: float = 0.0           # 0 = greedy argmax (exact tests)
     top_k: int = 0                     # 0 = full softmax when sampling
     sample_seed: int = 0               # threaded on-device PRNG key seed
@@ -164,6 +200,7 @@ def _sample_tokens(logits, rng, temperature: float, top_k: int):
 def _fused_decode_body(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
                        smax: int, bs: int, sentinel: int,
                        temperature: float, top_k: int, eos: int,
+                       hot_window: int,
                        params, tokens, cache, pam_state, active, rng):
     """ONE decode step of the full PAM pipeline, pure & traceable:
     participation -> masked decode -> stats -> observe -> sample.
@@ -172,6 +209,14 @@ def _fused_decode_body(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
     split by tier, warm/cold reads gather the pool through
     ``pam_state.block_table`` (dead pages remapped to ``sentinel``), and
     the appended token is mirrored into its mapped block.
+
+    ``hot_window`` > 0 is the hot ring's slot count: hot-tier tags are
+    first clamped to the ring window (a token the append evicted cannot
+    stay hot — demotion is the ring overwrite plus this tag edit), the
+    participation split confines hot reads to in-window tokens, and the
+    dense append in ``attention_decode`` wraps modulo the window. All
+    other coordinates (participation, importance EMA, block tables) stay
+    absolute.
 
     ``eos >= 0`` folds EOS detection into the dispatch: a slot that
     samples EOS is deactivated *on device* (returned ``active`` drops
@@ -191,8 +236,14 @@ def _fused_decode_body(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
     blocks = jnp.zeros((2,), jnp.int32)
     if bs:
         nb = smax // bs
+        if hot_window:
+            # ring demotion, part 2: the append overwrote the evicted
+            # slot; re-tag tokens that slid out of the window so the
+            # split (and the tier accounting) reads them from the pool
+            pam_state = pam_state._replace(tier=tiers_mod.clamp_hot_to_window(
+                pam_state.tier, lengths, hot_window))
         hot_m, pgd_m, block_live = pm.paged_participation_split(
-            participate, pam_state.tier, lengths, bs)
+            participate, pam_state.tier, lengths, bs, hot_window)
         bt_eff = jnp.where(block_live, pam_state.block_table, sentinel)
         d_fn = pm.make_paged_decode_attn(hot_m, pgd_m, bt_eff, block_live)
         # append coordinates for the new token (same for every layer);
@@ -246,7 +297,7 @@ def _fused_decode_body(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
 def _fused_decode_fn(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
                      smax: int, batch: int, k: int, bs: int = 0,
                      sentinel: int = 0, temperature: float = 0.0,
-                     top_k: int = 0, eos: int = -1):
+                     top_k: int = 0, eos: int = -1, hot_window: int = 0):
     """Fused decode dispatch running ``k`` steps on device. Cache (dense
     buffers AND paged pools), PAM state (including the block table), the
     token vector and the PRNG key are DONATED — zero per-step copies.
@@ -266,7 +317,8 @@ def _fused_decode_fn(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
             tokens, cache, pam_state, active, rng, \
                 (reads, hit, moved, lens, blk) = _fused_decode_body(
                     cfg, pcfg, smax, bs, sentinel, temperature, top_k,
-                    eos, params, tokens, cache, pam_state, active, rng)
+                    eos, hot_window, params, tokens, cache, pam_state,
+                    active, rng)
             bufs = StepBufs(
                 tokens=bufs.tokens.at[i].set(tokens),
                 tier_reads=bufs.tier_reads.at[i].set(reads),
@@ -308,7 +360,8 @@ def _prefill_fn(cfg: ModelConfig, smax: int):
 
 @functools.lru_cache(maxsize=None)
 def _admit_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int,
-                     n: int, temperature: float = 0.0, top_k: int = 0):
+                     n: int, temperature: float = 0.0, top_k: int = 0,
+                     hot_window: int = 0):
     """One donated dispatch per admission GROUP: scatter ``n`` prefilled
     sequences (one batched prefill's sub-cache) into their slots, SAMPLE
     each first token from the prefill logits (same temperature/top-k/
@@ -316,6 +369,11 @@ def _admit_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int,
     vector and place each sequence's initial tier layout. In paged mode
     (``block_size`` > 0) the same dispatch also scatters each prompt's
     KV into its allocated pool blocks and installs its block-table row.
+    With a hot ring (``hot_window`` > 0) the dense scatter is rebased
+    onto ring coordinates: only each prompt's last ``hot_window`` tokens
+    land in the ring (through the rotated position map), while the pool
+    write above keeps every token — older prompt positions exist ONLY in
+    their pool blocks from the moment of admission.
     ``n == 1`` is the single-admission case; same-bucket admission
     bursts ride one dispatch."""
     def commit(cache, pam_state, tokens_dev, sub, logits, slots, lengths,
@@ -330,14 +388,21 @@ def _admit_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int,
         if block_size:
             # pool fields have no batch axis — peel them off the generic
             # per-slot scatter and fill them through the block tables
+            # (full logical rows, BEFORE any ring re-layout of sub)
             pk, pv = cache.pk, cache.pv
-            cache = cache._replace(pk=sub.pk, pv=sub.pv)
-            cache = jax.tree.map(put, cache, sub)
             for i in range(n):
                 pk = pkv.write_prefill(pk, sub.k[:, i], table_rows[i],
                                        block_size)
                 pv = pkv.write_prefill(pv, sub.v[:, i], table_rows[i],
                                        block_size)
+            if hot_window:
+                ring_pos, valid = ring_position_map(lengths, hot_window)
+                ring_of = jax.vmap(pam_if.logical_to_ring,
+                                   in_axes=(1, 0, 0), out_axes=1)
+                sub = sub._replace(k=ring_of(sub.k, ring_pos, valid),
+                                   v=ring_of(sub.v, ring_pos, valid))
+            cache = cache._replace(pk=sub.pk, pv=sub.pv)
+            cache = jax.tree.map(put, cache, sub)
             cache = cache._replace(pk=pk, pv=pv)
         else:
             cache = jax.tree.map(put, cache, sub)
@@ -353,19 +418,28 @@ def _admit_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int,
 
 
 @functools.lru_cache(maxsize=None)
-def _import_commit_fn(has_pam: bool, block_size: int):
+def _import_commit_fn(has_pam: bool, block_size: int,
+                      hot_window: int = 0):
     """One donated dispatch per migrated-request import: install the
     snapshot's logical-layout KV into the dense cache slot (and, in
     paged mode, scatter it through the target's freshly-allocated block
     table — the §6.2 address-generation/receiver step), insert the PAM
-    rows and seed the device token vector. The admission twin of
-    ``export``: a migrated request resumes with zero host state left on
-    the source."""
+    rows and seed the device token vector. With a hot ring the dense
+    install is re-based onto ring coordinates (last ``hot_window``
+    tokens through the rotated position map; the pool scatter below
+    keeps the full context). The admission twin of ``export``: a
+    migrated request resumes with zero host state left on the source."""
     def commit(cache, pam_state, tokens_dev, k_row, v_row, imp_row,
                tier_row, lh_row, slot, length, token, table_row=None):
+        if hot_window:
+            ring_pos, valid = ring_position_map(length[None], hot_window)
+            dk = pam_if.logical_to_ring(k_row, ring_pos[0], valid[0])
+            dv = pam_if.logical_to_ring(v_row, ring_pos[0], valid[0])
+        else:
+            dk, dv = k_row, v_row
         cache = cache._replace(
-            k=cache.k.at[:, slot].set(k_row),
-            v=cache.v.at[:, slot].set(v_row),
+            k=cache.k.at[:, slot].set(dk),
+            v=cache.v.at[:, slot].set(dv),
             lengths=cache.lengths.at[slot].set(length))
         if block_size:
             cache = cache._replace(
@@ -384,19 +458,30 @@ def _import_commit_fn(has_pam: bool, block_size: int):
 
 
 @functools.lru_cache(maxsize=None)
-def _export_gather_fn(block_size: int):
+def _export_gather_fn(block_size: int, hot_window: int = 0):
     """Snapshot gather for inter-device migration (§6.2 sender side):
     hot tokens read the dense cache row, warm/cold tokens are gathered
     from the pool THROUGH the block table (``paged_kv.gather_sequence``)
     — one fused gather producing the portable logical (L, Hkv, Smax, dh)
-    layout. Dense-only engines just slice the cache."""
+    layout. With a hot ring, the hot rows stream through the rotated
+    ring index map (``ring_to_logical``) on top of the pool gather — the
+    snapshot layout is unchanged, so engines with different (or no) hot
+    windows interoperate. Dense-only engines just slice the cache."""
     @jax.jit
-    def go(k, v, pk, pv, table_row, tier_row, slot):
-        kc, vc = k[:, slot], v[:, slot]           # (L, Hkv, Smax, dh)
+    def go(k, v, pk, pv, table_row, tier_row, slot, length):
+        kc, vc = k[:, slot], v[:, slot]       # (L, Hkv, Smax|W, dh)
         if not block_size:
             return kc, vc
         gk = pkv.gather_sequence(pk, table_row)
         gv = pkv.gather_sequence(pv, table_row)
+        if hot_window:
+            ring_pos, valid = ring_position_map(length[None], hot_window)
+            ring_pos, valid = ring_pos[0], valid[0]
+            smax = gk.shape[2]
+            hot_at = jnp.take(tier_row, jnp.clip(ring_pos, 0, smax - 1))
+            sel = valid & (hot_at == HOT)
+            return (pam_if.ring_to_logical(kc, ring_pos, sel, gk),
+                    pam_if.ring_to_logical(vc, ring_pos, sel, gv))
         hot = (tier_row == HOT)[None, None, :, None]
         return jnp.where(hot, kc, gk), jnp.where(hot, vc, gv)
 
@@ -431,8 +516,16 @@ class ServingEngine:
         self.pam_cfg = scfg.pam
         self.mgr = PAMManager(scfg.pam) if scfg.pam else None
         self.block_size = scfg.block_size
+        self.hot_window = scfg.hot_window
         self.allocator: Optional[BlockAllocator] = None
         self.sentinel = 0
+        if self.hot_window and not self.block_size:
+            raise ValueError("hot_window (ring hot tier) requires the "
+                             "paged pool (block_size > 0): evicted "
+                             "tokens live only in their mapped blocks")
+        if self.hot_window and not 0 < self.hot_window <= Smax:
+            raise ValueError(f"hot_window {self.hot_window} must be in "
+                             f"(0, max_len={Smax}]")
         if self.block_size:
             if scfg.pam is None:
                 raise ValueError("paged KV (block_size > 0) requires a "
@@ -451,7 +544,7 @@ class ServingEngine:
             self.sentinel = pool_blocks
             self.cache = tf.init_decode_cache(
                 cfg, B, Smax, paged_blocks=pool_blocks,
-                block_size=self.block_size)
+                block_size=self.block_size, hot_window=self.hot_window)
             self.pam_state = init_pam_state(B, Smax, num_blocks=nb_seq,
                                             sentinel=pool_blocks)
             self.peak_occupancy = 0.0
@@ -488,7 +581,7 @@ class ServingEngine:
                 self.cfg, self.pam_cfg, self.scfg.max_len,
                 self.scfg.max_batch, k, self.block_size, self.sentinel,
                 self.scfg.temperature, self.scfg.top_k,
-                self.scfg.eos_token)
+                self.scfg.eos_token, self.hot_window)
         return self._micro_jits[k]
 
     def _admit_commit_dispatch(self, cache, pam_state, tokens_dev, sub,
@@ -498,7 +591,7 @@ class ServingEngine:
         (resolved per group size from the shared compile cache)."""
         fn = _admit_commit_fn(self.pam_cfg, self.block_size,
                               int(slots.shape[0]), self.scfg.temperature,
-                              self.scfg.top_k)
+                              self.scfg.top_k, self.hot_window)
         args = (cache, pam_state, tokens_dev, sub, logits, slots, lengths,
                 rng)
         if table_rows is not None:
@@ -933,9 +1026,10 @@ class ServingEngine:
             else jnp.zeros((0,), jnp.int32))
         tier_row = (self.pam_state.tier[slot] if self.pam_cfg is not None
                     else jnp.zeros((self.scfg.max_len,), jnp.int32))
-        k_row, v_row = _export_gather_fn(self.block_size)(
+        k_row, v_row = _export_gather_fn(self.block_size, self.hot_window)(
             self.cache.k, self.cache.v, self.cache.pk, self.cache.pv,
-            table_row, tier_row, jnp.int32(slot))
+            table_row, tier_row, jnp.int32(slot),
+            self.cache.lengths[slot])
         snap = {
             "request": rs.request,
             "outputs": list(rs.outputs),
@@ -1004,7 +1098,8 @@ class ServingEngine:
                 jnp.int32(snap["token"]))
         if table_row is not None:
             args += (jnp.asarray(table_row),)
-        fn = _import_commit_fn(self.pam_cfg is not None, self.block_size)
+        fn = _import_commit_fn(self.pam_cfg is not None, self.block_size,
+                               self.hot_window)
         self.cache, self.pam_state, self.tokens_dev = fn(*args)
         rs = RequestState(
             request=req, status=RUNNING, slot=slot,
@@ -1044,6 +1139,12 @@ class ServingEngine:
             out["blocks_window_per_step"] = self.blocks_window_total / n
             out["pool_occupancy_peak"] = self.peak_occupancy
             out["pool_occupancy_now"] = self.allocator.occupancy
+            # hot-tier footprint: ring slots x KV bytes, per batch slot —
+            # independent of max_len once hot_window is set (PR 5)
+            out["hot_window"] = self.hot_window or self.scfg.max_len
+            out["hot_bytes_per_slot"] = int(
+                (self.cache.k.nbytes + self.cache.v.nbytes)
+                // self.scfg.max_batch)
         return out
 
     def slo_attainment(self, slo_s: float) -> float:

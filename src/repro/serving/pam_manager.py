@@ -126,22 +126,35 @@ def make_paged_decode_attn(hot_mask: jax.Array, paged_mask: jax.Array,
 
 
 def paged_participation_split(participate: jax.Array, tier: jax.Array,
-                              lengths: jax.Array, block_size: int
+                              lengths: jax.Array, block_size: int,
+                              hot_window: int = 0
                               ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Split one step's participation set by storage tier.
 
     Returns (hot_mask, paged_mask, block_live): hot tokens read the dense
-    cache, warm/cold tokens read the paged pool, and ``block_live``
-    ((B, nb) bool) marks the logical blocks the paged gather must touch —
-    ``block_live.sum()`` is the step's pages-read, the sparse-read win
-    the benchmarks record.
+    hot-tier buffer, warm/cold tokens read the paged pool, and
+    ``block_live`` ((B, nb) bool) marks the logical blocks the paged
+    gather must touch — ``block_live.sum()`` is the step's pages-read,
+    the sparse-read win the benchmarks record.
+
+    ``hot_window`` > 0 is the hot ring's slot count: only positions
+    inside the ring window (``>= lengths - hot_window``) have hot-tier
+    storage, so hot-tagged tokens outside it fall through to the paged
+    side — every participating token is read from exactly one storage.
+    0 keeps the legacy full-window split (hot tier sized ``Smax``).
     """
     from repro.serving.paged_kv import token_block_mask
     B, Smax = participate.shape
-    valid = jnp.arange(Smax)[None, :] < lengths[:, None]
+    pos = jnp.arange(Smax)[None, :]
+    valid = pos < lengths[:, None]
     live = participate & valid
-    hot_mask = live & (tier == HOT)
-    paged_mask = live & (tier != HOT)
+    if hot_window:
+        in_window = pos >= (lengths[:, None] - hot_window)
+        hot_mask = live & (tier == HOT) & in_window
+        paged_mask = live & ~((tier == HOT) & in_window)
+    else:
+        hot_mask = live & (tier == HOT)
+        paged_mask = live & (tier != HOT)
     return hot_mask, paged_mask, token_block_mask(paged_mask, block_size)
 
 

@@ -6,7 +6,6 @@ gradient compression with error feedback for cross-pod reduction.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, NamedTuple, Optional
 
 import jax

@@ -63,7 +63,7 @@ def check_pam_shard_map():
 
     # collective-bytes claim: the sequence-sharded form must move less
     with jax.set_mesh(mesh):
-        seq_hlo = jax.jit(seq_fn).lower(q, k, v, lens).compile().as_text()
+        _seq_hlo = jax.jit(seq_fn).lower(q, k, v, lens).compile().as_text()
         gat_hlo = jax.jit(gat_fn).lower(q, k, v, lens).compile().as_text()
     assert gat_hlo.count("all-gather") > 0
     print("  pam shard_map OK")
@@ -120,7 +120,7 @@ def check_sharded_train_step():
     bspecs = shd.batch_specs(cfg, 4, mesh)
     from repro.training.train_step import TrainState
     from repro.training.optim import AdamWState
-    state_specs = TrainState(
+    _state_specs = TrainState(   # spec pytree must CONSTRUCT
         params=pspecs,
         opt=AdamWState(step=P(), mu=ospecs, nu=ospecs),
         error_feedback=None)

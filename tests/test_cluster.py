@@ -8,7 +8,6 @@ served unmigrated on one device.
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

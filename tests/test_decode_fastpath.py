@@ -10,7 +10,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from _hyp import given, settings, st  # hypothesis, or skip-stub fallback
 
 from repro.core import importance as imp_mod
 from repro.core import online_softmax as osm

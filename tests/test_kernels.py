@@ -8,7 +8,6 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.flash_decode import flash_decode
 from repro.kernels.ssd_scan import ssd_scan
 from repro.kernels import ops
 

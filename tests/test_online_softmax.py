@@ -8,7 +8,6 @@ these tests certify that with hypothesis-driven shapes/splits/scales.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st  # hypothesis, or skip-stub fallback
 
 from repro.core import online_softmax as osm

@@ -13,7 +13,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import online_softmax as osm
 from repro.core import pam_interface, tiers
 from repro.core.tiers import COLD, HOT, WARM
 from repro.kernels import ops as kops

@@ -1,0 +1,236 @@
+"""Hot-window ring buffer (PR 5): per-slot hot-tier memory independent
+of max_len, token streams pinned exact against a dense-Smax twin.
+
+Covers the acceptance surface: ring-vs-dense-twin exactness on greedy
+and micro_steps=8 configs, wraparound at exactly ``hot_window``, short
+sequences (``true_len < hot_window`` — no eviction yet), an Alg. 2
+promotion landing on the slot about to be evicted, migration of a
+request mid-wrap (including across differing hot windows), hot-tier
+bytes/slot constant across max_len, and the config validation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster.migration import migrate
+from repro.core.tiers import HOT, WARM, clamp_hot_to_window
+from repro.kernels.flash_decode import ring_position_map
+from repro.models import transformer as tf
+from repro.models.config import get_config, reduced
+from repro.serving import (PAMManagerConfig, Request, ServingConfig,
+                           ServingEngine)
+
+jax.config.update("jax_platform_name", "cpu")
+
+WINDOW = 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("pam-llama-7b"))
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _pam(max_len=64):
+    return PAMManagerConfig(max_tokens=max_len, hot_capacity=8,
+                            warm_capacity=16, compression=4,
+                            recency_window=4, schedule_interval=2)
+
+
+def _engine(cfg, params, *, max_len=64, block_size=0, hot_window=0,
+            micro_steps=1, eos=-1, name="dev"):
+    scfg = ServingConfig(max_batch=3, max_len=max_len, pam=_pam(max_len),
+                         block_size=block_size, hot_window=hot_window,
+                         micro_steps=micro_steps, eos_token=eos)
+    return ServingEngine(cfg, params, scfg, name=name)
+
+
+def _run(eng, prompts, max_new=20):
+    for i, p in enumerate(prompts):
+        eng.submit(Request(id=i, prompt=p, max_new_tokens=max_new))
+    eng.run()
+    return {i: eng.requests[i].outputs for i in range(len(prompts))}
+
+
+def _prompts(n=4, plen=24, seed=0, vocab=256):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, plen) for _ in range(n)]
+
+
+# ------------------------------------------------------------- unit level
+def test_ring_position_map_identity_and_wrap():
+    rp, va = ring_position_map(jnp.array([0, 3, 8, 13]), 8)
+    rp, va = np.asarray(rp), np.asarray(va)
+    assert not va[0].any()                       # empty sequence
+    assert rp[1][:3].tolist() == [0, 1, 2]       # identity below window
+    assert va[1].tolist() == [True] * 3 + [False] * 5
+    assert va[2].all() and rp[2].tolist() == list(range(8))
+    # len 13, W 8: slots hold positions 5..12, each congruent mod 8
+    assert sorted(rp[3].tolist()) == list(range(5, 13))
+    assert all(rp[3][j] % 8 == j for j in range(8))
+
+
+def test_clamp_hot_to_window_demotes_evicted_tags():
+    tier = jnp.full((1, 8), HOT, jnp.int32)
+    out = np.asarray(clamp_hot_to_window(tier, jnp.array([6]), 4))
+    assert out[0, :2].tolist() == [WARM, WARM]   # slid out of window
+    assert (out[0, 2:] == HOT).all()             # in-window tags kept
+
+
+# --------------------------------------------------- dense-twin exactness
+def test_ring_stream_exact_vs_dense_twin_greedy(setup):
+    """Sequences run to 44 tokens with a 16-slot ring: ~2 full wraps.
+    The ring engine's token streams are identical to the pre-ring dense
+    engine's, and the hot buffer really is ring-sized."""
+    cfg, params = setup
+    prompts = _prompts(vocab=cfg.vocab)
+    dense = _run(_engine(cfg, params), prompts)
+    ring_eng = _engine(cfg, params, block_size=8, hot_window=WINDOW)
+    ring = _run(ring_eng, prompts)
+    assert ring_eng.cache.k.shape[3] == WINDOW
+    assert ring == dense
+
+
+def test_ring_stream_exact_micro8(setup):
+    cfg, params = setup
+    prompts = _prompts(vocab=cfg.vocab)
+    dense = _run(_engine(cfg, params), prompts)
+    ring = _run(_engine(cfg, params, block_size=8, hot_window=WINDOW,
+                        micro_steps=8), prompts)
+    assert ring == dense
+
+
+def test_ring_stream_exact_with_eos_on_device(setup):
+    """EOS detection stays on-device with a ring hot tier (frozen slots
+    rewrite their own ring slot idempotently)."""
+    cfg, params = setup
+    prompts = _prompts(vocab=cfg.vocab, seed=3)
+    eos = int(_run(_engine(cfg, params), prompts, max_new=24)[0][5])
+    dense = _run(_engine(cfg, params, eos=eos), prompts, max_new=24)
+    ring = _run(_engine(cfg, params, block_size=8, hot_window=WINDOW,
+                        micro_steps=4, eos=eos), prompts, max_new=24)
+    assert ring == dense
+
+
+# ------------------------------------------------------- boundary edges
+def test_wraparound_at_exactly_window(setup):
+    """Prompt length == hot_window: the commit fills every ring slot and
+    the FIRST decode append wraps onto slot 0."""
+    cfg, params = setup
+    prompts = _prompts(n=3, plen=WINDOW, vocab=cfg.vocab, seed=1)
+    dense = _run(_engine(cfg, params), prompts, max_new=12)
+    ring = _run(_engine(cfg, params, block_size=8, hot_window=WINDOW),
+                prompts, max_new=12)
+    assert ring == dense
+
+
+def test_short_sequence_no_eviction(setup):
+    """true_len < hot_window: nothing is ever evicted and the ring is the
+    identity layout — slot j holds position j. Prompt positions are
+    bitwise the dense twin's (same prefill, re-laid out); decode-appended
+    positions agree to float ulps (their activations flow through the
+    merged two-partial attention instead of one softmax)."""
+    cfg, params = setup
+    plen = 6
+    prompts = _prompts(n=2, plen=plen, vocab=cfg.vocab, seed=2)
+    twin = _engine(cfg, params)
+    dense = _run(twin, prompts, max_new=4)       # final length 9 < 16
+    eng = _engine(cfg, params, block_size=8, hot_window=WINDOW)
+    ring = _run(eng, prompts, max_new=4)
+    assert ring == dense
+    for slot in range(2):                        # admitted in order
+        length = int(np.asarray(eng.cache.lengths[slot]))
+        assert plen < length < WINDOW
+        np.testing.assert_array_equal(
+            np.asarray(eng.cache.k[:, slot, :, :plen]),
+            np.asarray(twin.cache.k[:, slot, :, :plen]))
+        np.testing.assert_allclose(
+            np.asarray(eng.cache.k[:, slot, :, plen:length]),
+            np.asarray(twin.cache.k[:, slot, :, plen:length]),
+            rtol=1e-5, atol=1e-5)
+
+
+def test_promotion_landing_on_about_to_evict_slot(setup):
+    """Force an Alg. 2-style promotion of the exact position the next
+    append will evict: the tier clamp re-tags it (no stale hot read of
+    an overwritten slot) and the stream stays dense-twin exact."""
+    cfg, params = setup
+    prompts = _prompts(n=1, plen=24, vocab=cfg.vocab, seed=4)
+    twin = _engine(cfg, params)
+    eng = _engine(cfg, params, block_size=8, hot_window=WINDOW)
+    for e in (twin, eng):
+        e.submit(Request(id=0, prompt=prompts[0], max_new_tokens=20))
+    for _ in range(4):                      # lengths: 24 -> 28
+        twin.step()
+        eng.step()
+    slot = eng.requests[0].slot
+    length = int(np.asarray(eng.cache.lengths[slot]))
+    victim = length - WINDOW                # evicted by the NEXT append
+    assert victim >= 0
+    eng.pam_state = eng.pam_state._replace(
+        tier=eng.pam_state.tier.at[slot, victim].set(HOT))
+    while any(s is not None for s in eng.slots):
+        eng.step()
+    twin.run()
+    assert eng.requests[0].outputs == twin.requests[0].outputs
+    # the clamp demoted the promotion once the slot was overwritten
+    assert int(np.asarray(eng.pam_state.tier[slot, victim])) != HOT
+
+
+def test_migration_mid_wrap(setup):
+    """Export a request whose ring has wrapped, import it elsewhere —
+    including onto an engine with a DIFFERENT hot window — and the
+    stream matches the unmigrated dense twin."""
+    cfg, params = setup
+    prompt = _prompts(n=1, plen=24, vocab=cfg.vocab, seed=5)[0]
+    twin = _engine(cfg, params)
+    twin.submit(Request(id=0, prompt=prompt, max_new_tokens=24))
+    twin.run()
+    expect = twin.requests[0].outputs
+
+    for dst_kw in (dict(block_size=8, hot_window=WINDOW),
+                   dict(block_size=8)):    # ring -> full-window too
+        src = _engine(cfg, params, block_size=8, hot_window=WINDOW,
+                      name="src")
+        dst = _engine(cfg, params, name="dst", **dst_kw)
+        src.submit(Request(id=0, prompt=prompt, max_new_tokens=24))
+        for _ in range(10):                # 24 -> 34: wrapped past 16
+            src.step()
+        assert int(np.asarray(
+            src.cache.lengths[src.requests[0].slot])) > WINDOW
+        migrate(src, dst, 0)
+        while any(s is not None for s in dst.slots):
+            dst.step()
+        assert dst.requests[0].outputs == expect
+
+
+# --------------------------------------------------- footprint + config
+def test_hot_bytes_per_slot_independent_of_max_len(setup):
+    """The capacity headline: hot-tier bytes/slot are constant across
+    max_len with a ring, and scale linearly without one."""
+    cfg, params = setup
+    ring_bytes, full_bytes = [], []
+    for smax in (64, 128, 256):
+        eng = _engine(cfg, params, max_len=smax, block_size=8,
+                      hot_window=WINDOW)
+        assert eng.cache.k.shape[3] == WINDOW
+        ring_bytes.append(eng.summary()["hot_bytes_per_slot"])
+        full = _engine(cfg, params, max_len=smax, block_size=8)
+        full_bytes.append(full.summary()["hot_bytes_per_slot"])
+    assert len(set(ring_bytes)) == 1            # Smax-independent
+    assert full_bytes[1] == 2 * full_bytes[0]   # legacy scales with Smax
+    assert full_bytes[2] == 4 * full_bytes[0]
+    assert ring_bytes[0] == full_bytes[0] * WINDOW // 64
+
+
+def test_ring_config_validation(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError):     # ring needs the paged backfill
+        _engine(cfg, params, hot_window=WINDOW)
+    with pytest.raises(ValueError):     # window larger than max_len
+        _engine(cfg, params, block_size=8, hot_window=128)
+    with pytest.raises(ValueError):     # cache-level guard too
+        tf.init_decode_cache(cfg, 2, 64, hot_window=WINDOW)

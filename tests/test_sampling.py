@@ -6,7 +6,6 @@ prefill + one donated dispatch."""
 
 import jax
 import numpy as np
-import pytest
 
 from repro.models import transformer as tf
 from repro.models.config import get_config, reduced

@@ -5,7 +5,6 @@ the engine's masked attention with the model's dense decode."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st  # hypothesis, or skip-stub fallback
 
 from repro.core.tiers import COLD, HOT, WARM

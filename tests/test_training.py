@@ -11,7 +11,6 @@ import pytest
 
 from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
 from repro.data import SyntheticLM
-from repro.models import transformer as tf
 from repro.models.config import get_config, reduced
 from repro.training import optim
 from repro.training.train_step import (TrainConfig, TrainState,
