@@ -1,0 +1,150 @@
+"""Chaos benchmark (PR 6): goodput under injected faults.
+
+One bursty request stream served by the heterogeneous 3-device cluster
+(1x HBM + 2x CXL) three ways: fault-free, with one hard device kill
+mid-decode, and under a mixed kill+stall+corruption trace. Every run is
+scored against the failure-free twin streams (per-request sampling keys
+make the canonical stream a pure function of the request), so "tokens
+lost" is measured token-by-token, not inferred from counters.
+
+The PR-6 trajectory point (``benchmarks/run.py --section chaos --out
+BENCH_pr6.json``): zero lost tokens in every scenario and 1-kill
+goodput >= 0.8x the fault-free run.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from benchmarks.cluster_bench import bursty_trace
+
+# Watchdog tuned to the modeled device step time (~ms): a silent device
+# is declared dead after 20 ms of sim time, so detection latency stays
+# small next to the makespan of a bursty 48-request trace.
+_HEARTBEAT_S = 0.02
+
+
+def _run_chaos(cfg, params, classes, scfg, trace, twin, chaos, slo_s,
+               chaos_seed=0):
+    from repro.cluster import (BalancerConfig, FaultInjector, KVBalancer,
+                               RecoveryConfig, build_cluster)
+    faults = (FaultInjector.from_spec(chaos, seed=chaos_seed)
+              if chaos else None)
+    recovery = RecoveryConfig(heartbeat_timeout_s=_HEARTBEAT_S)
+    bal = KVBalancer(BalancerConfig(rebalance_interval=4, hysteresis=1.2,
+                                    cooldown_ticks=8))
+    router = build_cluster(cfg, params, classes, scfg=scfg, balancer=bal,
+                           faults=faults, recovery=recovery)
+    for req in trace:
+        router.submit(req)
+    summary = router.run()
+    summary["slo_attainment"] = router.slo_attainment(slo_s)
+
+    # token-exact scoring vs the failure-free twin streams
+    ref_total = sum(len(v) for v in twin.values())
+    good = 0
+    for rid, ref in twin.items():
+        rs = router.finished.get(rid)
+        out = rs.outputs if rs is not None else []
+        good += sum(1 for a, b in zip(out, ref) if a == b)
+    summary["ref_tokens"] = ref_total
+    summary["good_tokens"] = good
+    summary["tokens_lost"] = ref_total - good
+    summary["goodput_tok_s"] = (good / summary["makespan_s"]
+                                if summary["makespan_s"] > 0 else 0.0)
+    return summary
+
+
+def bench_chaos(n_requests: int = 48, slo_s: float = 0.05,
+                seed: int = 3) -> dict:
+    """Fault-free vs 1-kill vs mixed-fault runs of the same trace.
+
+    Returns the machine-readable comparison: ``tokens_lost`` must be 0
+    in every scenario (twin exactness through recovery) and the 1-kill
+    goodput ratio must hold >= 0.8 (the PR-6 acceptance point)."""
+    import jax
+    from repro.models import transformer as tf
+    from repro.models.config import get_config, reduced
+    from repro.perfmodel.devices import CXL_CLASS, HBM_CLASS
+    from repro.serving import (PAMManagerConfig, Request, ServingConfig,
+                               ServingEngine)
+
+    cfg = reduced(get_config("pam-llama-7b"))
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    pam = PAMManagerConfig(max_tokens=64, hot_capacity=4, warm_capacity=8,
+                           compression=4, recency_window=2,
+                           schedule_interval=2)
+    scfg = ServingConfig(max_batch=4, max_len=64, pam=pam, block_size=8,
+                         temperature=1.0, sample_seed=13)
+    classes = [HBM_CLASS, CXL_CLASS, CXL_CLASS]
+    trace = lambda: bursty_trace(n_requests, cfg.vocab, seed=seed)
+
+    # canonical per-request streams: one plain engine, arrivals ignored
+    # (streams are batch/slot/phase-independent by construction)
+    eng = ServingEngine(cfg, params, scfg)
+    for r in trace():
+        eng.submit(Request(id=r.id, prompt=r.prompt,
+                           max_new_tokens=r.max_new_tokens))
+    eng.run()
+    twin = {rid: rs.outputs for rid, rs in eng.requests.items()}
+
+    chaos_1kill = "kill:cxl1@40"
+    chaos_mixed = "stall:cxl0@25x6, kill:cxl1@40, corrupt@30*1"
+    out = {
+        "config": {
+            "model": cfg.name, "n_requests": n_requests,
+            "prompt_len": 16, "max_new_tokens": 16, "burst": 16,
+            "block_size": 8, "max_len": 64,
+            "temperature": 1.0, "sample_seed": 13,
+            "devices": "hbm:1,cxl:2",
+            "heartbeat_timeout_s": _HEARTBEAT_S,
+            "chaos_1kill": chaos_1kill, "chaos_mixed": chaos_mixed,
+            "seed": seed,
+        },
+        "fault_free": _run_chaos(cfg, params, classes, scfg, trace(),
+                                 twin, None, slo_s),
+        "chaos_1kill": _run_chaos(cfg, params, classes, scfg, trace(),
+                                  twin, chaos_1kill, slo_s),
+        "chaos_mixed": _run_chaos(cfg, params, classes, scfg, trace(),
+                                  twin, chaos_mixed, slo_s),
+    }
+    base = out["fault_free"]["goodput_tok_s"]
+    out["fault_free_goodput_tok_s"] = base
+    out["kill_goodput_tok_s"] = out["chaos_1kill"]["goodput_tok_s"]
+    out["kill_goodput_ratio"] = (
+        out["kill_goodput_tok_s"] / max(base, 1e-9))
+    out["mixed_goodput_ratio"] = (
+        out["chaos_mixed"]["goodput_tok_s"] / max(base, 1e-9))
+    out["tokens_lost_total"] = (
+        out["fault_free"]["tokens_lost"]
+        + out["chaos_1kill"]["tokens_lost"]
+        + out["chaos_mixed"]["tokens_lost"])
+    ft = out["chaos_1kill"].get("fault_tolerance", {})
+    out["kill_recovery_latency_mean_s"] = ft.get(
+        "recovery_latency_mean_s", 0.0)
+    out["kill_recovery_latency_max_s"] = ft.get(
+        "recovery_latency_max_s", 0.0)
+    return out
+
+
+def chaos_rows(result: Optional[dict] = None) -> tuple[dict, list]:
+    """CSV rows for the harness (+ the computed result)."""
+    res = result if result is not None else bench_chaos()
+    rows = []
+    for name in ("fault_free", "chaos_1kill", "chaos_mixed"):
+        s = res[name]
+        ft = s.get("fault_tolerance", {})
+        rows.append((f"chaos/{name}", s["makespan_s"] * 1e6,
+                     f"goodput={s['goodput_tok_s']:.1f} "
+                     f"lost={s['tokens_lost']} "
+                     f"kills={ft.get('kills_detected', 0)} "
+                     f"replays={ft.get('replays', 0)} "
+                     f"drains={ft.get('drains', 0)} "
+                     f"retries={ft.get('transfer_retries', 0)} "
+                     f"slo={s['slo_attainment']:.3f}"))
+    rows.append(("chaos/kill_goodput_ratio", 0.0,
+                 f"{res['kill_goodput_ratio']:.3f}x "
+                 f"recovery_mean_s="
+                 f"{res['kill_recovery_latency_mean_s']:.4f} "
+                 f"lost_total={res['tokens_lost_total']}"))
+    return res, rows

@@ -18,7 +18,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
                     choices=["all", "figs", "kernels", "engine",
-                             "roofline", "cluster"])
+                             "roofline", "cluster", "chaos"])
     ap.add_argument("--dryrun-dir", default="experiments/dryrun")
     ap.add_argument("--out", default=None, metavar="BENCH.json",
                     help="write decode tokens/s + dispatch counts (and all "
@@ -56,6 +56,11 @@ def main(argv=None) -> None:
         from benchmarks.cluster_bench import cluster_rows
         cluster, crows = cluster_rows()
         rows += crows
+    chaos = None
+    if args.section in ("all", "chaos"):
+        from benchmarks.chaos_bench import chaos_rows
+        chaos, xrows = chaos_rows()
+        rows += xrows
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
@@ -77,6 +82,15 @@ def main(argv=None) -> None:
             payload["cluster_speedup_vs_best_single"] = \
                 cluster["cluster_speedup_vs_best_single"]
             payload["cluster_migrations"] = cluster["migrations"]
+        if chaos is not None:
+            # fault-tolerance trajectory point (PR 6): goodput under an
+            # injected device kill, token-exact vs the failure-free twin
+            payload["chaos"] = chaos
+            payload["chaos_tokens_lost"] = chaos["tokens_lost_total"]
+            payload["chaos_kill_goodput_ratio"] = \
+                chaos["kill_goodput_ratio"]
+            payload["chaos_kill_recovery_latency_mean_s"] = \
+                chaos["kill_recovery_latency_mean_s"]
         if wallclock is not None:
             payload["decode_wallclock"] = wallclock
             payload["decode_tok_s"] = wallclock["micro"]["decode_tok_s"]

@@ -10,14 +10,35 @@ Checks (engine section of ``benchmarks.run``):
   * hot-tier bytes/slot constant across max_len in {1k, 4k, 16k}
     (PR 5 ring invariant), and the ring within 10% of the full-window
     paged engine's tokens/s
+
+Checks (chaos section, ``BENCH_pr6.json``):
+  * zero tokens lost across every fault scenario (twin-exact recovery)
+  * 1-kill goodput >= 0.8x the fault-free run of the same trace
 """
 
 import json
 import sys
 
 
+def check_chaos(d: dict) -> None:
+    lost = d["chaos_tokens_lost"]
+    ratio = d["chaos_kill_goodput_ratio"]
+    assert lost == 0, (
+        f"{lost} tokens lost under injected faults — recovery is no "
+        f"longer twin-exact")
+    assert ratio >= 0.8, (
+        f"1-kill goodput ratio {ratio:.3f} below the 0.8 floor")
+    print(f"chaos bench OK: 0 tokens lost, 1-kill goodput "
+          f"{ratio:.3f}x fault-free (floor 0.8), recovery mean "
+          f"{d['chaos_kill_recovery_latency_mean_s'] * 1e3:.1f} ms sim")
+
+
 def main(path: str, floor: float = 100.0) -> None:
     d = json.load(open(path))
+    if "chaos_kill_goodput_ratio" in d:
+        check_chaos(d)
+        if "dispatches_per_step" not in d:
+            return                       # chaos-only bench file
     assert d["dispatches_per_step"] == 1.0, d["dispatches_per_step"]
     assert d["decode_tok_s"] > floor, (
         f"decode tok/s {d['decode_tok_s']:.0f} below floor {floor:.0f}")

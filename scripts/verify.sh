@@ -23,5 +23,8 @@ if [[ "${1:-}" != "--fast" ]]; then
 
     echo "== cluster smoke (2 device classes, migration exactness) =="
     python scripts/cluster_smoke.py
+
+    echo "== chaos smoke (1 injected kill, replay exactness) =="
+    python scripts/chaos_smoke.py
 fi
 echo "verify OK"

@@ -1,12 +1,19 @@
 """Multi-device PAM cluster (paper §4.3): heterogeneous-device router,
-inter-device KV migration, and online load balancing over N serving
-engines."""
+inter-device KV migration, online load balancing, and fault-tolerant
+serving (chaos injection, device-loss recovery, graceful degradation)
+over N serving engines."""
 
 from repro.cluster.balancer import BalancerConfig, KVBalancer
-from repro.cluster.migration import KVSnapshot, can_migrate, migrate
+from repro.cluster.faults import FaultEvent, FaultInjector, parse_chaos
+from repro.cluster.migration import (KVSnapshot, SnapshotCorruption,
+                                     can_migrate, migrate)
+from repro.cluster.recovery import RecoveryConfig, RecoveryManager
 from repro.cluster.router import (ClusterDevice, ClusterRouter,
                                   RouterConfig, TokenEvent, build_cluster)
 
-__all__ = ["BalancerConfig", "KVBalancer", "KVSnapshot", "can_migrate",
-           "migrate", "ClusterDevice", "ClusterRouter", "RouterConfig",
-           "TokenEvent", "build_cluster"]
+__all__ = ["BalancerConfig", "KVBalancer", "KVSnapshot",
+           "SnapshotCorruption", "can_migrate", "migrate",
+           "FaultEvent", "FaultInjector", "parse_chaos",
+           "RecoveryConfig", "RecoveryManager", "ClusterDevice",
+           "ClusterRouter", "RouterConfig", "TokenEvent",
+           "build_cluster"]

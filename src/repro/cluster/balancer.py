@@ -63,7 +63,14 @@ class KVBalancer:
     # ---------------------------------------------------------- rebalance
     def rebalance(self, devices: list, tick: int) -> list[dict[str, Any]]:
         """One balancing round over the router's devices. Returns the
-        migration records performed (possibly empty)."""
+        migration records performed (possibly empty). Devices that are
+        not healthy ("up" and alive) are excluded outright: a dead or
+        draining device is neither a migration source the balancer may
+        raid (its KV belongs to the recovery path) nor a target that
+        could strand a request."""
+        devices = [d for d in devices
+                   if getattr(d, "state", "up") == "up"
+                   and not getattr(d, "killed", False)]
         if len(devices) < 2:
             return []
         moves: list[dict[str, Any]] = []

@@ -23,22 +23,35 @@ Because the fused decode step's token choice depends only on the KV
 bytes, the importance EMA and the cache length — never on tier tags or
 the engine's global step parity (tier residency selects *which storage
 is read*, and Alg. 1 merging makes the output exact under any split) —
-a GREEDY (temperature=0) request's migrated token stream is IDENTICAL
-to an unmigrated twin's; ``tests/test_cluster.py`` pins that exactness
-across device classes. Sampled (temperature>0) requests migrate too,
-but continue under the target engine's own threaded PRNG —
-``can_migrate`` therefore requires matching sampling policy, not
-matching PRNG state.
+a migrated request's token stream is IDENTICAL to an unmigrated twin's;
+``tests/test_cluster.py`` pins that exactness across device classes.
+This now holds at ANY temperature: sampling keys derive per request
+inside the dispatch as ``fold_in(fold_in(seed, rid), position)``, so a
+request's draws carry no engine-local PRNG state — ``can_migrate``
+requires matching sampling policy (temperature, top_k, seed) and the
+stream continues bit-exactly on the target.
+
+Snapshots are CHECKSUMMED for the fault-tolerance layer
+(``repro.cluster.recovery``): ``export`` seals a crc32 over the KV
+bytes and host bookkeeping, ``verify`` re-derives it, and ``commit``
+refuses a sealed snapshot whose checksum no longer matches
+(``SnapshotCorruption``) — the detection point for corrupted transfers,
+which the recovery manager turns into bounded retry/backoff.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Optional
 
 import numpy as np
 
 from repro.serving.engine import Request, ServingEngine
+
+
+class SnapshotCorruption(RuntimeError):
+    """A sealed ``KVSnapshot`` failed its checksum at commit time."""
 
 
 @dataclasses.dataclass
@@ -61,6 +74,7 @@ class KVSnapshot:
     first_token_time: Optional[float]
     token_times: list[float]
     src: str                       # exporting device name
+    checksum: Optional[int] = None   # crc32 seal; None = unsealed
 
     @property
     def kv_bytes(self) -> int:
@@ -70,18 +84,62 @@ class KVSnapshot:
     @classmethod
     def export(cls, engine: ServingEngine, rid: int) -> "KVSnapshot":
         """Detach a running request from ``engine`` (frees its slot and
-        blocks) and wrap its state portably."""
+        blocks) and wrap its state portably, sealed with a checksum."""
         d = engine.export_request(rid)
-        return cls(request=d["request"], outputs=d["outputs"],
+        snap = cls(request=d["request"], outputs=d["outputs"],
                    length=d["length"], token=d["token"], k=d["k"],
                    v=d["v"], importance=d["importance"], tier=d["tier"],
                    last_hot=d["last_hot"],
                    first_token_time=d["first_token_time"],
                    token_times=d["token_times"], src=d["src"])
+        snap.seal()
+        return snap
+
+    # ------------------------------------------------------ wire integrity
+    def _digest(self) -> int:
+        """crc32 over everything exactness depends on: the KV bytes and
+        the host bookkeeping that seeds the resumed decode."""
+        head = repr((self.request.id, self.outputs, self.length,
+                     self.token)).encode()
+        crc = zlib.crc32(head)
+        crc = zlib.crc32(np.ascontiguousarray(self.k), crc)
+        crc = zlib.crc32(np.ascontiguousarray(self.v), crc)
+        if self.importance is not None:
+            crc = zlib.crc32(np.ascontiguousarray(self.importance), crc)
+        return crc & 0xFFFFFFFF
+
+    def seal(self) -> "KVSnapshot":
+        self.checksum = self._digest()
+        return self
+
+    def verify(self) -> bool:
+        """True iff unsealed or the seal still matches the content."""
+        return self.checksum is None or self.checksum == self._digest()
+
+    def clone(self) -> "KVSnapshot":
+        """Deep copy — the 'wire copy' a transfer puts on the link, so
+        in-flight corruption never touches the sender's pristine state
+        (which rollback and retries re-send from)."""
+        return dataclasses.replace(
+            self, outputs=list(self.outputs), k=self.k.copy(),
+            v=self.v.copy(),
+            importance=(None if self.importance is None
+                        else self.importance.copy()),
+            tier=None if self.tier is None else self.tier.copy(),
+            last_hot=(None if self.last_hot is None
+                      else self.last_hot.copy()),
+            token_times=list(self.token_times))
 
     def commit(self, engine: ServingEngine) -> None:
         """Install this snapshot on ``engine`` (one donated dispatch);
-        decode resumes at the next engine step."""
+        decode resumes at the next engine step. A sealed snapshot is
+        checksum-verified first — raising ``SnapshotCorruption`` BEFORE
+        any slot/block is claimed, so a corrupted transfer is always
+        retryable and never half-committed."""
+        if not self.verify():
+            raise SnapshotCorruption(
+                f"request {self.request.id}: snapshot checksum mismatch "
+                f"(corrupted in transfer from {self.src})")
         engine.import_request({
             "request": self.request, "outputs": self.outputs,
             "planned": len(self.outputs), "length": self.length,
@@ -108,11 +166,12 @@ def can_migrate(src: ServingEngine, dst: ServingEngine, rid: int) -> bool:
         return False
     if dst.pam_cfg != src.pam_cfg:
         return False
-    # sampling policy must match too; note the exactness guarantee is a
-    # GREEDY (temperature=0) property — sampled streams continue under
-    # the target's own threaded PRNG after a migration
-    if (dst.scfg.temperature, dst.scfg.top_k) != (src.scfg.temperature,
-                                                  src.scfg.top_k):
+    # sampling policy must match, seed included: per-request keys
+    # (fold_in(fold_in(seed, rid), position)) make sampled streams
+    # bit-exact across the move as long as the policy tuple agrees
+    if ((dst.scfg.temperature, dst.scfg.top_k, dst.scfg.sample_seed)
+            != (src.scfg.temperature, src.scfg.top_k,
+                src.scfg.sample_seed)):
         return False
     window = len(rs.request.prompt) + rs.request.max_new_tokens
     # reserve_queued=False: a rescue may compete with the target's own

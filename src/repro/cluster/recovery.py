@@ -1,0 +1,195 @@
+"""Device-loss recovery and graceful degradation for the serving
+cluster (the fault-tolerance layer ``ClusterRouter`` drives).
+
+Detection reuses the training-side machinery (``distributed.elastic``)
+adapted to serving sim-clocks:
+
+- ``HeartbeatLedger`` runs on device SIM-CLOCK SECONDS: every alive
+  device beats with its own clock each router tick; a killed device
+  goes silent and is declared dead once the fleet frontier moves
+  ``heartbeat_timeout_s`` past its last beat. When the hung device held
+  the only in-flight work the router charges the timeout as explicit
+  wait time — detection consumes simulated time, as on a real fleet.
+- ``StragglerMonitor`` sees step times NORMALIZED by pricing each
+  step's own stats through the device's unstalled latency model: a
+  legitimately 4x-slower CXL device records ~1.0, a fully loaded fast
+  device records ~1.0, a stalled device records exactly its slowdown
+  factor. Heterogeneity and load are never mistaken for failure, and
+  the monitor's leave-one-out median makes detection work even on a
+  2-survivor fleet.
+
+Recovery has two paths, both ending in a token stream BIT-IDENTICAL to
+a failure-free twin (per-request sampling keys make this hold at any
+temperature):
+
+- graceful drain (device alive but degraded): running requests export
+  as checksummed ``KVSnapshot``s and transfer to survivors with bounded
+  retry/backoff (``transfer``): dropped transfers time out, corrupted
+  ones fail the checksum — both re-send from the sender's pristine
+  copy. Terminal failure rolls back to the source.
+- replay (device dead, KV lost): the router re-submits the original
+  request from scratch on a survivor; because per-slot computation and
+  per-request sampling keys are batch/phase-independent, the stream
+  regenerates exactly, and the router's event dedup suppresses the
+  already-streamed prefix (verifying it token-by-token on the way).
+
+Degradation: admission overload never raises — a starving queue head
+triggers preemption-by-demotion (suspend the lowest-importance running
+request into a host-held snapshot, resume after a cooldown when
+capacity frees), and unserviceable submissions become rejection
+``TokenEvent``s.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.cluster.faults import FaultInjector
+from repro.cluster.migration import KVSnapshot
+from repro.distributed.elastic import HeartbeatLedger, StragglerMonitor
+from repro.serving.paged_kv import OutOfBlocks
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryConfig:
+    heartbeat_timeout_s: float = 0.25    # sim-silence before presumed dead
+    straggler_threshold: float = 1.75    # x peer-median slowdown
+    straggler_patience: int = 3          # consecutive flagged observations
+    transfer_retries: int = 3            # re-sends after a bad transfer
+    transfer_backoff_s: float = 1e-3     # first retry wait; doubles
+    link_bw: float = 64e9                # snapshot transfer bytes/s
+    preempt_after_ticks: int = 48        # queue-head starvation fuse
+    min_preempt_remaining: int = 2       # don't suspend nearly-done work
+    resume_cooldown_ticks: int = 8       # suspended -> resume attempt
+
+
+class RecoveryManager:
+    """Watchdog state + transfer/suspension machinery for the router.
+
+    The router calls ``observe_step`` after stepping a device,
+    ``heartbeat``/``advance`` every tick, and asks ``dead_indices`` /
+    ``straggler_indices`` for verdicts; recovery actions themselves
+    (drain, replay, preempt) live in the router, which owns placement.
+    """
+
+    def __init__(self, cfg: RecoveryConfig = RecoveryConfig(),
+                 injector: Optional[FaultInjector] = None):
+        self.cfg = cfg
+        self.injector = injector
+        self.monitor = StragglerMonitor(
+            threshold=cfg.straggler_threshold,
+            patience=cfg.straggler_patience)
+        self.ledger = HeartbeatLedger(dead_after=cfg.heartbeat_timeout_s)
+        # host-held suspended snapshots: (KVSnapshot, suspend tick)
+        self.suspended: list[tuple[KVSnapshot, int]] = []
+        self.stats: dict[str, float] = {
+            "kills_detected": 0, "drains": 0, "replays": 0,
+            "preemptions": 0, "resumes": 0, "transfer_retries": 0,
+            "transfers_dropped": 0, "corruptions_detected": 0,
+            "transfer_failures": 0, "abandoned": 0,
+        }
+        self.recovery_latencies: list[float] = []
+
+    # ------------------------------------------------------------ detection
+    def observe_step(self, idx: int, dev, step_time: float) -> None:
+        """Record one device step for straggler detection, normalized so
+        a healthy device reads ~1.0 regardless of class or load.
+
+        Preferred normalizer: price the step's OWN stats through the
+        device's unstalled latency model — then rel is exactly the
+        slowdown factor, and a fully loaded fast device never reads as
+        slow just because it carries more work than its idle peers.
+        Falls back to the load-blind class prior when the engine has no
+        decode stats yet."""
+        if step_time <= 0.0:
+            return
+        base = getattr(dev, "base_latency", None)
+        stats = getattr(dev.engine, "last_step_stats", None)
+        if base is not None and stats is not None:
+            expected = float(base(stats))
+            if expected <= 0.0:
+                return
+            rel = step_time / expected
+        else:
+            prior = getattr(dev, "step_prior", 0.0)
+            if prior <= 0.0:
+                return              # wall-clock runs: no prior, no watch
+            rel = step_time / prior
+        self.monitor.record(idx, rel)
+        self.monitor.observe_step()
+
+    def heartbeat(self, idx: int, clock: float) -> None:
+        self.ledger.beat(idx, clock)
+
+    def advance(self, clock: float) -> None:
+        self.ledger.advance(clock)
+
+    def dead_indices(self) -> list[int]:
+        return self.ledger.dead_hosts()
+
+    def straggler_indices(self) -> list[int]:
+        return self.monitor.stragglers()
+
+    def note_recovery(self, latency_s: float) -> None:
+        self.recovery_latencies.append(max(latency_s, 0.0))
+
+    # ------------------------------------------------------------ transfers
+    def transfer(self, snap: KVSnapshot, dst_engine,
+                 charge: Callable[[float], None]) -> bool:
+        """Deliver ``snap`` to ``dst_engine`` over the faulty link.
+
+        Each attempt puts a fresh wire copy of the sender's pristine
+        snapshot on the link; the injector may drop it (receiver times
+        out) or corrupt it (checksum mismatch at commit). Failed
+        attempts charge exponential backoff to the receiver's clock via
+        ``charge`` and re-send, up to ``transfer_retries`` times.
+        Returns True once committed; False on terminal failure (the
+        caller rolls back or suspends — ``snap`` itself is untouched).
+        Capacity errors (no slot / ``OutOfBlocks``) are not retried:
+        the link is fine, the destination is full.
+        """
+        charge(snap.kv_bytes / self.cfg.link_bw)
+        delay = self.cfg.transfer_backoff_s
+        for attempt in range(self.cfg.transfer_retries + 1):
+            if attempt:
+                self.stats["transfer_retries"] += 1
+                charge(delay + snap.kv_bytes / self.cfg.link_bw)
+                delay *= 2
+            verdict = (self.injector.transfer_verdict()
+                       if self.injector is not None else "ok")
+            if verdict == "drop":
+                self.stats["transfers_dropped"] += 1
+                continue
+            wire = snap.clone()
+            if verdict == "corrupt":
+                self.injector.corrupt(wire)
+            if not wire.verify():
+                self.stats["corruptions_detected"] += 1
+                continue
+            try:
+                wire.commit(dst_engine)
+                return True
+            except (OutOfBlocks, ValueError):
+                break
+        self.stats["transfer_failures"] += 1
+        return False
+
+    # ----------------------------------------------------------- suspension
+    def suspend(self, engine, rid: int, tick: int) -> KVSnapshot:
+        """Preemption-by-demotion: detach ``rid`` into a host-held
+        checksummed snapshot and queue it for a cooled-down resume."""
+        snap = KVSnapshot.export(engine, rid)
+        self.suspended.append((snap, tick))
+        self.stats["preemptions"] += 1
+        return snap
+
+    def resumable(self, tick: int) -> list[KVSnapshot]:
+        """Suspended snapshots whose cooldown has elapsed (in suspend
+        order; the router pops the ones it successfully resumes)."""
+        return [s for s, t in self.suspended
+                if tick - t >= self.cfg.resume_cooldown_ticks]
+
+    def drop_suspended(self, snap: KVSnapshot) -> None:
+        self.suspended = [(s, t) for s, t in self.suspended
+                          if s is not snap]

@@ -16,20 +16,44 @@ take more steps per simulated second exactly as real hardware would.
 Completed tokens stream out through ``drain_events`` as they are
 emitted, and an attached ``KVBalancer`` periodically migrates running
 requests off overloaded devices (``repro.cluster.migration``).
+
+Fault tolerance (``repro.cluster.{faults,recovery}``): with a
+``RecoveryManager`` attached the router runs a watchdog every tick —
+alive devices heartbeat the sim-clock frontier into a
+``HeartbeatLedger``; a killed device goes silent and is declared dead
+after ``heartbeat_timeout_s``, upon which its lost in-flight requests
+REPLAY from scratch on survivors (exact: per-request sampling keys +
+router-side event dedup against the already-streamed prefix). Stalled
+devices are flagged by a prior-normalized ``StragglerMonitor`` and
+DRAINED gracefully: running requests move to survivors as checksummed
+``KVSnapshot`` transfers with bounded retry. Overload degrades instead
+of failing: unserviceable submissions emit rejection ``TokenEvent``s,
+and a starving queue head preempts the fleet's lowest-importance
+running request into a host-held snapshot (resumed after a cooldown).
+
+The router's recovery decisions use only information a real control
+plane has: its own submit-time request registry (``_requests``), its
+streamed-token history (``_history``) and the detection verdicts.
+Engine internals of a dead device are read only to enumerate which
+requests were placed there (placement the router itself performed).
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Iterable, Optional
+from typing import Any, Callable, Iterable, Optional
 
 import numpy as np
 
 from repro.cluster.balancer import BalancerConfig, KVBalancer
+from repro.cluster.faults import TRANSFER_KINDS, FaultEvent, FaultInjector
+from repro.cluster.migration import KVSnapshot
+from repro.cluster.recovery import RecoveryConfig, RecoveryManager
 from repro.perfmodel.devices import (DeviceClass, make_device_latency_model,
                                      step_time_prior)
-from repro.serving.engine import DONE, Request, ServingEngine, ServingConfig
+from repro.serving.engine import (DONE, RUNNING, Request, ServingConfig,
+                                  ServingEngine)
 
 
 @dataclasses.dataclass
@@ -41,6 +65,9 @@ class TokenEvent:
     index: int                   # position in the request's output
     device: str
     done: bool                   # True on the request's final token
+    rejected: bool = False       # graceful-degradation marker: the
+    # stream ends here without a token (token == -1) because no device
+    # can serve the request — the cluster keeps serving everyone else
 
 
 @dataclasses.dataclass
@@ -53,6 +80,16 @@ class ClusterDevice:
     prefill_tok_prior: float = 0.0   # modeled seconds per prefill token
     tokens_emitted: int = 0
     steps: int = 0
+    # fault-tolerance state. ``state`` is the ROUTER'S BELIEF ("up",
+    # "dead", "drained"); ``killed`` is sim ground truth the fault
+    # injector sets — the router never reads it for decisions, it only
+    # makes a killed engine unsteppable/silent so the watchdog has
+    # something real to detect.
+    state: str = "up"
+    killed: bool = False
+    stall_factor: float = 1.0
+    base_latency: Optional[Callable[[dict], float]] = None
+    hog_rid: Optional[int] = None    # exhaust-fault pool hog
 
     def has_work(self) -> bool:
         eng = self.engine
@@ -70,7 +107,9 @@ class ClusterRouter:
 
     def __init__(self, devices: list[ClusterDevice],
                  balancer: Optional[KVBalancer] = None,
-                 rcfg: RouterConfig = RouterConfig()):
+                 rcfg: RouterConfig = RouterConfig(),
+                 recovery: Optional[RecoveryManager] = None,
+                 faults: Optional[FaultInjector] = None):
         if not devices:
             raise ValueError("cluster needs at least one device")
         names = [d.name for d in devices]
@@ -79,48 +118,101 @@ class ClusterRouter:
         self.devices = devices
         self.balancer = balancer
         self.rcfg = rcfg
+        self.recovery = recovery
+        self.faults = faults
         self.arrivals: collections.deque[Request] = collections.deque()
         self.queue: collections.deque[Request] = collections.deque()
         self.ticks = 0
         self.finished: dict[int, Any] = {}       # rid -> RequestState
+        self.rejected = 0
         self._events: list[TokenEvent] = []
         self._seen_tokens: dict[int, int] = {}   # rid -> emitted count
         self._shape: dict[int, tuple[int, int]] = {}  # rid -> (prompt, gen)
+        self._requests: dict[int, Request] = {}  # submit-time registry
+        self._history: dict[int, list[int]] = {}  # rid -> streamed tokens
+        self._replaying: set[int] = set()        # rids re-serving a prefix
+        self._kill_clock: dict[str, float] = {}  # device -> sim kill time
+        self._head_since: Optional[tuple[int, int]] = None  # (rid, tick)
+        self._wait_clock = 0.0           # router-side watchdog clock: the
+        # control plane's own notion of time, which keeps advancing even
+        # when EVERY device is silent (otherwise a whole-fleet kill
+        # would freeze the frontier and silence could never time out)
+
+    # -------------------------------------------------------- device views
+    def _steppable(self) -> list[ClusterDevice]:
+        """Devices the router can actually advance: alive (a killed
+        engine never answers a step RPC) and holding work. Drained
+        devices still finish their residual batch — they just get no
+        new dispatches."""
+        return [d for d in self.devices
+                if not d.killed and d.state != "dead" and d.has_work()]
+
+    def _alive(self) -> list[ClusterDevice]:
+        return [d for d in self.devices
+                if not d.killed and d.state != "dead"]
+
+    def _up(self) -> list[ClusterDevice]:
+        """Dispatch targets: devices the router believes healthy."""
+        return [d for d in self.devices if d.state == "up"]
+
+    def _failed_pending(self) -> list[ClusterDevice]:
+        """Killed-but-undetected devices still holding work — the
+        watchdog must burn timeout time to discover them."""
+        return [d for d in self.devices
+                if d.killed and d.state == "up" and d.has_work()]
 
     # ------------------------------------------------------------- intake
+    def _reject(self, req: Request) -> None:
+        """Graceful degradation: end the request's stream with a
+        rejection event (done=True, no token) instead of raising —
+        one lost request must never kill the whole stream."""
+        self.rejected += 1
+        self._events.append(TokenEvent(
+            time=max(self.now(), req.arrival), request_id=req.id,
+            token=-1, index=self._seen_tokens.get(req.id, 0), device="",
+            done=True, rejected=True))
+
     def submit(self, req: Request) -> None:
         """Add a request to the shared stream (``req.arrival`` is its
-        simulated arrival time; submissions must be time-ordered)."""
-        window = len(req.prompt) + req.max_new_tokens
-        if not any(d.engine.serviceable(window) for d in self.devices):
-            raise ValueError(f"request {req.id}: window {window} fits no "
-                             f"device in the cluster")
+        simulated arrival time; submissions must be time-ordered).
+        A request no healthy device can ever serve is REJECTED (a
+        ``rejected`` ``TokenEvent``), not raised."""
         if self.arrivals and req.arrival < self.arrivals[-1].arrival:
             raise ValueError("submit arrivals in nondecreasing time order")
-        self.arrivals.append(req)
+        window = len(req.prompt) + req.max_new_tokens
+        self._requests[req.id] = req
         self._shape[req.id] = (len(req.prompt), req.max_new_tokens)
+        if not any(d.engine.serviceable(window) for d in self._up()):
+            self._reject(req)
+            return
+        self.arrivals.append(req)
 
     def submit_to(self, req: Request, device_name: str) -> None:
         """Pin a request to one device, bypassing cost-based dispatch
         (tests/demos use this to pre-load a device; real traffic should
         go through ``submit``). Registers the router bookkeeping so
-        completions, events and migrations track the request normally."""
+        completions, events and migrations track the request normally.
+        An unserviceable window rejects (event) instead of raising."""
         dev = self._by_name(device_name)
         window = len(req.prompt) + req.max_new_tokens
-        if not dev.engine.serviceable(window):
-            raise ValueError(f"request {req.id}: window {window} does not "
-                             f"fit device {device_name}")
+        self._requests[req.id] = req
         self._shape[req.id] = (len(req.prompt), req.max_new_tokens)
+        if dev.state != "up" or not dev.engine.serviceable(window):
+            self._reject(req)
+            return
         dev.engine.submit(req)
 
     # ------------------------------------------------------------ signals
     def now(self) -> float:
-        """Cluster frontier: the slowest busy device's clock (all-idle:
-        the max clock — nothing is in flight before it)."""
-        busy = [d.engine.clock for d in self.devices if d.has_work()]
+        """Cluster frontier: the slowest steppable device's clock
+        (none in flight: the max healthy clock — nothing is in flight
+        before it)."""
+        busy = [d.engine.clock for d in self._steppable()]
         if busy:
             return min(busy)
-        return max(d.engine.clock for d in self.devices)
+        pool = [d.engine.clock for d in self._up()
+                if not d.killed] or [d.engine.clock for d in self.devices]
+        return max(pool)
 
     def admission_cost(self, dev: ClusterDevice, prompt_len: int,
                        gen_len: int, pending: int = 0) -> float:
@@ -148,20 +240,24 @@ class ClusterRouter:
 
     def _dispatch(self) -> None:
         """Cost-based late binding. Each queued request is priced on
-        every serviceable device — including busy ones it would have to
-        WAIT for — and bound to the cheapest. If the winner cannot admit
-        it right now the request stays in the shared queue (deferred:
-        queueing for a fast device beats sinking a burst onto a slow
-        one), with a virtual-depth mark so the rest of the round prices
-        that device as one deeper."""
+        every serviceable healthy device — including busy ones it would
+        have to WAIT for — and bound to the cheapest. If the winner
+        cannot admit it right now the request stays in the shared queue
+        (deferred: queueing for a fast device beats sinking a burst onto
+        a slow one), with a virtual-depth mark so the rest of the round
+        prices that device as one deeper. A request whose window no
+        healthy device can serve anymore (device loss) is rejected."""
         still: collections.deque[Request] = collections.deque()
         virtual = {d.name: 0 for d in self.devices}
         while self.queue:
             req = self.queue.popleft()
             prompt_len, gen_len = self._shape[req.id]
             window = prompt_len + gen_len
-            cands = [d for d in self.devices
+            cands = [d for d in self._up()
                      if d.engine.serviceable(window)]
+            if not cands:
+                self._reject(req)
+                continue
             best = min(cands, key=lambda d: self.admission_cost(
                 d, prompt_len, gen_len, pending=virtual[d.name]))
             # can_accept nets out the device's own waiting queue, so one
@@ -179,11 +275,24 @@ class ClusterRouter:
     # ------------------------------------------------------------ stepping
     def _collect(self, dev: ClusterDevice) -> None:
         """Diff the device's request states into stream events and pick
-        up completions."""
+        up completions. Replayed requests first REGENERATE their
+        already-streamed prefix: those tokens are verified against the
+        router's history and suppressed (never re-emitted), so a
+        client's stream stays gapless and duplicate-free across a
+        device loss."""
         eng = dev.engine
         done_rids = []
         for rid, rs in eng.requests.items():
             seen = self._seen_tokens.get(rid, 0)
+            if rid in self._replaying:
+                hist = self._history.get(rid, [])
+                n = min(seen, len(rs.outputs))
+                if rs.outputs[:n] != hist[:n]:
+                    raise RuntimeError(
+                        f"replay diverged for request {rid}: regenerated "
+                        f"prefix does not match the streamed history")
+                if len(rs.outputs) >= seen:
+                    self._replaying.discard(rid)
             for i in range(seen, len(rs.outputs)):
                 t = (rs.token_times[i] if i < len(rs.token_times)
                      else eng.clock)
@@ -191,39 +300,270 @@ class ClusterRouter:
                     time=t, request_id=rid, token=rs.outputs[i], index=i,
                     device=dev.name,
                     done=(rs.status == DONE and i == len(rs.outputs) - 1)))
+                self._history.setdefault(rid, []).append(rs.outputs[i])
                 dev.tokens_emitted += 1
-            self._seen_tokens[rid] = len(rs.outputs)
+            self._seen_tokens[rid] = max(seen, len(rs.outputs))
             if rs.status == DONE:
                 done_rids.append(rid)
         for rid in done_rids:
             self.finished[rid] = eng.requests.pop(rid)
 
+    # ---------------------------------------------------------- fault path
+    def _apply_fault(self, ev: FaultEvent) -> None:
+        """Apply one injected fault (``FaultInjector`` ground truth)."""
+        if ev.kind in TRANSFER_KINDS:
+            return                       # armed inside the injector
+        dev = self._by_name(ev.device)
+        eng = dev.engine
+        if ev.kind == "kill":
+            dev.killed = True
+            # the injection moment is fleet sim time, not the victim's
+            # own clock (an idle victim's clock lags the frontier, which
+            # would overstate the measured recovery latency)
+            self._kill_clock[dev.name] = max(
+                (d.engine.clock for d in self.devices), default=eng.clock)
+        elif ev.kind == "stall":
+            dev.stall_factor = ev.factor
+            if dev.base_latency is None:
+                dev.base_latency = eng.latency_model
+            if dev.base_latency is not None:
+                base, f = dev.base_latency, ev.factor
+                eng.latency_model = lambda s: f * float(base(s))
+        elif ev.kind == "unstall":
+            dev.stall_factor = 1.0
+            if dev.base_latency is not None:
+                eng.latency_model = dev.base_latency
+        elif ev.kind == "exhaust":
+            alloc = eng.allocator
+            if (alloc is not None and dev.hog_rid is None
+                    and alloc.free_blocks > 0):
+                dev.hog_rid = (1 << 40) + self.devices.index(dev)
+                alloc.allocate(dev.hog_rid,
+                               alloc.free_blocks * alloc.block_size)
+        elif ev.kind == "release":
+            if eng.allocator is not None and dev.hog_rid is not None:
+                eng.allocator.free(dev.hog_rid)
+                dev.hog_rid = None
+
+    def _charge(self, dev: ClusterDevice, seconds: float) -> None:
+        dev.engine.clock += seconds
+
+    def _rescue_target(self, snap: KVSnapshot,
+                       exclude: str) -> Optional[ClusterDevice]:
+        window = (len(snap.request.prompt)
+                  + snap.request.max_new_tokens)
+        cands = [d for d in self._up()
+                 if d.name != exclude and d.engine.serviceable(window)
+                 and d.engine.can_accept(window, reserve_queued=False)]
+        if not cands:
+            return None
+        plen, glen = self._shape.get(snap.request.id,
+                                     (len(snap.request.prompt),
+                                      snap.request.max_new_tokens))
+        remaining = glen - len(snap.outputs)
+        return min(cands, key=lambda d: self.admission_cost(
+            d, 0, max(remaining, 1)))
+
+    def _declare_dead(self, dev: ClusterDevice) -> None:
+        """Watchdog verdict: the device is gone and its KV with it.
+        Every request the router had placed there goes back to the
+        shared queue for REPLAY on a survivor — exact, because
+        recomputation is deterministic per (seed, rid, position) and
+        ``_collect`` dedupes the regenerated prefix."""
+        rec = self.recovery
+        dev.state = "dead"
+        rec.stats["kills_detected"] += 1
+        t_kill = self._kill_clock.get(dev.name, dev.engine.clock)
+        alive = self._alive()
+        t_now = (max(d.engine.clock for d in alive) if alive
+                 else dev.engine.clock)
+        rec.note_recovery(max(t_now - t_kill, 0.0))
+        eng = dev.engine
+        for rid in list(eng.requests):
+            rs = eng.requests.pop(rid)
+            if rs.status == DONE:        # already collected upstream
+                self.finished.setdefault(rid, rs)
+                continue
+            req = self._requests.get(rid, rs.request)
+            if self._seen_tokens.get(rid, 0):
+                self._replaying.add(rid)
+            if rs.status == RUNNING:
+                rec.stats["replays"] += 1
+            self.queue.append(req)
+        # the dead engine's host bookkeeping is gone with it
+        eng.waiting.clear()
+        eng.slots = [None] * len(eng.slots)
+
+    def _drain(self, dev: ClusterDevice) -> None:
+        """Graceful drain of a flagged (alive but degraded) device:
+        queued work returns to the shared queue; running requests export
+        as checksummed snapshots and transfer to survivors (bounded
+        retry on drop/corruption, rollback here on terminal failure —
+        this device is slow, not dead). No new work is dispatched to a
+        drained device, but it finishes whatever could not move."""
+        rec = self.recovery
+        dev.state = "drained"
+        eng = dev.engine
+        for rid in list(eng.waiting):
+            eng.requests.pop(rid, None)
+            self.queue.append(self._requests[rid])
+        eng.waiting.clear()
+        running = [rid for rid in eng.slots if rid is not None]
+        for rid in running:
+            snap = KVSnapshot.export(eng, rid)
+            dst = self._rescue_target(snap, exclude=dev.name)
+            if dst is None:
+                # no capacity anywhere right now: hold it host-side and
+                # resume via the suspension path when capacity frees
+                rec.suspended.append((snap, self.ticks))
+                continue
+            if not any(s is not None for s in dst.engine.slots):
+                dst.engine.clock = max(dst.engine.clock, eng.clock)
+            if rec.transfer(snap, dst.engine,
+                            lambda s, d=dst: self._charge(d, s)):
+                rec.stats["drains"] += 1
+            else:
+                snap.commit(eng)         # pristine copy back home
+        self._head_since = None
+
+    def _watchdog(self) -> None:
+        """Heartbeats + verdicts, once per tick. Alive devices beat the
+        fleet frontier (a live host answers its control plane no matter
+        how stale its own work clock is); a killed device's beat
+        freezes, and once the frontier moves ``heartbeat_timeout_s``
+        past it the device is declared dead."""
+        rec = self.recovery
+        alive = self._alive()
+        pool = alive or self.devices
+        t = max(max(d.engine.clock for d in pool), self._wait_clock)
+        for i, d in enumerate(self.devices):
+            if not d.killed and d.state != "dead":
+                rec.heartbeat(i, t)
+        rec.advance(t)
+        for i in rec.dead_indices():
+            d = self.devices[i]
+            if d.killed and d.state == "up":
+                self._declare_dead(d)
+        for i in rec.straggler_indices():
+            d = self.devices[i]
+            if d.state == "up" and not d.killed:
+                self._drain(d)
+
+    # ------------------------------------------------- degradation policies
+    def _maybe_preempt(self) -> None:
+        """Preemption-by-demotion: when the shared queue's head has
+        starved for ``preempt_after_ticks`` (pool exhaustion, capacity
+        loss), suspend the fleet's lowest-importance running request —
+        the cheapest accuracy stake, Alg. 2's rule at cluster scope —
+        into a host-held snapshot, freeing its slot and blocks."""
+        rec = self.recovery
+        if not self.queue:
+            self._head_since = None
+            return
+        head = self.queue[0]
+        if self._head_since is None or self._head_since[0] != head.id:
+            self._head_since = (head.id, self.ticks)
+            return
+        if (self.ticks - self._head_since[1]
+                < rec.cfg.preempt_after_ticks):
+            return
+        plen, glen = self._shape[head.id]
+        window = plen + glen
+        best = None
+        for d in self._up():
+            if d.killed or not d.engine.serviceable(window):
+                continue
+            for rid, mass in d.engine.slot_importance_mass().items():
+                rs = d.engine.requests[rid]
+                left = rs.request.max_new_tokens - len(rs.outputs)
+                if left < rec.cfg.min_preempt_remaining:
+                    continue
+                if best is None or mass < best[0]:
+                    best = (mass, d, rid)
+        if best is None:
+            return
+        _, dev, rid = best
+        rec.suspend(dev.engine, rid, self.ticks)
+        self._head_since = (head.id, self.ticks)   # re-arm the fuse
+
+    def _maybe_resume(self) -> None:
+        """Resume cooled-down suspended snapshots wherever capacity has
+        freed (checksummed transfer, retry on faults). A snapshot whose
+        window no healthy device can ever host again falls back to
+        replay — and if even replay is unserviceable, the stream ends
+        with a rejection event rather than hanging the cluster."""
+        rec = self.recovery
+        for snap in rec.resumable(self.ticks):
+            req = snap.request
+            window = len(req.prompt) + req.max_new_tokens
+            dst = self._rescue_target(snap, exclude="")
+            if dst is not None:
+                if not any(s is not None for s in dst.engine.slots):
+                    dst.engine.clock = max(dst.engine.clock, self.now())
+                if rec.transfer(snap, dst.engine,
+                                lambda s, d=dst: self._charge(d, s)):
+                    rec.drop_suspended(snap)
+                    rec.stats["resumes"] += 1
+                continue                 # transfer failed: retry later
+            if any(d.engine.serviceable(window) for d in self._up()):
+                continue                 # capacity will free; wait
+            rec.drop_suspended(snap)
+            if self._seen_tokens.get(req.id, 0):
+                self._replaying.add(req.id)
+            rec.stats["abandoned"] += 1
+            self._reject(req)
+
+    # ---------------------------------------------------------------- tick
     def tick(self) -> bool:
         """One router iteration. Returns False when the stream is fully
-        served (no arrivals, no queue, no running work)."""
+        served (no arrivals, no queue, no running or suspended work)."""
+        if self.faults is not None:
+            for ev in self.faults.due(self.ticks):
+                self._apply_fault(ev)
         # idle fleet + future arrivals: jump the fleet to the next event
-        if (self.arrivals and not self.queue
-                and not any(d.has_work() for d in self.devices)):
+        if (self.arrivals and not self.queue and not self._steppable()
+                and not self._failed_pending()
+                and not (self.recovery and self.recovery.suspended)):
             t = self.arrivals[0].arrival
-            for d in self.devices:
+            for d in self._alive():
                 d.engine.clock = max(d.engine.clock, t)
         self._release_arrivals()
         self._dispatch()
-        busy = [d for d in self.devices if d.has_work()]
-        if not busy:
-            return bool(self.arrivals or self.queue)
-        # event-driven: advance the furthest-behind busy device
-        dev = min(busy, key=lambda d: d.engine.clock)
-        dev.engine.step()
-        dev.steps += 1
-        self._collect(dev)
+        if self.recovery is not None:
+            self._maybe_resume()
+            self._maybe_preempt()
+        steppable = self._steppable()
+        if steppable:
+            # event-driven: advance the furthest-behind steppable device
+            dev = min(steppable, key=lambda d: d.engine.clock)
+            dev.engine.step()
+            dev.steps += 1
+            if self.recovery is not None:
+                self.recovery.observe_step(self.devices.index(dev), dev,
+                                           dev.engine.last_step_time)
+            self._collect(dev)
+        elif self._failed_pending() and self.recovery is not None:
+            # nothing steppable but a silent device still holds work:
+            # the watchdog WAITS — detection costs real simulated time
+            alive = self._alive()
+            pool = alive or self.devices
+            t = (max(max(d.engine.clock for d in pool), self._wait_clock)
+                 + self.recovery.cfg.heartbeat_timeout_s)
+            self._wait_clock = t
+            for d in alive:
+                d.engine.clock = max(d.engine.clock, t)
         self.ticks += 1
+        if self.recovery is not None:
+            self._watchdog()
         if (self.balancer is not None
                 and self.ticks % self.balancer.cfg.rebalance_interval == 0):
             # migrated requests carry their outputs with them; pending
             # tokens surface at the destination's next _collect
-            self.balancer.rebalance(self.devices, self.ticks)
-        return True
+            self.balancer.rebalance(
+                [d for d in self._up() if not d.killed], self.ticks)
+        return bool(self.arrivals or self.queue or self._steppable()
+                    or self._failed_pending()
+                    or (self.recovery and self.recovery.suspended))
 
     def run(self, max_ticks: Optional[int] = None) -> dict[str, Any]:
         limit = max_ticks if max_ticks is not None else self.rcfg.max_ticks
@@ -252,6 +592,7 @@ class ClusterRouter:
         for d in self.devices:
             per_device[d.name] = {
                 "class": d.cls.name,
+                "state": d.state,
                 "steps": d.steps,
                 "tokens_emitted": d.tokens_emitted,
                 "busy_time_s": d.engine.busy_time,
@@ -264,6 +605,7 @@ class ClusterRouter:
             }
         out = {
             "finished": len(self.finished),
+            "rejected": self.rejected,
             "total_tokens": total_tokens,
             "makespan_s": makespan,
             "throughput_tok_s": (total_tokens / makespan
@@ -275,6 +617,15 @@ class ClusterRouter:
             "ticks": self.ticks,
             "devices": per_device,
         }
+        if self.recovery is not None:
+            lat = self.recovery.recovery_latencies
+            out["fault_tolerance"] = dict(
+                self.recovery.stats,
+                suspended_now=len(self.recovery.suspended),
+                recovery_latency_mean_s=(float(np.mean(lat)) if lat
+                                         else 0.0),
+                recovery_latency_max_s=(float(np.max(lat)) if lat
+                                        else 0.0))
         return out
 
     def slo_attainment(self, slo_s: float) -> float:
@@ -296,6 +647,8 @@ def build_cluster(cfg, params, device_classes: Iterable[DeviceClass], *,
                   balancer: Optional[KVBalancer] = None,
                   bcfg: Optional[BalancerConfig] = None,
                   rcfg: RouterConfig = RouterConfig(),
+                  faults: Optional[FaultInjector] = None,
+                  recovery=None,
                   wallclock: bool = False) -> ClusterRouter:
     """Build a heterogeneous cluster serving one model.
 
@@ -303,7 +656,12 @@ def build_cluster(cfg, params, device_classes: Iterable[DeviceClass], *,
     ``max_batch``/``pool_blocks`` from its own capacity profile and gets
     its own perfmodel latency model (``wallclock=True`` disables modeled
     timing — used by wall-clock benches). Engines share ``params`` (one
-    replica per device, as on real fleets)."""
+    replica per device, as on real fleets).
+
+    ``faults`` attaches a chaos trace; ``recovery`` a
+    ``RecoveryManager`` or ``RecoveryConfig`` (a bare injector implies
+    a default recovery manager — injected faults without a watchdog
+    would hang the stream)."""
     from repro.perfmodel.model import PAM_LLAMA_7B
     model_desc = model_desc or PAM_LLAMA_7B
     devices: list[ClusterDevice] = []
@@ -325,10 +683,16 @@ def build_cluster(cfg, params, device_classes: Iterable[DeviceClass], *,
                if lat is not None else 0.0)
         devices.append(ClusterDevice(name=name, cls=dc, engine=eng,
                                      step_prior=prior,
-                                     prefill_tok_prior=ppt))
+                                     prefill_tok_prior=ppt,
+                                     base_latency=lat))
     if balancer is None and bcfg is not None:
         balancer = KVBalancer(bcfg)
     if balancer is not None and not wallclock and not balancer.token_bytes:
         # charge migrations for the MODELED per-token KV volume
         balancer.token_bytes = model_desc.kv_bytes_per_token()
-    return ClusterRouter(devices, balancer=balancer, rcfg=rcfg)
+    if isinstance(recovery, RecoveryConfig):
+        recovery = RecoveryManager(recovery, injector=faults)
+    elif recovery is None and faults is not None:
+        recovery = RecoveryManager(injector=faults)
+    return ClusterRouter(devices, balancer=balancer, rcfg=rcfg,
+                         recovery=recovery, faults=faults)

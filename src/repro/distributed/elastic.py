@@ -19,6 +19,13 @@ The recovery loop is: detect (1 or 3) -> checkpoint (if possible) ->
 ``plan_recovery`` -> rebuild mesh -> ``restore_pytree(..., shardings)`` ->
 resume. The end-to-end path is exercised in tests/test_distributed.py with
 fake CPU devices.
+
+The SERVING cluster reuses 1 and 3 for its fault-tolerance watchdog
+(``repro.cluster.recovery``): step times are normalized to slowdown
+factors via each device's own latency model before they enter the
+monitor (so a legitimately 4x-slower CXL device is not a straggler,
+but a stalled one is), and the ledger is driven with device sim-clock
+seconds instead of step counts.
 """
 
 from __future__ import annotations
@@ -44,33 +51,57 @@ class StragglerMonitor:
         dq = self._times.setdefault(host, deque(maxlen=self.window))
         dq.append(step_time)
 
-    def stragglers(self) -> list[int]:
-        """Hosts currently flagged. Uses cross-host median per step."""
-        if len(self._times) < 2:
-            return []
+    def observe_step(self) -> None:
+        """Close one observation step: compare every host's latest step
+        time against the leave-one-out median of its PEERS and update
+        strike counters (the ONLY mutating evaluation — call exactly
+        once per step). Excluding the host from its own reference
+        matters on small fleets: with 2 hosts a shared median sits
+        halfway up the straggler's slowdown, hiding anything below
+        ~2x threshold. ``stragglers()`` is a pure query so callers may
+        poll it freely; historically the query itself bumped strikes,
+        so polling twice per step double-counted and halved the
+        effective patience."""
         latest = {h: dq[-1] for h, dq in self._times.items() if dq}
-        med = float(np.median(list(latest.values())))
-        out = []
+        if len(latest) < 2:
+            return
         for h, t in latest.items():
+            peers = [v for g, v in latest.items() if g != h]
+            med = float(np.median(peers))
             if t > self.threshold * max(med, 1e-9):
                 self._strikes[h] = self._strikes.get(h, 0) + 1
             else:
                 self._strikes[h] = 0
-            if self._strikes.get(h, 0) >= self.patience:
-                out.append(h)
-        return out
+
+    def stragglers(self) -> list[int]:
+        """Hosts currently flagged (pure — safe to poll repeatedly).
+        A host is a straggler after ``patience`` consecutive
+        ``observe_step`` evaluations above ``threshold x`` the
+        cross-host median."""
+        return [h for h, s in self._strikes.items() if s >= self.patience]
 
 
 @dataclasses.dataclass
 class HeartbeatLedger:
-    dead_after: int = 5
+    """Liveness ledger. ``dead_after`` is in whatever units ``beat`` is
+    driven with — training drives it with integer step counts, the
+    serving cluster watchdog with device sim-clock seconds
+    (``repro.cluster.recovery``); the silence arithmetic is identical.
+    A presumed-dead host that reports again leaves ``dead_hosts()`` on
+    its next beat."""
+    dead_after: float = 5
 
     def __post_init__(self):
-        self._last_seen: dict[int, int] = {}
-        self._step = 0
+        self._last_seen: dict[int, float] = {}
+        self._step = 0.0
 
-    def beat(self, host: int, step: int) -> None:
+    def beat(self, host: int, step: float) -> None:
         self._last_seen[host] = step
+        self._step = max(self._step, step)
+
+    def advance(self, step: float) -> None:
+        """Advance the ledger clock without any host reporting (the
+        serving watchdog's wait-on-a-hung-device path)."""
         self._step = max(self._step, step)
 
     def dead_hosts(self) -> list[int]:

@@ -9,6 +9,14 @@ heterogeneous devices with online KV balancing:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
         --reduced --requests 32 --devices hbm:1,cxl:2 --block-size 8
+
+Chaos mode — inject a deterministic fault trace (kills, stalls,
+transfer corruption, pool exhaustion) and serve through it with the
+recovery watchdog attached:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+        --reduced --requests 32 --devices hbm:1,cxl:2 --block-size 8 \
+        --chaos 'kill:cxl1@40,corrupt@20' --chaos-seed 0
 """
 
 from __future__ import annotations
@@ -52,6 +60,12 @@ def main(argv=None):
                          "'hbm:1,cxl:2' (see repro.perfmodel.devices)")
     ap.add_argument("--arrival-gap-ms", type=float, default=2.0,
                     help="cluster mode: mean Poisson arrival gap")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="cluster mode: fault trace, e.g. "
+                         "'kill:hbm0@120,stall:cxl0@50x8,corrupt@30*2' "
+                         "(see repro.cluster.faults)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for injected corruption bytes")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="on-device sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0)
@@ -82,11 +96,19 @@ def main(argv=None):
         if args.system not in ("pam", "wallclock"):
             ap.error("--devices models PAM-class devices; --system must "
                      "be 'pam' (modeled, the default) or 'wallclock'")
-        from repro.cluster import BalancerConfig, KVBalancer, build_cluster
+        from repro.cluster import (BalancerConfig, FaultInjector,
+                                   KVBalancer, RecoveryConfig,
+                                   build_cluster)
         from repro.perfmodel.devices import parse_devices
+        faults = recovery = None
+        if args.chaos:
+            faults = FaultInjector.from_spec(args.chaos,
+                                             seed=args.chaos_seed)
+            recovery = RecoveryConfig()
         router = build_cluster(
             cfg, params, parse_devices(args.devices), scfg=scfg,
             balancer=KVBalancer(BalancerConfig()),
+            faults=faults, recovery=recovery,
             wallclock=(args.system == "wallclock"))
         t = 0.0
         for i in range(args.requests):

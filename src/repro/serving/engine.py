@@ -19,8 +19,12 @@ on device between steps (the sampled token feeds the next dispatch without
 a host round-trip), ``run()`` consumes step *t-1*'s buffers while step *t*
 runs (async dispatch), and ``micro_steps > 1`` wraps a ``lax.fori_loop``
 micro-loop around the fused body so the host is visited only once every k
-steps. Sampling is on-device too: ``temperature``/``top_k`` with a
-threaded+donated PRNG key (0 = exact greedy argmax), and ``eos_token >=
+steps. Sampling is on-device too: ``temperature``/``top_k`` with
+PER-REQUEST keys derived in-dispatch as ``fold_in(fold_in(seed, rid),
+position)`` (0 = exact greedy argmax) — a request's sampled stream is a
+pure function of (seed, rid, positions, logits), independent of batch
+composition, slot or step phase, which is what makes migration and
+failure replay bit-exact even at temperature > 0 — and ``eos_token >=
 0`` folds EOS detection into the dispatch — a slot that samples EOS drops
 out of the ``active`` carry, so the micro-loop serves EOS traffic as well.
 Prefill lengths are bucketed to powers of two (capping jit-cache blowup)
@@ -161,7 +165,9 @@ class ServingConfig:
     hot_window: int = 0                # hot ring slots (0 = max_len)
     temperature: float = 0.0           # 0 = greedy argmax (exact tests)
     top_k: int = 0                     # 0 = full softmax when sampling
-    sample_seed: int = 0               # threaded on-device PRNG key seed
+    sample_seed: int = 0               # per-request sampling key seed:
+    # token at position p of request rid draws from
+    # fold_in(fold_in(PRNGKey(sample_seed), rid), p)
 
 
 class StepBufs(NamedTuple):
@@ -182,26 +188,40 @@ class StepBufs(NamedTuple):
 # the same configuration reuses the compiled fused step instead of paying
 # compile again (configs are frozen dataclasses, hence hashable).
 
-def _sample_tokens(logits, rng, temperature: float, top_k: int):
+def _sample_tokens(logits, seed: int, rids, positions,
+                   temperature: float, top_k: int):
     """On-device sampling: greedy argmax when ``temperature == 0``
     (static — compiles to the exact PR-1 fast path), else temperature
-    softmax with optional top-k filtering, drawn from the threaded PRNG
-    key. Returns (tokens, new_rng)."""
+    softmax with optional top-k filtering. Each row draws from its own
+    PER-REQUEST key ``fold_in(fold_in(PRNGKey(seed), rid), position)``
+    — the sampled token at absolute position ``p`` of request ``rid``
+    depends only on (seed, rid, p) and the logits, never on batch
+    composition, slot index or the engine's global step history. That
+    replay-stability is what makes sampled streams bit-identical across
+    migration AND failure recovery (a replayed request regenerates the
+    exact tokens it already emitted — ``repro.cluster.recovery``)."""
     if temperature == 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), rng
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     lg = logits.astype(jnp.float32) / temperature
     if 0 < top_k < lg.shape[-1]:
         kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
         lg = jnp.where(lg < kth, -jnp.inf, lg)
-    rng, sub = jax.random.split(rng)
-    return jax.random.categorical(sub, lg, axis=-1).astype(jnp.int32), rng
+    base = jax.random.PRNGKey(seed)
+
+    def draw(rid, pos, row):
+        key = jax.random.fold_in(jax.random.fold_in(base, rid), pos)
+        return jax.random.categorical(key, row, axis=-1)
+
+    return jax.vmap(draw)(rids.astype(jnp.uint32),
+                          positions.astype(jnp.uint32),
+                          lg).astype(jnp.int32)
 
 
 def _fused_decode_body(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
                        smax: int, bs: int, sentinel: int,
                        temperature: float, top_k: int, eos: int,
-                       hot_window: int,
-                       params, tokens, cache, pam_state, active, rng):
+                       hot_window: int, seed: int,
+                       params, tokens, cache, pam_state, active, rids):
     """ONE decode step of the full PAM pipeline, pure & traceable:
     participation -> masked decode -> stats -> observe -> sample.
 
@@ -285,25 +305,33 @@ def _fused_decode_body(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
         hit = jnp.zeros((), jnp.float32)
         moved = jnp.zeros((), jnp.int32)
 
-    nxt, rng = _sample_tokens(logits, rng, temperature, top_k)
+    # the sampled token's absolute position is the post-append cache
+    # length — the (rid, position) pair keys the per-request PRNG
+    nxt = _sample_tokens(logits, seed, rids, cache.lengths,
+                         temperature, top_k)
     tokens = jnp.where(active, nxt, tokens)
     if eos >= 0:
         active = active & (tokens != eos)   # EOS emitted -> slot freezes
-    return tokens, cache, pam_state, active, rng, (tier_reads, hit, moved,
-                                                   cache.lengths, blocks)
+    return tokens, cache, pam_state, active, (tier_reads, hit, moved,
+                                              cache.lengths, blocks)
 
 
 @functools.lru_cache(maxsize=None)
 def _fused_decode_fn(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
                      smax: int, batch: int, k: int, bs: int = 0,
                      sentinel: int = 0, temperature: float = 0.0,
-                     top_k: int = 0, eos: int = -1, hot_window: int = 0):
+                     top_k: int = 0, eos: int = -1, hot_window: int = 0,
+                     seed: int = 0):
     """Fused decode dispatch running ``k`` steps on device. Cache (dense
-    buffers AND paged pools), PAM state (including the block table), the
-    token vector and the PRNG key are DONATED — zero per-step copies.
+    buffers AND paged pools), PAM state (including the block table) and
+    the token vector are DONATED — zero per-step copies. ``rids`` is the
+    per-slot request-id vector: sampling keys derive on device as
+    ``fold_in(fold_in(seed, rid), position)``, so no PRNG state is
+    threaded between dispatches at all (the key is a pure function of
+    what the request is and where it is in its stream — replayable).
     The active mask rides the micro-loop carry so on-device EOS
     detection (``eos >= 0``) freezes finished slots mid-dispatch."""
-    def run_k(params, tokens, cache, pam_state, active, rng):
+    def run_k(params, tokens, cache, pam_state, active, rids):
         bufs = StepBufs(
             tokens=jnp.zeros((k, batch), jnp.int32),
             tier_reads=jnp.zeros((k, 3), jnp.int32),
@@ -313,12 +341,12 @@ def _fused_decode_fn(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
             blocks=jnp.zeros((k, 2), jnp.int32))
 
         def step_i(i, carry):
-            tokens, cache, pam_state, active, rng, bufs = carry
-            tokens, cache, pam_state, active, rng, \
+            tokens, cache, pam_state, active, bufs = carry
+            tokens, cache, pam_state, active, \
                 (reads, hit, moved, lens, blk) = _fused_decode_body(
                     cfg, pcfg, smax, bs, sentinel, temperature, top_k,
-                    eos, hot_window, params, tokens, cache, pam_state,
-                    active, rng)
+                    eos, hot_window, seed, params, tokens, cache,
+                    pam_state, active, rids)
             bufs = StepBufs(
                 tokens=bufs.tokens.at[i].set(tokens),
                 tier_reads=bufs.tier_reads.at[i].set(reads),
@@ -326,17 +354,17 @@ def _fused_decode_fn(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
                 moved=bufs.moved.at[i].set(moved),
                 lengths=bufs.lengths.at[i].set(lens),
                 blocks=bufs.blocks.at[i].set(blk))
-            return tokens, cache, pam_state, active, rng, bufs
+            return tokens, cache, pam_state, active, bufs
 
-        carry = (tokens, cache, pam_state, active, rng, bufs)
+        carry = (tokens, cache, pam_state, active, bufs)
         if k == 1:
             carry = step_i(0, carry)
         else:
             carry = jax.lax.fori_loop(0, k, step_i, carry)
-        tokens, cache, pam_state, active, rng, bufs = carry
-        return tokens, cache, pam_state, rng, bufs
+        tokens, cache, pam_state, active, bufs = carry
+        return tokens, cache, pam_state, bufs
 
-    return jax.jit(run_k, donate_argnums=(1, 2, 3, 5))
+    return jax.jit(run_k, donate_argnums=(1, 2, 3))
 
 
 @functools.lru_cache(maxsize=None)
@@ -361,12 +389,12 @@ def _prefill_fn(cfg: ModelConfig, smax: int):
 @functools.lru_cache(maxsize=None)
 def _admit_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int,
                      n: int, temperature: float = 0.0, top_k: int = 0,
-                     hot_window: int = 0):
+                     hot_window: int = 0, seed: int = 0):
     """One donated dispatch per admission GROUP: scatter ``n`` prefilled
     sequences (one batched prefill's sub-cache) into their slots, SAMPLE
     each first token from the prefill logits (same temperature/top-k/
-    threaded-PRNG policy as the decode dispatch), seed the device token
-    vector and place each sequence's initial tier layout. In paged mode
+    per-request-key policy as the decode dispatch), seed the device
+    token vector and place each sequence's initial tier layout. In paged mode
     (``block_size`` > 0) the same dispatch also scatters each prompt's
     KV into its allocated pool blocks and installs its block-table row.
     With a hot ring (``hot_window`` > 0) the dense scatter is rebased
@@ -377,8 +405,10 @@ def _admit_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int,
     ``n == 1`` is the single-admission case; same-bucket admission
     bursts ride one dispatch."""
     def commit(cache, pam_state, tokens_dev, sub, logits, slots, lengths,
-               rng, table_rows=None):
-        firsts, rng = _sample_tokens(logits, rng, temperature, top_k)
+               rids, table_rows=None):
+        # first token = absolute position `prompt_len` of request `rid`
+        firsts = _sample_tokens(logits, seed, rids, lengths,
+                                temperature, top_k)
         def put(full, batch_rows):
             if full.ndim == 0 or full.size == 0:
                 return full
@@ -412,9 +442,9 @@ def _admit_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int,
                 pam_state = pm.place_prefill_state(
                     pcfg, pam_state, slots[i], lengths[i],
                     table_rows[i] if block_size else None)
-        return cache, pam_state, tokens_dev, rng, firsts
+        return cache, pam_state, tokens_dev, firsts
 
-    return jax.jit(commit, donate_argnums=(0, 1, 2, 7))
+    return jax.jit(commit, donate_argnums=(0, 1, 2))
 
 
 @functools.lru_cache(maxsize=None)
@@ -511,6 +541,7 @@ class ServingEngine:
         self.clock = 0.0                       # simulated seconds
         self.busy_time = 0.0                   # sim seconds with active>0
         self.last_step_time = 0.0              # modeled latency, last step
+        self.last_step_stats = None            # stats of that decode step
 
         B, Smax = scfg.max_batch, scfg.max_len
         self.pam_cfg = scfg.pam
@@ -558,7 +589,10 @@ class ServingEngine:
         self.waiting: collections.deque[int] = collections.deque()
         self.slots: list[Optional[int]] = [None] * B
         self.tokens_dev = jnp.zeros((B,), jnp.int32)  # lives on device
-        self.rng_dev = jax.random.PRNGKey(scfg.sample_seed)
+        # per-slot request ids: the sampling-key operand of the fused
+        # dispatch (keys derive as fold_in(fold_in(seed, rid), position),
+        # so no PRNG state survives between dispatches)
+        self.rids_host = np.zeros((B,), np.uint32)
         self.steps = 0
         # fast-path observability: one fused dispatch should serve one (or
         # k) decode steps — asserted by tests and reported by benchmarks
@@ -581,19 +615,21 @@ class ServingEngine:
                 self.cfg, self.pam_cfg, self.scfg.max_len,
                 self.scfg.max_batch, k, self.block_size, self.sentinel,
                 self.scfg.temperature, self.scfg.top_k,
-                self.scfg.eos_token, self.hot_window)
+                self.scfg.eos_token, self.hot_window,
+                self.scfg.sample_seed)
         return self._micro_jits[k]
 
     def _admit_commit_dispatch(self, cache, pam_state, tokens_dev, sub,
-                               logits, slots, lengths, rng,
+                               logits, slots, lengths, rids,
                                table_rows=None):
         """ONE donated device dispatch committing an admission group
         (resolved per group size from the shared compile cache)."""
         fn = _admit_commit_fn(self.pam_cfg, self.block_size,
                               int(slots.shape[0]), self.scfg.temperature,
-                              self.scfg.top_k, self.hot_window)
+                              self.scfg.top_k, self.hot_window,
+                              self.scfg.sample_seed)
         args = (cache, pam_state, tokens_dev, sub, logits, slots, lengths,
-                rng)
+                rids)
         if table_rows is not None:
             args += (table_rows,)
         return fn(*args)
@@ -689,13 +725,16 @@ class ServingEngine:
                           jnp.asarray(lens))
         self.prefill_dispatches += 1
         slots = np.array([g[4] for g in group], np.int32)
+        rids = np.array([g[0] for g in group], np.uint32)
         args = (self.cache, self.pam_state, self.tokens_dev, sub, logits,
-                jnp.asarray(slots), jnp.asarray(lens), self.rng_dev)
+                jnp.asarray(slots), jnp.asarray(lens), jnp.asarray(rids))
         if self.allocator is not None:
             args += (jnp.asarray(np.stack([g[5] for g in group])),)
-        (self.cache, self.pam_state, self.tokens_dev, self.rng_dev,
+        (self.cache, self.pam_state, self.tokens_dev,
          first_dev) = self._admit_jit(*args)
         self.admit_dispatches += 1
+        for rid, _, _, _, slot, _ in group:
+            self.rids_host[slot] = rid
         firsts = np.asarray(first_dev)
         eos = self.scfg.eos_token
         for i, (rid, rs, _, _, slot, _) in enumerate(group):
@@ -734,10 +773,10 @@ class ServingEngine:
                                  "moved_tokens": 0}
         if active_np.any():
             fused = self._get_micro(1)
-            (self.tokens_dev, self.cache, self.pam_state, self.rng_dev,
+            (self.tokens_dev, self.cache, self.pam_state,
              bufs) = fused(
                 self.params, self.tokens_dev, self.cache, self.pam_state,
-                jnp.asarray(active_np), self.rng_dev)
+                jnp.asarray(active_np), jnp.asarray(self.rids_host))
             self.decode_dispatches += 1
             self.decode_device_steps += 1
             if self.mgr:
@@ -768,6 +807,7 @@ class ServingEngine:
             # carry a prefill spike that would whipsaw router/balancer
             # cost comparisons (prefill is priced separately there)
             self.last_step_time = dt
+            self.last_step_stats = stats
         if active_np.any():
             self.busy_time += dt
         stats["step_time"] = dt
@@ -852,10 +892,10 @@ class ServingEngine:
             for slot, _ in pairs:
                 active_np[slot] = True
             fused = self._get_micro(k)
-            (self.tokens_dev, self.cache, self.pam_state, self.rng_dev,
+            (self.tokens_dev, self.cache, self.pam_state,
              bufs) = fused(
                 self.params, self.tokens_dev, self.cache, self.pam_state,
-                jnp.asarray(active_np), self.rng_dev)
+                jnp.asarray(active_np), jnp.asarray(self.rids_host))
             self.decode_dispatches += 1
             self.decode_device_steps += k
             self.steps += k
@@ -912,6 +952,7 @@ class ServingEngine:
             self.clock += dt
             if not stats["prefill_tokens"]:
                 self.last_step_time = dt     # decode-only load signal
+                self.last_step_stats = stats
             self.busy_time += dt
             for slot, rid in pairs:
                 rs = self.requests[rid]
@@ -1108,7 +1149,24 @@ class ServingEngine:
             token_times=list(snap["token_times"]))
         self.requests[req.id] = rs
         self.slots[slot] = req.id
+        self.rids_host[slot] = req.id
         self.migrations_in += 1
+
+    # ----------------------------------------- suspend / resume (recovery)
+    def suspend_request(self, rid: int) -> dict[str, Any]:
+        """Preemption-by-demotion hook: detach a RUNNING request into a
+        host-held snapshot, freeing its slot and pool blocks for a more
+        urgent admission. The snapshot is ``export_request``'s portable
+        dict — resuming it later (here or on any compatible engine) via
+        ``resume_request`` continues the stream bit-exactly, because the
+        per-request sampling keys depend only on (seed, rid, position)."""
+        return self.export_request(rid)
+
+    def resume_request(self, snap: dict[str, Any]) -> None:
+        """Re-admit a suspended request (one donated dispatch); the twin
+        of ``suspend_request``. Raises ``OutOfBlocks``/``ValueError``
+        when capacity is still short — check ``can_accept`` first."""
+        self.import_request(snap)
 
     # ------------------------------------------------------------ metrics
     def summary(self) -> dict[str, Any]:

@@ -181,10 +181,23 @@ def test_router_spills_to_slow_device_under_overload():
 
 
 def test_router_rejects_unserviceable_request():
+    """A window no device can serve degrades to a rejection TokenEvent
+    (done=True, no token) — the rest of the stream keeps serving."""
     router = _router([HBM_CLASS], n=1)
-    with pytest.raises(ValueError, match="fits no device"):
-        router.submit(Request(id=99, prompt=np.arange(60, dtype=np.int32),
-                              max_new_tokens=30, arrival=99.0))
+    router.submit(Request(id=99, prompt=np.arange(60, dtype=np.int32),
+                          max_new_tokens=30, arrival=99.0))
+    s = router.run()
+    assert s["finished"] == 1 and s["rejected"] == 1
+    ev = [e for e in router.drain_events() if e.request_id == 99]
+    assert len(ev) == 1
+    assert ev[0].rejected and ev[0].done and ev[0].token == -1
+    assert 99 not in router.finished
+
+    router.submit_to(Request(id=98, prompt=np.arange(60, dtype=np.int32),
+                             max_new_tokens=30, arrival=100.0), "hbm0")
+    assert router.rejected == 2
+    assert [e.request_id for e in router.drain_events()
+            if e.rejected] == [98]
 
 
 # -------------------------------------------------------------- balancer

@@ -34,6 +34,7 @@ def test_straggler_monitor_flags_slow_host():
     for step in range(4):
         for h in range(4):
             mon.record(h, 1.0 if h != 2 else 5.0)
+        mon.observe_step()
         flagged = mon.stragglers()
     assert flagged == [2]
 
@@ -42,9 +43,61 @@ def test_straggler_monitor_forgives_transient():
     mon = StragglerMonitor(threshold=2.0, patience=3)
     for h in range(4):
         mon.record(h, 1.0 if h != 1 else 10.0)   # one bad step
+    mon.observe_step()
     assert mon.stragglers() == []
     for h in range(4):
         mon.record(h, 1.0)
+    mon.observe_step()
+    assert mon.stragglers() == []
+
+
+def test_straggler_query_is_pure():
+    """Regression: ``stragglers()`` must NOT mutate strike counters —
+    historically the query itself evaluated-and-bumped, so polling it
+    twice per step double-counted and halved the effective patience."""
+    mon = StragglerMonitor(threshold=2.0, patience=4)
+    for step in range(2):
+        for h in range(3):
+            mon.record(h, 1.0 if h != 0 else 9.0)
+        mon.observe_step()
+        for _ in range(5):               # poll freely: no side effects
+            assert mon.stragglers() == []
+    assert mon._strikes[0] == 2          # one strike per observe_step
+    for step in range(2):
+        for h in range(3):
+            mon.record(h, 1.0 if h != 0 else 9.0)
+        mon.observe_step()
+    assert mon.stragglers() == [0]       # patience reached exactly now
+
+
+def test_straggler_recovered_host_resets_to_zero():
+    """A host that speeds back up after accumulating strikes resets its
+    counter to ZERO (not decrement): transient hiccups never add up to
+    a false eviction."""
+    mon = StragglerMonitor(threshold=2.0, patience=3)
+    for _ in range(2):                   # two strikes for host 1
+        for h in range(3):
+            mon.record(h, 1.0 if h != 1 else 8.0)
+        mon.observe_step()
+    assert mon._strikes[1] == 2
+    for h in range(3):                   # host 1 recovers for one step
+        mon.record(h, 1.0)
+    mon.observe_step()
+    assert mon._strikes[1] == 0
+    for _ in range(2):                   # two NEW strikes: still < patience
+        for h in range(3):
+            mon.record(h, 1.0 if h != 1 else 8.0)
+        mon.observe_step()
+    assert mon.stragglers() == []
+
+
+def test_straggler_single_host_never_flags():
+    """A single-host fleet has no cross-host median to straggle from —
+    it must never be flagged, no matter how slow its steps get."""
+    mon = StragglerMonitor(threshold=2.0, patience=1)
+    for t in (1.0, 50.0, 500.0):
+        mon.record(0, t)
+        mon.observe_step()
     assert mon.stragglers() == []
 
 
@@ -54,6 +107,34 @@ def test_heartbeat_ledger():
         hb.beat(0, s)
         if s < 2:
             hb.beat(1, s)
+    assert hb.dead_hosts() == [1]
+
+
+def test_heartbeat_silent_then_returning_host_leaves_dead_list():
+    """A host silent long enough to be presumed dead rejoins the fleet
+    on its next beat (network partition healed) — ``dead_hosts()`` must
+    drop it rather than latch the verdict."""
+    hb = HeartbeatLedger(dead_after=3)
+    for s in range(6):
+        hb.beat(0, s)
+        if s == 0:
+            hb.beat(1, s)
+    assert hb.dead_hosts() == [1]
+    hb.beat(1, 6)                        # the partition heals
+    hb.beat(0, 6)
+    assert hb.dead_hosts() == []
+
+
+def test_heartbeat_ledger_advances_without_beats():
+    """``advance`` moves the ledger clock with nobody reporting — the
+    serving watchdog's wait-on-a-hung-device path, in fractional
+    sim-clock seconds."""
+    hb = HeartbeatLedger(dead_after=0.25)
+    hb.beat(0, 0.0)
+    hb.beat(1, 0.0)
+    hb.advance(0.2)
+    assert hb.dead_hosts() == []
+    hb.beat(0, 0.3)                      # host 0 alive; host 1 silent
     assert hb.dead_hosts() == [1]
 
 

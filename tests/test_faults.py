@@ -1,0 +1,356 @@
+"""Fault-tolerant cluster serving: chaos injection, device-loss
+recovery and graceful degradation.
+
+The headline acceptance invariant (same style as the migration twins):
+a request whose device is KILLED or STALLED mid-decode finishes on a
+survivor with a token stream BIT-IDENTICAL to its failure-free twin —
+via snapshot-drain for stragglers and replay for hard kills — and the
+router's client-visible event stream stays gapless and duplicate-free
+(zero lost tokens) across the failure.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import (FaultEvent, FaultInjector, KVSnapshot,
+                           RecoveryConfig, RecoveryManager,
+                           SnapshotCorruption, build_cluster, parse_chaos)
+from repro.models import transformer as tf
+from repro.models.config import get_config, reduced
+from repro.perfmodel.devices import CXL_CLASS, HBM_CLASS
+from repro.serving import (PAMManagerConfig, Request, ServingConfig,
+                           ServingEngine)
+
+jax.config.update("jax_platform_name", "cpu")
+
+_CFG = reduced(get_config("qwen3-0.6b"))
+_PARAMS = tf.init_params(_CFG, jax.random.PRNGKey(0))
+
+
+def _pam(max_len=64):
+    return PAMManagerConfig(max_tokens=max_len, hot_capacity=4,
+                            warm_capacity=8, compression=4,
+                            recency_window=2, schedule_interval=2)
+
+
+def _scfg(**kw):
+    return ServingConfig(max_batch=4, max_len=64, pam=_pam(),
+                         block_size=8, **kw)
+
+
+def _requests(n, plen=16, max_new=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(id=i, prompt=rng.integers(0, _CFG.vocab, plen),
+                    max_new_tokens=max_new, arrival=0.0)
+            for i in range(n)]
+
+
+def _twin_streams(reqs, **scfg_kw):
+    """Failure-free reference: the same requests on one plain engine
+    (streams are batch/slot/phase-independent, so any engine run is THE
+    canonical stream per request)."""
+    eng = ServingEngine(_CFG, _PARAMS, _scfg(**scfg_kw))
+    for r in reqs:
+        eng.submit(Request(id=r.id, prompt=r.prompt,
+                           max_new_tokens=r.max_new_tokens))
+    eng.run()
+    return {r.id: eng.requests[r.id].outputs for r in reqs}
+
+
+def _assert_stream_integrity(router, rids):
+    """Zero lost tokens: every request's event stream is gapless,
+    duplicate-free, matches its finished outputs and ends with exactly
+    one done marker."""
+    ev = router.drain_events()
+    for rid in rids:
+        mine = [e for e in ev if e.request_id == rid and not e.rejected]
+        assert [e.index for e in mine] == list(range(len(mine))), rid
+        assert [e.token for e in mine] == router.finished[rid].outputs
+        assert sum(e.done for e in mine) == 1 and mine[-1].done
+
+
+# ---------------------------------------------------- replay (hard kill)
+def test_kill_replay_twin_exact_greedy():
+    """Hard kill mid-decode: in-flight KV is lost, the router replays
+    the lost requests on the survivor, and every stream is bit-equal to
+    the failure-free twin with no duplicate or missing events."""
+    reqs = _requests(4)
+    twin = _twin_streams(reqs)
+    inj = FaultInjector([FaultEvent(tick=6, kind="kill", device="hbm1")])
+    router = build_cluster(
+        _CFG, _PARAMS, [HBM_CLASS, HBM_CLASS], scfg=_scfg(), faults=inj,
+        recovery=RecoveryConfig(heartbeat_timeout_s=0.01))
+    for i, r in enumerate(reqs):         # pin 2 per device
+        router.submit_to(r, f"hbm{i % 2}")
+    s = router.run()
+    assert s["finished"] == 4 and s["rejected"] == 0
+    ft = s["fault_tolerance"]
+    assert ft["kills_detected"] == 1
+    assert ft["replays"] >= 1
+    assert ft["recovery_latency_mean_s"] > 0
+    assert s["devices"]["hbm1"]["state"] == "dead"
+    for r in reqs:
+        assert router.finished[r.id].outputs == twin[r.id], r.id
+    _assert_stream_integrity(router, [r.id for r in reqs])
+
+
+def test_kill_replay_twin_exact_sampled():
+    """Replay exactness holds at temperature > 0: per-request sampling
+    keys (fold_in(seed, rid, position)) regenerate the identical
+    sampled stream on the survivor."""
+    kw = dict(temperature=1.0, sample_seed=11)
+    reqs = _requests(4, seed=2)
+    twin = _twin_streams(reqs, **kw)
+    inj = FaultInjector([FaultEvent(tick=7, kind="kill", device="hbm1")])
+    router = build_cluster(
+        _CFG, _PARAMS, [HBM_CLASS, HBM_CLASS], scfg=_scfg(**kw),
+        faults=inj, recovery=RecoveryConfig(heartbeat_timeout_s=0.01))
+    for i, r in enumerate(reqs):
+        router.submit_to(r, f"hbm{i % 2}")
+    s = router.run()
+    assert s["finished"] == 4
+    assert s["fault_tolerance"]["replays"] >= 1
+    for r in reqs:
+        assert router.finished[r.id].outputs == twin[r.id], r.id
+    _assert_stream_integrity(router, [r.id for r in reqs])
+
+
+def test_watchdog_waits_out_a_silent_sole_worker():
+    """The killed device held ALL in-flight work: nothing is steppable,
+    so the watchdog must burn heartbeat-timeout sim-time explicitly to
+    detect the silence, then replay on the idle survivor."""
+    reqs = _requests(2, seed=3)
+    twin = _twin_streams(reqs)
+    inj = FaultInjector([FaultEvent(tick=4, kind="kill", device="hbm1")])
+    timeout = 0.05
+    router = build_cluster(
+        _CFG, _PARAMS, [HBM_CLASS, HBM_CLASS], scfg=_scfg(), faults=inj,
+        recovery=RecoveryConfig(heartbeat_timeout_s=timeout))
+    for r in reqs:
+        router.submit_to(r, "hbm1")      # hbm0 stays idle
+    s = router.run()
+    assert s["finished"] == 2
+    ft = s["fault_tolerance"]
+    assert ft["kills_detected"] == 1 and ft["replays"] == 2
+    assert ft["recovery_latency_mean_s"] >= timeout
+    for r in reqs:
+        assert router.finished[r.id].outputs == twin[r.id]
+    _assert_stream_integrity(router, [r.id for r in reqs])
+
+
+def test_kill_with_no_survivor_degrades_to_rejection():
+    """Losing the ONLY serviceable device must not hang or raise: the
+    stranded requests end with rejection events and the run drains."""
+    reqs = _requests(2, seed=4)
+    inj = FaultInjector([FaultEvent(tick=3, kind="kill", device="hbm0")])
+    router = build_cluster(
+        _CFG, _PARAMS, [HBM_CLASS], scfg=_scfg(), faults=inj,
+        recovery=RecoveryConfig(heartbeat_timeout_s=0.01))
+    for r in reqs:
+        router.submit(r)
+    s = router.run()
+    assert s["finished"] == 0 and s["rejected"] == 2
+    ev = router.drain_events()
+    assert sum(e.rejected for e in ev) == 2
+
+
+# ------------------------------------------------- drain (straggler stall)
+def test_stall_drain_twin_exact_sampled():
+    """A stalled (50x) device is flagged by the prior-normalized
+    straggler watchdog and DRAINED: its running requests move to the
+    healthy device as checksummed snapshots and finish bit-exactly —
+    sampled streams included."""
+    kw = dict(temperature=1.0, sample_seed=9)
+    reqs = _requests(4, seed=5)
+    twin = _twin_streams(reqs, **kw)
+    inj = FaultInjector([FaultEvent(tick=4, kind="stall", device="hbm1",
+                                    factor=50.0)])
+    router = build_cluster(
+        _CFG, _PARAMS, [HBM_CLASS, HBM_CLASS], scfg=_scfg(**kw),
+        faults=inj, recovery=RecoveryConfig())
+    for i, r in enumerate(reqs):
+        router.submit_to(r, f"hbm{i % 2}")
+    s = router.run()
+    assert s["finished"] == 4 and s["rejected"] == 0
+    ft = s["fault_tolerance"]
+    assert ft["drains"] >= 1 and ft["kills_detected"] == 0
+    assert s["devices"]["hbm1"]["state"] == "drained"
+    assert router._by_name("hbm0").engine.migrations_in >= 1
+    for r in reqs:
+        assert router.finished[r.id].outputs == twin[r.id], r.id
+    _assert_stream_integrity(router, [r.id for r in reqs])
+
+
+def test_heterogeneous_slow_device_is_not_a_straggler():
+    """A legitimately 4x-slower CXL device must NEVER be flagged: step
+    times are normalized by the device-class prior before they reach
+    the monitor."""
+    reqs = _requests(6, seed=6)
+    router = build_cluster(
+        _CFG, _PARAMS, [HBM_CLASS, CXL_CLASS], scfg=_scfg(),
+        recovery=RecoveryConfig())
+    for r in reqs:
+        router.submit(r)
+    s = router.run()
+    assert s["finished"] == 6
+    assert s["fault_tolerance"]["drains"] == 0
+    assert all(d["state"] == "up" for d in s["devices"].values())
+
+
+# --------------------------------------------------- transfer corruption
+def _mid_decode_pair(n=2, steps=4):
+    src = ServingEngine(_CFG, _PARAMS, _scfg(), name="src")
+    dst = ServingEngine(_CFG, _PARAMS, _scfg(), name="dst")
+    reqs = _requests(n, seed=7)
+    for r in reqs:
+        src.submit(Request(id=r.id, prompt=r.prompt,
+                           max_new_tokens=r.max_new_tokens))
+    for _ in range(steps):
+        src.step()
+    return src, dst, reqs
+
+
+def test_snapshot_checksum_detects_corruption():
+    src, dst, _ = _mid_decode_pair()
+    snap = KVSnapshot.export(src, 0)
+    assert snap.checksum is not None and snap.verify()
+    wire = snap.clone()
+    FaultInjector([]).corrupt(wire)
+    assert not wire.verify()
+    with pytest.raises(SnapshotCorruption):
+        wire.commit(dst)
+    assert snap.verify()                 # sender copy untouched
+    assert 0 not in dst.requests         # nothing half-committed
+
+
+def test_transfer_retries_through_drop_and_corruption():
+    """One dropped + one corrupted transfer, then success: bounded
+    retry re-sends from the pristine copy, backoff is charged to the
+    receiver, and the delivered stream is exact."""
+    twin = _twin_streams(_requests(2, seed=7))
+    src, dst, reqs = _mid_decode_pair()
+    inj = FaultInjector([FaultEvent(tick=0, kind="drop"),
+                         FaultEvent(tick=0, kind="corrupt")])
+    inj.due(0)                           # arm the verdict queue
+    rec = RecoveryManager(RecoveryConfig(transfer_retries=3),
+                          injector=inj)
+    snap = KVSnapshot.export(src, 1)
+    charged = []
+    assert rec.transfer(snap, dst, charged.append)
+    assert rec.stats["transfers_dropped"] == 1
+    assert rec.stats["corruptions_detected"] == 1
+    assert rec.stats["transfer_retries"] == 2
+    assert sum(charged) > 0
+    src.run()
+    dst.run()
+    assert src.requests[0].outputs == twin[0]
+    assert dst.requests[1].outputs == twin[1]
+
+
+def test_transfer_terminal_failure_rolls_back_to_source():
+    """Every retry corrupted: the transfer fails terminally, but the
+    sender's copy is pristine — rollback re-commits it at home and the
+    stream still finishes exactly."""
+    twin = _twin_streams(_requests(2, seed=7))
+    src, dst, _ = _mid_decode_pair()
+    inj = FaultInjector([FaultEvent(tick=0, kind="corrupt", count=8)])
+    inj.due(0)
+    rec = RecoveryManager(RecoveryConfig(transfer_retries=1),
+                          injector=inj)
+    snap = KVSnapshot.export(src, 1)
+    assert not rec.transfer(snap, dst, lambda s: None)
+    assert rec.stats["transfer_failures"] == 1
+    assert snap.verify()
+    snap.commit(src)                     # rollback
+    src.run()
+    assert src.requests[1].outputs == twin[1]
+    assert dst.migrations_in == 0
+
+
+# ------------------------------------------- preemption / pool exhaustion
+def test_pool_exhaustion_preempts_lowest_importance_and_resumes():
+    """An exhausted pool starves the queue head; the router demotes the
+    lowest-importance running request to a host-held snapshot (freeing
+    its blocks), admits the head, and resumes the victim when capacity
+    frees — all three streams bit-equal their failure-free twins."""
+    reqs = _requests(3, plen=20, max_new=12, seed=8)
+    twin = _twin_streams(reqs)
+    inj = FaultInjector([FaultEvent(tick=2, kind="exhaust",
+                                    device="hbm0")])
+    router = build_cluster(
+        _CFG, _PARAMS, [HBM_CLASS], scfg=_scfg(), faults=inj,
+        recovery=RecoveryConfig(preempt_after_ticks=5,
+                                resume_cooldown_ticks=2))
+    router.submit_to(reqs[0], "hbm0")
+    router.submit_to(reqs[1], "hbm0")
+    for _ in range(4):                   # both mid-decode before the fault
+        router.tick()
+    router.submit(reqs[2])
+    s = router.run()
+    assert s["finished"] == 3 and s["rejected"] == 0
+    ft = s["fault_tolerance"]
+    assert ft["preemptions"] >= 1 and ft["resumes"] >= 1
+    assert ft["suspended_now"] == 0
+    for r in reqs:
+        assert router.finished[r.id].outputs == twin[r.id], r.id
+    _assert_stream_integrity(router, [r.id for r in reqs])
+
+
+# ------------------------------------------------------ balancer gating
+def test_balancer_never_targets_a_killed_device():
+    """The balancer must not migrate onto (or off) a non-up device: a
+    killed idle fast device would otherwise look like the perfect
+    target and strand every moved request."""
+    from repro.cluster import BalancerConfig, KVBalancer
+    reqs = _requests(4, seed=9)
+    inj = FaultInjector([FaultEvent(tick=1, kind="kill", device="hbm0")])
+    bal = KVBalancer(BalancerConfig(rebalance_interval=2, hysteresis=1.1,
+                                    cooldown_ticks=2, min_remaining=2))
+    router = build_cluster(
+        _CFG, _PARAMS, [HBM_CLASS, CXL_CLASS], scfg=_scfg(),
+        balancer=bal, faults=inj,
+        recovery=RecoveryConfig(heartbeat_timeout_s=0.01))
+    for r in reqs:
+        router.submit_to(r, "cxl0")      # load the slow device only
+    s = router.run()
+    assert s["finished"] == 4
+    assert s["migrations"] == 0          # nowhere healthy to move
+    assert router._by_name("hbm0").engine.migrations_in == 0
+    for r in reqs:
+        assert len(router.finished[r.id].outputs) == r.max_new_tokens
+
+
+# ------------------------------------------------------------- chaos spec
+def test_chaos_spec_parser():
+    evs = parse_chaos("kill:hbm0@120, stall:cxl0@50x8, corrupt@30*2, "
+                      "exhaust:cxl1@25")
+    assert [e.kind for e in evs] == ["kill", "stall", "corrupt",
+                                    "exhaust"]
+    assert evs[0] == FaultEvent(tick=120, kind="kill", device="hbm0")
+    assert evs[1].factor == 8.0 and evs[1].tick == 50
+    assert evs[2].count == 2 and evs[2].device == ""
+    with pytest.raises(ValueError):
+        parse_chaos("kill:hbm0")         # missing @tick
+    with pytest.raises(ValueError):
+        parse_chaos("melt:hbm0@3")       # unknown kind
+    with pytest.raises(ValueError):
+        parse_chaos("kill@3")            # kill needs a device
+
+
+def test_injector_is_deterministic():
+    spec = "corrupt@0*2"
+    a, b = (FaultInjector.from_spec(spec, seed=1) for _ in range(2))
+    a.due(0), b.due(0)
+    arr_a = np.arange(64, dtype=np.uint8).reshape(1, 1, 8, 8)
+    arr_b = arr_a.copy()
+
+    class _Snap:                         # minimal corruptible stand-in
+        def __init__(self, k):
+            self.k = k
+    a.corrupt(_Snap(arr_a))
+    b.corrupt(_Snap(arr_b))
+    np.testing.assert_array_equal(arr_a, arr_b)
+    assert [a.transfer_verdict() for _ in range(3)] == [
+        "corrupt", "corrupt", "ok"]      # armed twice, then drained
+    assert a.exhausted

@@ -1,6 +1,10 @@
-"""On-device sampling + EOS in the fused dispatch (ROADMAP item): the
-PRNG key is threaded and donated through the fused step, temperature=0
-is exactly argmax, top_k=1 is greedy at any temperature, sampling is
+"""On-device sampling + EOS in the fused dispatch (ROADMAP item):
+sampling keys are derived PER REQUEST inside the dispatch as
+``fold_in(fold_in(PRNGKey(seed), rid), position)`` — a request's stream
+is a pure function of (seed, rid, positions, logits), independent of
+batch composition / slot / step phase (the invariant that makes
+migration and failure replay bit-exact) — temperature=0 is exactly
+argmax, top_k=1 is greedy at any temperature, sampling is
 seed-reproducible, and batched same-bucket admissions commit in one
 prefill + one donated dispatch."""
 
@@ -54,7 +58,7 @@ def test_sampling_reproducible_and_seed_sensitive():
     a = _run(_engine(temperature=1.0, sample_seed=7))
     b = _run(_engine(temperature=1.0, sample_seed=7))
     c = _run(_engine(temperature=1.0, sample_seed=8))
-    assert a == b                       # same threaded key -> same stream
+    assert a == b                       # same seed -> same streams
     assert a != c                       # different key -> diverges
     for outs in a.values():
         assert all(0 <= t < _CFG.vocab for t in outs)
@@ -124,18 +128,44 @@ def test_max_new_tokens_one_emits_exactly_one():
     assert eng.requests[0].status == "done"
 
 
-def test_rng_key_is_donated_and_threaded():
-    eng = _engine(temperature=1.0)
+def test_sampled_stream_independent_of_batch_mix_and_phase():
+    """Per-request keys: request 0's sampled stream is identical whether
+    it runs alone, shares the batch with other requests, or is submitted
+    late (different step phase / slot). The old threaded-key scheme
+    violated all three — any batch-mix change reshuffled every draw."""
     rng = np.random.default_rng(0)
-    eng.submit(Request(id=0, prompt=rng.integers(0, _CFG.vocab, 6),
-                       max_new_tokens=6))
-    key_before = np.asarray(eng.rng_dev).copy()
-    eng.step()
-    key0 = eng.rng_dev
-    eng.step()
-    assert key0.is_deleted()            # donated through the dispatch
-    # and actually threaded: the live key differs from the initial one
-    assert not np.array_equal(np.asarray(eng.rng_dev), key_before)
+    prompts = [rng.integers(0, _CFG.vocab, 6) for _ in range(3)]
+
+    solo = _engine(temperature=1.0, sample_seed=7)
+    solo.submit(Request(id=0, prompt=prompts[0], max_new_tokens=8))
+    solo.run()
+    ref = solo.requests[0].outputs
+
+    mixed = _engine(temperature=1.0, sample_seed=7)
+    for i, p in enumerate(prompts):
+        mixed.submit(Request(id=i, prompt=p, max_new_tokens=8))
+    mixed.run()
+    assert mixed.requests[0].outputs == ref
+
+    late = _engine(temperature=1.0, sample_seed=7)
+    late.submit(Request(id=1, prompt=prompts[1], max_new_tokens=8))
+    for _ in range(3):                  # phase-shift: rid 0 joins mid-run
+        late.step()
+    late.submit(Request(id=0, prompt=prompts[0], max_new_tokens=8))
+    late.run()
+    assert late.requests[0].outputs == ref
+
+
+def test_sampled_stream_depends_on_rid():
+    """Identical prompts under the same seed draw DIFFERENT streams when
+    their request ids differ — the rid fold_in is live."""
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, _CFG.vocab, 6)
+    eng = _engine(temperature=2.0, sample_seed=3)
+    for rid in (0, 1):
+        eng.submit(Request(id=rid, prompt=prompt, max_new_tokens=10))
+    eng.run()
+    assert eng.requests[0].outputs != eng.requests[1].outputs
 
 
 def test_sampled_eos_on_micro_loop():
