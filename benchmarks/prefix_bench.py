@@ -1,0 +1,121 @@
+"""Prefix-sharing benchmark (PR 7): share-ratio sweep.
+
+Serves the SAME staggered trace (max_batch 2, so later waves can hit
+prefixes earlier waves published) at increasing prompt share ratios —
+the fraction of each prompt drawn from a common prefix — once with the
+prefix cache on and once with it off (the twin). Records, per ratio:
+
+* novel vs cached prefill tokens (cached = zero prefill compute)
+* prefill FLOPs saved, charged at the standard 2 * params per token
+* peak paged-pool occupancy (shared blocks count ONCE — the capacity
+  win) on the cache engine vs the twin
+* tokens lost — positionwise token-stream diff vs the twin, which the
+  PR 7 acceptance invariant pins at ZERO (sharing is exact, not lossy)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _streams(eng, rids):
+    return {i: list(eng.requests[i].outputs) for i in rids}
+
+
+def _tokens_lost(ref: dict, got: dict) -> int:
+    lost = 0
+    for i, r in ref.items():
+        g = got[i]
+        lost += sum(a != b for a, b in zip(r, g)) + abs(len(r) - len(g))
+    return lost
+
+
+def prefix_sweep(share_ratios=(0.0, 0.25, 0.5, 0.75), n_requests=8,
+                 plen=32, max_new=8) -> dict:
+    import jax
+    from repro.models import transformer as tf
+    from repro.models.config import get_config, reduced
+    from repro.serving import (PAMManagerConfig, Request, ServingConfig,
+                               ServingEngine)
+
+    cfg = reduced(get_config("qwen3-0.6b"))
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    n_params = cfg.param_count()
+
+    def engine(prefix_cache):
+        pam = PAMManagerConfig(max_tokens=64, hot_capacity=16,
+                               warm_capacity=24, compression=4,
+                               recency_window=4, schedule_interval=2)
+        return ServingEngine(cfg, params, ServingConfig(
+            max_batch=2, max_len=64, pam=pam, block_size=8,
+            prefix_cache=prefix_cache))
+
+    points = {}
+    tokens_lost_total = 0
+    for r in share_ratios:
+        rng = np.random.default_rng(17)
+        shared = rng.integers(0, cfg.vocab, int(round(r * plen)))
+        prompts = {i: np.concatenate([
+            shared, rng.integers(0, cfg.vocab, plen - len(shared))])
+            for i in range(n_requests)}
+        runs = {}
+        for cache in (False, True):
+            eng = engine(cache)
+            for i in sorted(prompts):
+                eng.submit(Request(id=i, prompt=prompts[i],
+                                   max_new_tokens=max_new))
+            summary = eng.run()
+            runs[cache] = (summary, _streams(eng, prompts))
+        summary, streams = runs[True]
+        lost = _tokens_lost(runs[False][1], streams)
+        tokens_lost_total += lost
+        cached = summary["cached_prefix_tokens"]
+        points[f"{r:.2f}"] = {
+            "share_ratio": r,
+            "prompt_tokens": int(n_requests * plen),
+            "novel_prefill_tokens": int(summary["novel_prefill_tokens"]),
+            "cached_prefix_tokens": int(cached),
+            "prefix_hits": int(summary["prefix_hits"]),
+            "cow_copies": int(summary["cow_copies"]),
+            "prefill_flops_saved": float(2.0 * n_params * cached),
+            "pool_occupancy_peak": float(summary["pool_occupancy_peak"]),
+            "pool_occupancy_peak_nocache":
+                float(runs[False][0]["pool_occupancy_peak"]),
+            "tokens_lost": int(lost),
+        }
+    lo, hi = f"{share_ratios[0]:.2f}", f"{share_ratios[-1]:.2f}"
+    return {
+        "points": points,
+        "tokens_lost_total": int(tokens_lost_total),
+        "flops_saved_at_half": points.get(
+            "0.50", points[hi])["prefill_flops_saved"],
+        "occupancy_drop_lo_to_hi": (points[lo]["pool_occupancy_peak"]
+                                    - points[hi]["pool_occupancy_peak"]),
+        "model_params": int(n_params),
+    }
+
+
+def prefix_rows(result: dict | None = None) -> tuple[dict, list[tuple]]:
+    if result is None:
+        result = prefix_sweep()
+    rows = []
+    for key in sorted(result["points"]):
+        p = result["points"][key]
+        rows.append((
+            f"prefix/share_{key}", 0.0,
+            f"novel={p['novel_prefill_tokens']} "
+            f"cached={p['cached_prefix_tokens']} "
+            f"flops_saved={p['prefill_flops_saved']:.3g} "
+            f"occupancy={p['pool_occupancy_peak']:.3f} "
+            f"lost={p['tokens_lost']}"))
+    rows.append(("prefix/summary", 0.0,
+                 f"tokens_lost={result['tokens_lost_total']} "
+                 f"occupancy_drop={result['occupancy_drop_lo_to_hi']:.3f}"))
+    return result, rows
+
+
+if __name__ == "__main__":
+    _, rows = prefix_rows()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")

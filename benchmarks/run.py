@@ -18,7 +18,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
                     choices=["all", "figs", "kernels", "engine",
-                             "roofline", "cluster", "chaos"])
+                             "roofline", "cluster", "chaos", "prefix"])
     ap.add_argument("--dryrun-dir", default="experiments/dryrun")
     ap.add_argument("--out", default=None, metavar="BENCH.json",
                     help="write decode tokens/s + dispatch counts (and all "
@@ -61,6 +61,11 @@ def main(argv=None) -> None:
         from benchmarks.chaos_bench import chaos_rows
         chaos, xrows = chaos_rows()
         rows += xrows
+    prefix = None
+    if args.section in ("all", "prefix"):
+        from benchmarks.prefix_bench import prefix_rows
+        prefix, prows = prefix_rows()
+        rows += prows
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
@@ -82,6 +87,16 @@ def main(argv=None) -> None:
             payload["cluster_speedup_vs_best_single"] = \
                 cluster["cluster_speedup_vs_best_single"]
             payload["cluster_migrations"] = cluster["migrations"]
+        if prefix is not None:
+            # prefix-sharing trajectory point (PR 7): prefill FLOPs
+            # saved and pool occupancy vs prompt share ratio, token
+            # streams pinned exact against the cache-off twin
+            payload["prefix"] = prefix
+            payload["prefix_tokens_lost"] = prefix["tokens_lost_total"]
+            payload["prefix_flops_saved_at_half"] = \
+                prefix["flops_saved_at_half"]
+            payload["prefix_occupancy_drop"] = \
+                prefix["occupancy_drop_lo_to_hi"]
         if chaos is not None:
             # fault-tolerance trajectory point (PR 6): goodput under an
             # injected device kill, token-exact vs the failure-free twin

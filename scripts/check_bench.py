@@ -14,6 +14,12 @@ Checks (engine section of ``benchmarks.run``):
 Checks (chaos section, ``BENCH_pr6.json``):
   * zero tokens lost across every fault scenario (twin-exact recovery)
   * 1-kill goodput >= 0.8x the fault-free run of the same trace
+
+Checks (prefix section, ``BENCH_pr7.json``):
+  * zero tokens lost at EVERY share ratio (prefix sharing is exact)
+  * prefill FLOPs saved > 0 wherever the share ratio >= 0.5
+  * peak pool occupancy monotonically helped: occupancy at the highest
+    share ratio below the no-sharing ratio's (shared blocks count once)
 """
 
 import json
@@ -33,12 +39,42 @@ def check_chaos(d: dict) -> None:
           f"{d['chaos_kill_recovery_latency_mean_s'] * 1e3:.1f} ms sim")
 
 
+def check_prefix(d: dict) -> None:
+    lost = d["prefix_tokens_lost"]
+    assert lost == 0, (
+        f"{lost} tokens diverged from the cache-off twin — prefix "
+        f"sharing is no longer exact")
+    points = d["prefix"]["points"]
+    for p in points.values():
+        assert p["tokens_lost"] == 0, p
+        if p["share_ratio"] >= 0.5:
+            assert p["prefill_flops_saved"] > 0, (
+                f"no prefill compute saved at share ratio "
+                f"{p['share_ratio']} — the trie stopped matching")
+    ordered = sorted(points.values(), key=lambda p: p["share_ratio"])
+    lo, hi = ordered[0], ordered[-1]
+    assert hi["pool_occupancy_peak"] < lo["pool_occupancy_peak"], (
+        f"peak occupancy did not drop with sharing: "
+        f"{lo['pool_occupancy_peak']:.3f} @ r={lo['share_ratio']} vs "
+        f"{hi['pool_occupancy_peak']:.3f} @ r={hi['share_ratio']}")
+    print(f"prefix bench OK: 0 tokens lost over {len(points)} share "
+          f"ratios, {hi['prefill_flops_saved']:.3g} prefill FLOPs saved "
+          f"at r={hi['share_ratio']}, peak occupancy "
+          f"{lo['pool_occupancy_peak']:.3f} -> "
+          f"{hi['pool_occupancy_peak']:.3f}")
+
+
 def main(path: str, floor: float = 100.0) -> None:
     d = json.load(open(path))
+    done = False
+    if "prefix_tokens_lost" in d:
+        check_prefix(d)
+        done = True
     if "chaos_kill_goodput_ratio" in d:
         check_chaos(d)
-        if "dispatches_per_step" not in d:
-            return                       # chaos-only bench file
+        done = True
+    if done and "dispatches_per_step" not in d:
+        return                           # section-only bench file
     assert d["dispatches_per_step"] == 1.0, d["dispatches_per_step"]
     assert d["decode_tok_s"] > floor, (
         f"decode tok/s {d['decode_tok_s']:.0f} below floor {floor:.0f}")

@@ -18,6 +18,12 @@ request; import is an admission-style donated dispatch on the target
 that scatters the snapshot into a free slot and a freshly-allocated
 block table (the §6.2 address-generation/receiver step). Physical block
 ids never travel — they are device-local; only logical-layout KV does.
+With the PR 7 prefix cache, "frees" means DECREFS: blocks of the
+exported request that other requests (or the source's prefix trie)
+still reference stay live on the source, so migrating one sharer never
+invalidates its siblings' prefixes. The import side allocates fresh
+blocks as before and then publishes the migrated prompt to the
+*target's* trie, so later arrivals on the target can share it there.
 
 Because the fused decode step's token choice depends only on the KV
 bytes, the importance EMA and the cache length — never on tier tags or

@@ -178,6 +178,27 @@ def paged_gather_logical(pool: jax.Array, block_table: jax.Array
     return jnp.moveaxis(g, 3, 1).reshape(B, H, nb * bs, d)
 
 
+def gather_prefix_logical(pool: jax.Array, table_row: jax.Array,
+                          prefix_len: jax.Array) -> jax.Array:
+    """§6.2 sharer-side re-layout for prefix-cache admissions (PR 7):
+    gather one request's CACHED PREFIX — the trie-matched blocks another
+    request (or the trie alone) also references — from the shared pool
+    into the logical dense layout, zeroed past ``prefix_len``.
+
+    pool: (L, NB+1, bs, Hkv, dh); table_row: (nb,) physical ids in
+    logical order (sentinel for unmapped); prefix_len: scalar cached
+    tokens. Pure read: shared blocks are never written through this
+    path, which is what lets any number of sharers (and tier-tag
+    migrations — residency is per-request metadata) coexist on the same
+    physical bytes. Returns (L, Hkv, nb*bs, dh).
+    """
+    g = pool[:, table_row]                        # (L, nb, bs, Hkv, dh)
+    L, nb, bs, Hkv, dh = g.shape
+    seq = jnp.moveaxis(g.reshape(L, nb * bs, Hkv, dh), 1, 2)
+    live = jnp.arange(nb * bs)[None, None, :, None] < prefix_len
+    return jnp.where(live, seq, jnp.zeros((), seq.dtype))
+
+
 def paged_to_dense(pool: jax.Array, block_table: jax.Array,
                    block_size: int) -> jax.Array:
     """Re-layout: paged blocks -> contiguous dense (kernel-ready).

@@ -188,6 +188,55 @@ def attention_prefill(p: AttnParams, x: jax.Array, *, n_heads: int,
     return out, jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1)
 
 
+def attention_prefill_with_prefix(p: AttnParams, x: jax.Array,
+                                  prefix_k: jax.Array, prefix_v: jax.Array,
+                                  prefix_len: jax.Array, *, n_heads: int,
+                                  n_kv: int, d_head: int, rope_theta: float,
+                                  rms_eps: float):
+    """Suffix prefill for prefix-cache admissions (chunked-prefill core).
+
+    ``x`` holds only the NOVEL tail of a prompt whose first
+    ``prefix_len`` tokens already have cache-resident K/V. Queries are
+    roped at absolute positions ``prefix_len + i`` and attend over the
+    cached prefix (masked to its live length) concatenated with the
+    suffix's own causal window — by causality this reproduces exactly
+    what a from-scratch prefill would compute for these positions.
+
+    x: (B, S, d) suffix activations; prefix_k/v: (B, Hkv, P, dh)
+    logical cache layout (post-RoPE, live below ``prefix_len``);
+    prefix_len: (B,). Returns (out (B, S, d), k, v) with k/v the
+    suffix's roped K/V in cache layout (B, Hkv, S, dh) — position
+    ``prefix_len + i`` at index i, ready for the pool scatter.
+    """
+    B, S, _ = x.shape
+    positions = prefix_len[:, None] + jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, x, positions, n_heads, n_kv, d_head,
+                           rope_theta, rms_eps)
+    P = prefix_k.shape[2]
+    rep = n_heads // n_kv
+    scale = 1.0 / math.sqrt(d_head)
+    qg = jnp.moveaxis(q, 2, 1).reshape(B, n_kv, rep, S, d_head)
+    kh = jnp.moveaxis(k, 2, 1)                         # (B, Hkv, S, dh)
+    vh = jnp.moveaxis(v, 2, 1)
+    s_pre = jnp.einsum("bgrsd,bgpd->bgrsp", qg.astype(jnp.float32),
+                       prefix_k.astype(jnp.float32)) * scale
+    live = jnp.arange(P)[None, :] < prefix_len[:, None]           # (B, P)
+    s_pre = jnp.where(live[:, None, None, None, :], s_pre, -jnp.inf)
+    s_suf = jnp.einsum("bgrsd,bgtd->bgrst", qg.astype(jnp.float32),
+                       kh.astype(jnp.float32)) * scale
+    causal = jnp.arange(S)[None, :] <= jnp.arange(S)[:, None]     # (Sq, Sk)
+    s_suf = jnp.where(causal[None, None, None], s_suf, -jnp.inf)
+    pr = jax.nn.softmax(jnp.concatenate([s_pre, s_suf], axis=-1), axis=-1)
+    pr = jnp.where(jnp.isnan(pr), 0.0, pr)
+    out = jnp.einsum("bgrsp,bgpd->bgrsd", pr[..., :P],
+                     prefix_v.astype(jnp.float32)) + \
+        jnp.einsum("bgrst,bgtd->bgrsd", pr[..., P:],
+                   vh.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(B, n_heads, S, d_head)
+    out = jnp.moveaxis(out, 1, 2).reshape(B, S, n_heads * d_head)
+    return jnp.einsum("bse,ed->bsd", out, p.wo), kh, vh
+
+
 def grouped_decode_attn(q: jax.Array, k_cache: jax.Array,
                         v_cache: jax.Array, live: jax.Array,
                         scale: float | None = None

@@ -411,6 +411,68 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
     return logits, cache._replace(lengths=lens)
 
 
+def prefill_suffix(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                   prefix_k: jax.Array, prefix_v: jax.Array,
+                   prefix_len: jax.Array, *,
+                   true_len: jax.Array | None = None
+                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Suffix-only prefill for prefix-cache admissions (PR 7).
+
+    Processes only the NOVEL tail of a prompt whose first ``prefix_len``
+    tokens already have cache-resident K/V (gathered from the paged pool
+    through the sharer's block table). By causality the result is
+    exactly what a from-scratch prefill would produce for the suffix
+    positions — zero compute for the shared prefix is the whole point.
+
+    tokens: (B, S) suffix tokens, right-padded to a bucket;
+    prefix_k/v: (L, B, Hkv, P, dh) logical layout, live below
+    ``prefix_len`` (zeros past it — masked inside attention anyway);
+    prefix_len: (B,) cached tokens per row; true_len: real suffix
+    length per row (``None`` = all of S).
+
+    Returns (logits at the last real suffix token (B, V), suffix K/V
+    (L, B, Hkv, S, dh)). GQA-cache families only — the same constraint
+    as the paged pool itself.
+    """
+    if not (cfg.family == "dense"
+            or (cfg.family == "moe" and cfg.mla is None)):
+        raise ValueError(
+            f"suffix prefill needs a token-only GQA cache; family "
+            f"{cfg.family} is not supported")
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    plen = jnp.broadcast_to(jnp.asarray(prefix_len, jnp.int32), (B,))
+    if true_len is None:
+        slen = jnp.full((B,), S, jnp.int32)
+    else:
+        slen = jnp.broadcast_to(jnp.asarray(true_len, jnp.int32), (B,))
+
+    def body(carry, inp):
+        h = carry
+        layer, pk_l, pv_l = inp
+        hn = rms_norm(h, layer["ln1"], cfg.rms_eps)
+        attn_out, k, v = attn_mod.attention_prefill_with_prefix(
+            _attn_params(layer), hn, pk_l, pv_l, plen,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            d_head=cfg.head_dim, rope_theta=cfg.rope_theta,
+            rms_eps=cfg.rms_eps)
+        h = h + attn_out
+        hn = rms_norm(h, layer["ln2"], cfg.rms_eps)
+        if cfg.moe is not None:
+            ffn, _ = moe_mod.moe_forward(_moe_params(layer), hn, cfg.moe)
+        else:
+            m = layer["mlp"]
+            ffn = swiglu(hn, m["gate"], m["up"], m["down"])
+        return h + ffn, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"],
+                                         prefix_k, prefix_v))
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    last = jnp.take_along_axis(x, (slen - 1)[:, None, None], axis=1)[:, 0]
+    return jnp.einsum("bd,dv->bv", last, head), ks, vs
+
+
 # ============================================================ decode
 class DecodeCache(NamedTuple):
     """Stacked per-layer decode state. Unused fields are size-0 arrays so

@@ -2,11 +2,11 @@
 with prefill priority, paged + tiered KV management, PAM decode loop."""
 
 from repro.serving.paged_kv import (BlockAllocator, OutOfBlocks,
-                                    PagedKVPool)
+                                    PagedKVPool, PrefixTrie)
 from repro.serving.pam_manager import PAMManager, PAMManagerConfig
 from repro.serving.engine import (PAMEngine, Request, RequestState,
                                   ServingConfig, ServingEngine)
 
 __all__ = ["BlockAllocator", "OutOfBlocks", "PagedKVPool", "PAMEngine",
-           "PAMManager", "PAMManagerConfig", "Request", "RequestState",
-           "ServingConfig", "ServingEngine"]
+           "PAMManager", "PAMManagerConfig", "PrefixTrie", "Request",
+           "RequestState", "ServingConfig", "ServingEngine"]

@@ -61,6 +61,28 @@ backpressure: requests wait (instead of erroring) until finished
 sequences free their blocks, so a pool smaller than ``max_batch``'s
 worst case overcommits gracefully.
 
+Prefix sharing (PR 7)
+---------------------
+With ``ServingConfig.prefix_cache`` the pool becomes REFCOUNTED and a
+``PrefixTrie`` keyed on token ids indexes every committed prompt's
+blocks. Admission looks up the prompt's longest cached prefix, ADOPTS
+those physical blocks into the new table (refcount +1 — zero prefill
+compute for the shared part), prefills only the novel suffix
+(``prefill_suffix`` attends over the pool-gathered prefix; exact by
+causality), and commits in one donated dispatch. A partially-filled
+shared tail block is always duplicated into a fresh block BEFORE the
+suffix scatter (copy-on-write); fully-shared interior blocks are never
+copied and never written — appends land strictly above the shared
+prefix by construction. ``free`` is a decref everywhere (finish,
+export, preemption), so shared blocks outlive any individual owner; the
+trie holds its own reference per block, which is what keeps prefixes
+cached after their publisher finishes, and LRU-evicts trie-only blocks
+under pool pressure. Tier-tag migration (Alg. 2) is per-request
+metadata, so sharers can tag the same physical block differently —
+shared bytes are never touched. Token streams are twin-exact with
+from-scratch admission (greedy and sampled — the per-request sampling
+keys don't see any of this).
+
 Hot-window ring (PR 5)
 ----------------------
 With ``ServingConfig.hot_window > 0`` the dense hot-tier buffer shrinks
@@ -103,7 +125,8 @@ from repro.models import transformer as tf
 from repro.models.config import ModelConfig
 from repro.serving import pam_manager as pm
 from repro.serving import paged_kv as pkv
-from repro.serving.paged_kv import BlockAllocator, OutOfBlocks
+from repro.serving.paged_kv import (BlockAllocator, OutOfBlocks,
+                                    PrefixTrie)
 from repro.serving.pam_manager import (PAMManager, PAMManagerConfig,
                                        init_pam_state,
                                        make_masked_decode_attn,
@@ -168,6 +191,14 @@ class ServingConfig:
     sample_seed: int = 0               # per-request sampling key seed:
     # token at position p of request rid draws from
     # fold_in(fold_in(PRNGKey(sample_seed), rid), p)
+    prefix_cache: bool = False         # trie-indexed prompt-prefix
+    # sharing over the paged pool (PR 7): admission maps a prompt's
+    # longest cached prefix onto existing physical blocks (refcounted,
+    # zero prefill compute for the shared part), prefills only the novel
+    # suffix, and copy-on-writes a partially-filled shared tail block
+    # before its first divergent write. Requires block_size > 0 and a
+    # token-only GQA family. Off by default: the engine is then
+    # bit-identical to PR 6.
 
 
 class StepBufs(NamedTuple):
@@ -448,6 +479,87 @@ def _admit_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int,
 
 
 @functools.lru_cache(maxsize=None)
+def _suffix_prefill_fn(cfg: ModelConfig, smax: int):
+    """Suffix-only prefill dispatch for prefix-cache admissions (PR 7):
+    gather the request's cached prefix from the pool THROUGH its block
+    table (the §6.2 sharer-side re-layout — a pure read of the shared
+    blocks), then run ``tf.prefill_suffix`` over just the novel tokens.
+    One dispatch; retraces per suffix bucket like ``_prefill_fn``.
+    Returns (last-token logits, suffix K/V in cache layout)."""
+    @jax.jit
+    def pre(params, tokens, pk, pv, table_row, prefix_len, true_len):
+        gk = pam_if.gather_prefix_logical(pk, table_row, prefix_len)
+        gv = pam_if.gather_prefix_logical(pv, table_row, prefix_len)
+        return tf.prefill_suffix(cfg, params, tokens, gk[:, None],
+                                 gv[:, None], prefix_len[None],
+                                 true_len=true_len)
+
+    return pre
+
+
+@functools.lru_cache(maxsize=None)
+def _trie_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int,
+                    temperature: float = 0.0, top_k: int = 0,
+                    hot_window: int = 0, seed: int = 0,
+                    cow: bool = False):
+    """ONE donated dispatch committing a prefix-cache admission:
+
+    1. ``cow``: duplicate the shared, partially-filled tail block
+       (``cow_src``, still owned by its publisher/trie) into this
+       request's fresh ``cow_dst`` BEFORE any write — the copy-on-write
+       that keeps shared blocks write-free. Fully-shared interior blocks
+       are never copied: the table maps them directly.
+    2. Scatter the novel suffix's K/V token-by-token into the request's
+       fresh blocks (pad positions routed to the sentinel trash block).
+    3. Rebuild the slot's dense hot row by gathering the FULL logical
+       sequence back through the table (shared prefix + fresh suffix),
+       re-based onto ring coordinates when ``hot_window`` is set.
+    4. Sample the first token at absolute position ``length`` under the
+       same per-request-key policy as every other dispatch, and place
+       the PAM rows + block table.
+
+    The donation/one-dispatch invariants match ``_admit_commit_fn``;
+    only the prefill feeding it got cheaper (novel tokens, not prompt
+    length)."""
+    def commit(cache, pam_state, tokens_dev, suf_k, suf_v, logits,
+               slot, length, rid, table_row, bids, sids, cow_src,
+               cow_dst):
+        pk, pv = cache.pk, cache.pv
+        if cow:
+            pk = pkv.copy_block(pk, cow_src, cow_dst)
+            pv = pkv.copy_block(pv, cow_src, cow_dst)
+        sk = jnp.moveaxis(suf_k[:, 0], 1, 2)       # (L, S, Hkv, dh)
+        sv = jnp.moveaxis(suf_v[:, 0], 1, 2)
+        pk = pk.at[:, bids, sids].set(sk)
+        pv = pv.at[:, bids, sids].set(sv)
+        gk = pkv.gather_sequence(pk, table_row)    # (L, Hkv, smax, dh)
+        gv = pkv.gather_sequence(pv, table_row)
+        live = jnp.arange(gk.shape[2])[None, None, :, None] < length
+        gk = jnp.where(live, gk, jnp.zeros((), gk.dtype))
+        gv = jnp.where(live, gv, jnp.zeros((), gv.dtype))
+        if hot_window:
+            ring_pos, valid = ring_position_map(length[None], hot_window)
+            dk = pam_if.logical_to_ring(gk, ring_pos[0], valid[0])
+            dv = pam_if.logical_to_ring(gv, ring_pos[0], valid[0])
+        else:
+            dk, dv = gk, gv
+        cache = cache._replace(
+            k=cache.k.at[:, slot].set(dk),
+            v=cache.v.at[:, slot].set(dv),
+            lengths=cache.lengths.at[slot].set(length),
+            pk=pk, pv=pv)
+        firsts = _sample_tokens(logits, seed, rid, length[None],
+                                temperature, top_k)
+        tokens_dev = tokens_dev.at[slot].set(firsts[0])
+        if pcfg is not None:
+            pam_state = pm.place_prefill_state(pcfg, pam_state, slot,
+                                               length, table_row)
+        return cache, pam_state, tokens_dev, firsts
+
+    return jax.jit(commit, donate_argnums=(0, 1, 2))
+
+
+@functools.lru_cache(maxsize=None)
 def _import_commit_fn(has_pam: bool, block_size: int,
                       hot_window: int = 0):
     """One donated dispatch per migrated-request import: install the
@@ -585,6 +697,21 @@ class ServingEngine:
             self.cache = tf.init_decode_cache(cfg, B, Smax)
             self.pam_state = init_pam_state(B, Smax)
 
+        self.trie: Optional[PrefixTrie] = None
+        if scfg.prefix_cache:
+            if not self.block_size:
+                raise ValueError("prefix_cache requires the paged pool "
+                                 "(block_size > 0): shared prefixes live "
+                                 "in refcounted blocks")
+            if cfg.family == "vlm":
+                raise ValueError("prefix_cache keys on token ids; the "
+                                 "vlm patch prefix has none")
+            self.trie = PrefixTrie(self.block_size, self.allocator)
+            self.prefix_hits = 0            # admissions with matched > 0
+            self.cached_prefix_tokens = 0   # prefill compute skipped
+            self.novel_prefill_tokens = 0   # prefill compute performed
+            self.cow_copies = 0             # tail blocks duplicated
+
         self.requests: dict[int, RequestState] = {}
         self.waiting: collections.deque[int] = collections.deque()
         self.slots: list[Optional[int]] = [None] * B
@@ -659,12 +786,31 @@ class ServingEngine:
     def _free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
+    def _reserve_fresh(self, need: int) -> None:
+        """Best-effort headroom for ``need`` fresh blocks: under pool
+        pressure, evict LRU trie-only cached prefixes (refcount 1 —
+        nothing live maps them) until the free list covers the ask.
+        Cache pressure degrades to recompute, never to failure; if live
+        requests pin everything, the caller's ``allocate`` raises
+        ``OutOfBlocks`` and normal admission backpressure applies."""
+        if self.trie is not None and need > self.allocator.free_blocks:
+            self.trie.evict(need - self.allocator.free_blocks)
+
     def _admit(self) -> int:
-        """Prefill-priority admission (paper §4.2.3). Returns prompt tokens
-        processed (for the latency model). In paged mode each admission
-        first claims pool blocks for its full window (prompt + budget);
-        an exhausted pool leaves the request queued — capacity
+        """Prefill-priority admission (paper §4.2.3). Returns prompt
+        tokens PROCESSED — with the prefix cache that is only each
+        admission's novel suffix, so the latency model's admission cost
+        scales with novel tokens, not prompt length. In paged mode each
+        admission first claims pool blocks for its full window (prompt +
+        budget); an exhausted pool leaves the request queued — capacity
         backpressure instead of failure.
+
+        With ``prefix_cache`` the prompt is first split against the trie
+        into cached-prefix + novel-suffix: the cached prefix's blocks
+        are ADOPTED (refcount +1, zero prefill compute), a partially-
+        covered tail block is pinned for copy-on-write, and only the
+        suffix is prefilled (``_commit_trie``). Unmatched admissions
+        flow through the unchanged group path below.
 
         Admissions sharing a prefill bucket are BATCHED: one bucket group
         = one prefill dispatch + one donated commit dispatch (scatter,
@@ -672,6 +818,7 @@ class ServingEngine:
         router burst of n same-length prompts costs 2 dispatches, not 2n.
         """
         admitted: list[tuple] = []     # (rid, rs, prompt, s_len, slot, row)
+        trie_admits: list[tuple] = []  # ... + (matched, cow_src)
         free = self._free_slots()
         while self.waiting and free:
             rid = self.waiting.popleft()
@@ -681,20 +828,43 @@ class ServingEngine:
             if s_len + rs.request.max_new_tokens > self.scfg.max_len:
                 raise ValueError(f"request {rid} exceeds max_len")
             table_row = None
+            matched, cow_src = 0, -1
             if self.allocator is not None:
-                need = self.allocator.blocks_for(
-                    s_len + rs.request.max_new_tokens)
+                window = s_len + rs.request.max_new_tokens
+                need = self.allocator.blocks_for(window)
                 if need > self.allocator.num_blocks:
                     # waiting would never help — fail loudly instead of
                     # starving this and every queued-behind request
                     raise ValueError(
                         f"request {rid} needs {need} blocks but the pool "
                         f"holds {self.allocator.num_blocks}")
+                shared: list[int] = []
+                if self.trie is not None:
+                    # ≥ 1 token is always recomputed (the suffix prefill
+                    # must produce first-token logits), so a full-prompt
+                    # hit caps at s_len - 1
+                    matched, ids = self.trie.lookup(prompt)
+                    matched = min(matched, s_len - 1)
+                    nfull = matched // self.block_size
+                    shared = ids[:nfull]
+                    if matched % self.block_size:
+                        cow_src = ids[nfull]
                 try:
-                    self.allocator.allocate(
-                        rid, s_len + rs.request.max_new_tokens)
+                    if shared:
+                        # adopt first: the incref shields the matched
+                        # blocks from the eviction pass below
+                        self.allocator.adopt(rid, shared)
+                    if cow_src >= 0:
+                        self.allocator.incref(cow_src)  # CoW-source pin
+                    self._reserve_fresh(need - len(shared))
+                    self.allocator.allocate(rid, window)
                 except OutOfBlocks:
-                    self.waiting.appendleft(rid)   # wait for freed blocks
+                    # roll back the adoption (decref) and the CoW pin,
+                    # then wait for freed blocks
+                    if cow_src >= 0:
+                        self.allocator.decref(cow_src)
+                    self.allocator.free(rid)
+                    self.waiting.appendleft(rid)
                     break
                 table_row = self.allocator.padded_table(
                     rid, self.scfg.max_len // self.block_size,
@@ -702,14 +872,20 @@ class ServingEngine:
                 self.peak_occupancy = max(self.peak_occupancy,
                                           self.allocator.occupancy)
             slot = free.pop(0)
-            admitted.append((rid, rs, prompt, s_len, slot, table_row))
+            if matched > 0:
+                trie_admits.append((rid, rs, prompt, s_len, slot,
+                                    matched, cow_src))
+            else:
+                admitted.append((rid, rs, prompt, s_len, slot, table_row))
 
         # group by prefill bucket, preserving admission order
         groups: dict[int, list[tuple]] = {}
         for item in admitted:
             groups.setdefault(self._bucket_len(item[3]), []).append(item)
-        return sum(self._commit_group(bucket, group)
-                   for bucket, group in groups.items())
+        total = sum(self._commit_group(bucket, group)
+                    for bucket, group in groups.items())
+        return total + sum(self._commit_trie(*item)
+                           for item in trie_admits)
 
     def _commit_group(self, bucket: int, group: list[tuple]) -> int:
         """Prefill + commit one same-bucket admission group: ONE batched
@@ -735,6 +911,14 @@ class ServingEngine:
         self.admit_dispatches += 1
         for rid, _, _, _, slot, _ in group:
             self.rids_host[slot] = rid
+        if self.trie is not None:
+            # publish AFTER the commit lands the prompts' KV in the pool
+            # (and before any EOS teardown below frees the tables): the
+            # trie takes its own refcount, so these prefixes stay cached
+            # even after their publisher finishes
+            self.novel_prefill_tokens += int(lens.sum())
+            for rid, _, prompt, _, _, _ in group:
+                self.trie.insert(prompt, self.allocator.table(rid))
         firsts = np.asarray(first_dev)
         eos = self.scfg.eos_token
         for i, (rid, rs, _, _, slot, _) in enumerate(group):
@@ -757,6 +941,87 @@ class ServingEngine:
                 if self.allocator is not None:
                     self.allocator.free(rid)
         return int(lens.sum())
+
+    def _commit_trie(self, rid: int, rs: RequestState, prompt: np.ndarray,
+                     s_len: int, slot: int, matched: int,
+                     cow_src: int) -> int:
+        """Commit one prefix-cache admission: a suffix-only prefill
+        dispatch plus ONE donated commit dispatch (CoW copy -> suffix
+        scatter -> hot-row rebuild -> first-token sample -> PAM
+        placement; see ``_trie_commit_fn``). The blocks were mapped in
+        ``_admit``: indices ``[0, matched // bs)`` of the table are
+        ADOPTED shared blocks (never written), the rest fresh. Returns
+        the novel-token count — the admission's actual prefill cost."""
+        bs = self.block_size
+        nb = self.scfg.max_len // bs
+        nfull = matched // bs
+        cow = matched % bs > 0
+        # the fresh block covering position `matched` receives the CoW
+        # duplicate of the publisher's partially-filled tail block
+        cow_dst = self.allocator.table(rid)[nfull] if cow else 0
+        t = s_len - matched
+        bucket = self._bucket_len(t)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :t] = prompt[matched:]
+        row = self.allocator.padded_table(rid, nb, self.sentinel)
+        # token-granular scatter coordinates for the suffix KV; bucket
+        # padding past the real suffix routes to the sentinel trash block
+        pos = matched + np.arange(bucket)
+        bids = np.where(np.arange(bucket) < t,
+                        row[np.minimum(pos // bs, nb - 1)],
+                        self.sentinel).astype(np.int32)
+        sids = (pos % bs).astype(np.int32)
+        row_dev = jnp.asarray(row)
+        # READ view of the table for the prefix gather: the prefix's
+        # tail positions live in the publisher's cow_src until the
+        # commit dispatch duplicates it into cow_dst — the prefill runs
+        # first, so it must read through the source block
+        read_row = row.copy()
+        if cow:
+            read_row[nfull] = cow_src
+        pre = _suffix_prefill_fn(self.cfg, self.scfg.max_len)
+        logits, suf_k, suf_v = pre(self.params, jnp.asarray(padded),
+                                   self.cache.pk, self.cache.pv,
+                                   jnp.asarray(read_row),
+                                   jnp.int32(matched), jnp.int32(t))
+        self.prefill_dispatches += 1
+        fn = _trie_commit_fn(self.pam_cfg, bs, self.scfg.temperature,
+                             self.scfg.top_k, self.hot_window,
+                             self.scfg.sample_seed, cow)
+        (self.cache, self.pam_state, self.tokens_dev, first_dev) = fn(
+            self.cache, self.pam_state, self.tokens_dev, suf_k, suf_v,
+            logits, jnp.int32(slot), jnp.int32(s_len),
+            jnp.asarray(np.array([rid], np.uint32)), row_dev,
+            jnp.asarray(bids), jnp.asarray(sids),
+            jnp.int32(max(cow_src, 0)), jnp.int32(cow_dst))
+        self.admit_dispatches += 1
+        if cow:
+            # the dispatch reading cow_src is enqueued; device ordering
+            # makes any later reuse of the block safe — release the pin
+            self.allocator.decref(cow_src)
+            self.cow_copies += 1
+        self.prefix_hits += 1
+        self.cached_prefix_tokens += matched
+        self.novel_prefill_tokens += t
+        self.rids_host[slot] = rid
+        # publish this prompt too (suffix blocks now hold its KV) —
+        # before any EOS teardown below frees the table
+        self.trie.insert(prompt, self.allocator.table(rid))
+        tok = int(np.asarray(first_dev)[0])
+        eos = self.scfg.eos_token
+        rs.status, rs.slot = RUNNING, slot
+        rs.outputs.append(tok)
+        rs.planned = 1
+        rs.first_token_time = None
+        self.slots[slot] = rid
+        if (eos >= 0 and tok == eos) or rs.request.max_new_tokens <= 1:
+            rs.status = DONE
+            rs.first_token_time = self.clock
+            rs.token_times = [self.clock]
+            rs.finish_time = self.clock
+            self.slots[slot] = None
+            self.allocator.free(rid)
+        return t
 
     # ------------------------------------------------------------ stepping
     def step(self) -> dict[str, Any]:
@@ -1090,8 +1355,11 @@ class ServingEngine:
             "arrival": rs.request.arrival,
             "src": self.name,
         }
-        # free-without-finish: slot and blocks recycle; the request's
-        # only live copy is now the snapshot
+        # free-without-finish: the slot recycles and the request's
+        # reference on each block DECREFS — with prefix sharing, blocks
+        # another live request or the trie also maps survive the export
+        # untouched (their bytes stay valid for every remaining sharer);
+        # the migrating request's only live copy is now the snapshot
         self.slots[slot] = None
         if self.allocator is not None:
             self.allocator.free(rid)
@@ -1119,6 +1387,10 @@ class ServingEngine:
         window = len(req.prompt) + req.max_new_tokens
         table_row = None
         if self.allocator is not None:
+            # physical ids never travel: the import always allocates
+            # fresh blocks here (no cross-device sharing); trie-only
+            # cached prefixes yield first under pressure
+            self._reserve_fresh(self.allocator.blocks_for(window))
             self.allocator.allocate(req.id, window)   # may raise OutOfBlocks
             table_row = self.allocator.padded_table(
                 req.id, self.scfg.max_len // self.block_size, self.sentinel)
@@ -1150,6 +1422,11 @@ class ServingEngine:
         self.requests[req.id] = rs
         self.slots[slot] = req.id
         self.rids_host[slot] = req.id
+        if self.trie is not None:
+            # the imported row holds the prompt's KV at its prompt
+            # positions — publish it so later arrivals share it here too
+            self.trie.insert(np.asarray(req.prompt, np.int32),
+                             self.allocator.table(req.id))
         self.migrations_in += 1
 
     # ----------------------------------------- suspend / resume (recovery)
@@ -1203,6 +1480,13 @@ class ServingEngine:
             out["hot_bytes_per_slot"] = int(
                 (self.cache.k.nbytes + self.cache.v.nbytes)
                 // self.scfg.max_batch)
+        if self.trie is not None:
+            out["prefix_hits"] = self.prefix_hits
+            out["cached_prefix_tokens"] = self.cached_prefix_tokens
+            out["novel_prefill_tokens"] = self.novel_prefill_tokens
+            out["cow_copies"] = self.cow_copies
+            out["trie_blocks"] = self.trie.num_blocks
+            out["trie_evictions"] = self.trie.evictions
         return out
 
     def slo_attainment(self, slo_s: float) -> float:

@@ -37,3 +37,20 @@ except ImportError:                                           # pragma: no cover
             return lambda *a, **k: None
 
     st = _AnyStrategy()
+
+
+# ------------------------------------------- PR 7 interleaving corpus
+def seed_corpus(n=200, base=0):
+    """Deterministic seed list for randomized drivers (e.g. the
+    prefix-sharing interleaving suite): the driver function takes one
+    integer seed, pytest parametrizes it over this corpus so the suite
+    runs everywhere, and — when hypothesis is installed —
+    ``@given(interleaving_seed)`` explores (and shrinks) arbitrary seeds
+    through the SAME driver."""
+    return list(range(base, base + n))
+
+
+# Strategy for the hypothesis-side exploration of the same drivers; a
+# stub (never drawn) when hypothesis is absent and @given degrades to a
+# skipped test.
+interleaving_seed = st.integers(min_value=0, max_value=2**32 - 1)

@@ -1,0 +1,86 @@
+"""Shared fixtures and builders for the test suite (PR 7).
+
+The expensive per-module setup every engine test repeats is building a
+reduced model config and initialising its params; ``build_model`` caches
+that per ``(arch, seed)`` for the whole pytest process, so modules (and
+the fixtures below) share one copy of the deterministic weights instead
+of re-deriving them at import time. ``make_pam`` / ``make_engine`` /
+``make_requests`` are the common factories — callers pass their policy
+numbers explicitly because twin-exactness tests depend on the exact PAM
+policy, which must therefore never drift behind a default change.
+"""
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.models import transformer as tf  # noqa: E402
+from repro.models.config import get_config, reduced  # noqa: E402
+from repro.serving import (PAMManagerConfig, Request,  # noqa: E402
+                           ServingConfig, ServingEngine)
+
+_MODELS: dict = {}
+
+
+def build_model(arch="qwen3-0.6b", seed=0):
+    """(cfg, params) for a reduced ``arch``, cached per (arch, seed)
+    across the whole pytest process."""
+    key = (arch, seed)
+    if key not in _MODELS:
+        cfg = reduced(get_config(arch))
+        _MODELS[key] = (cfg,
+                        tf.init_params(cfg, jax.random.PRNGKey(seed)))
+    return _MODELS[key]
+
+
+def make_pam(max_len=64, hot=8, warm=16, compression=4, recency_window=4,
+             schedule_interval=2, **kw):
+    """PAMManagerConfig with the test suite's spelled-out policy knobs."""
+    return PAMManagerConfig(max_tokens=max_len, hot_capacity=hot,
+                            warm_capacity=warm, compression=compression,
+                            recency_window=recency_window,
+                            schedule_interval=schedule_interval, **kw)
+
+
+def make_engine(cfg, params, *, pam=None, name="dev", latency=None,
+                **scfg_kw):
+    """ServingEngine from explicit serving-config kwargs. ``pam`` is a
+    ready PAMManagerConfig (or None for the dense baseline)."""
+    scfg = ServingConfig(pam=pam, **scfg_kw)
+    return ServingEngine(cfg, params, scfg, latency_model=latency,
+                         name=name)
+
+
+def make_requests(n, vocab, plen=16, max_new=12, seed=0, arrivals=False,
+                  first_id=0):
+    """n deterministic requests with rng(seed) prompts. Arrival times
+    (Poisson, 1ms mean gap) are only drawn when asked for, so the prompt
+    stream for a given seed is identical either way."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for i in range(n):
+        if arrivals:
+            t += float(rng.exponential(0.001))
+        out.append(Request(id=first_id + i,
+                           prompt=rng.integers(0, vocab, plen),
+                           max_new_tokens=max_new,
+                           arrival=t if arrivals else 0.0))
+    return out
+
+
+@pytest.fixture(scope="session")
+def qwen_model():
+    """Process-cached reduced qwen3-0.6b (cfg, params) — the default
+    engine-test model."""
+    return build_model("qwen3-0.6b")
+
+
+@pytest.fixture(scope="session")
+def llama_model():
+    """Process-cached reduced pam-llama-7b (cfg, params) — the paper's
+    headline GQA config, used by the ring-buffer suite."""
+    return build_model("pam-llama-7b")

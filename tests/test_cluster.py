@@ -11,29 +11,25 @@ import jax
 import numpy as np
 import pytest
 
+from conftest import build_model, make_pam
+
 from repro.cluster import (BalancerConfig, KVBalancer, KVSnapshot,
                            build_cluster, can_migrate, migrate)
-from repro.models import transformer as tf
-from repro.models.config import get_config, reduced
 from repro.perfmodel.devices import (CXL_CLASS, HBM_CLASS, DeviceClass,
                                      get_device_class,
                                      make_device_latency_model,
                                      parse_devices, step_time_prior)
-from repro.serving import (PAMManagerConfig, Request, ServingConfig,
-                           ServingEngine)
+from repro.serving import Request, ServingConfig, ServingEngine
 from repro.serving.paged_kv import OutOfBlocks
 
 jax.config.update("jax_platform_name", "cpu")
 
 
-_CFG = reduced(get_config("qwen3-0.6b"))
-_PARAMS = tf.init_params(_CFG, jax.random.PRNGKey(0))
+_CFG, _PARAMS = build_model("qwen3-0.6b")
 
 
 def _pam(max_len=64):
-    return PAMManagerConfig(max_tokens=max_len, hot_capacity=4,
-                            warm_capacity=8, compression=4,
-                            recency_window=2, schedule_interval=2)
+    return make_pam(max_len=max_len, hot=4, warm=8, recency_window=2)
 
 
 def _engine(name="dev", max_batch=3, max_len=64, block_size=8, pool=None,

@@ -13,25 +13,21 @@ import jax
 import numpy as np
 import pytest
 
+from conftest import build_model, make_pam, make_requests
+
 from repro.cluster import (FaultEvent, FaultInjector, KVSnapshot,
                            RecoveryConfig, RecoveryManager,
                            SnapshotCorruption, build_cluster, parse_chaos)
-from repro.models import transformer as tf
-from repro.models.config import get_config, reduced
 from repro.perfmodel.devices import CXL_CLASS, HBM_CLASS
-from repro.serving import (PAMManagerConfig, Request, ServingConfig,
-                           ServingEngine)
+from repro.serving import Request, ServingConfig, ServingEngine
 
 jax.config.update("jax_platform_name", "cpu")
 
-_CFG = reduced(get_config("qwen3-0.6b"))
-_PARAMS = tf.init_params(_CFG, jax.random.PRNGKey(0))
+_CFG, _PARAMS = build_model("qwen3-0.6b")
 
 
 def _pam(max_len=64):
-    return PAMManagerConfig(max_tokens=max_len, hot_capacity=4,
-                            warm_capacity=8, compression=4,
-                            recency_window=2, schedule_interval=2)
+    return make_pam(max_len=max_len, hot=4, warm=8, recency_window=2)
 
 
 def _scfg(**kw):
@@ -40,10 +36,8 @@ def _scfg(**kw):
 
 
 def _requests(n, plen=16, max_new=12, seed=0):
-    rng = np.random.default_rng(seed)
-    return [Request(id=i, prompt=rng.integers(0, _CFG.vocab, plen),
-                    max_new_tokens=max_new, arrival=0.0)
-            for i in range(n)]
+    return make_requests(n, _CFG.vocab, plen=plen, max_new=max_new,
+                         seed=seed)
 
 
 def _twin_streams(reqs, **scfg_kw):

@@ -16,8 +16,9 @@ import pytest
 from repro.core import pam_interface, tiers
 from repro.core.tiers import COLD, HOT, WARM
 from repro.kernels import ops as kops
+from conftest import build_model, make_pam
+
 from repro.models import transformer as tf
-from repro.models.config import get_config, reduced
 from repro.serving import (BlockAllocator, OutOfBlocks, PAMManagerConfig,
                            Request, ServingConfig, ServingEngine)
 
@@ -151,11 +152,8 @@ def test_allocator_reuse_after_free():
 # ---------------------------------------------------------- serving engine
 def _engine(block_size=0, pool_blocks=None, micro_steps=1, max_batch=3,
             max_len=64, hot=4, warm=8, seed=0):
-    cfg = reduced(get_config("qwen3-0.6b"))
-    params = tf.init_params(cfg, jax.random.PRNGKey(seed))
-    pam = PAMManagerConfig(max_tokens=max_len, hot_capacity=hot,
-                           warm_capacity=warm, compression=4,
-                           recency_window=2, schedule_interval=2)
+    cfg, params = build_model("qwen3-0.6b", seed=seed)
+    pam = make_pam(max_len=max_len, hot=hot, warm=warm, recency_window=2)
     return cfg, ServingEngine(cfg, params, ServingConfig(
         max_batch=max_batch, max_len=max_len, pam=pam,
         micro_steps=micro_steps, block_size=block_size,
@@ -243,8 +241,7 @@ def test_paged_capacity_backpressure_and_reuse():
 
 
 def test_paged_config_validation():
-    cfg = reduced(get_config("qwen3-0.6b"))
-    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    cfg, params = build_model("qwen3-0.6b")
     with pytest.raises(ValueError):   # paged requires PAM tiers
         ServingEngine(cfg, params, ServingConfig(
             max_batch=2, max_len=64, block_size=8))
@@ -273,14 +270,13 @@ def test_unservable_request_fails_loudly():
 def test_paged_cache_requires_append_coords():
     """decode_step refuses a paged cache without append coordinates —
     a silent dense fall-back would desync the pool mirror."""
-    cfg = reduced(get_config("qwen3-0.6b"))
-    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    cfg, params = build_model("qwen3-0.6b")
     cache = tf.init_decode_cache(cfg, 2, 32, paged_blocks=8, block_size=8)
     with pytest.raises(ValueError):
         tf.decode_step(cfg, params, jnp.zeros((2,), jnp.int32), cache)
 
 
 def test_init_decode_cache_rejects_paged_for_cacheless_family():
-    cfg = reduced(get_config("mamba2-780m"))
+    cfg = build_model("mamba2-780m")[0]
     with pytest.raises(ValueError):
         tf.init_decode_cache(cfg, 2, 32, paged_blocks=8, block_size=8)

@@ -1,0 +1,469 @@
+"""Prefix-sharing copy-on-write block pool (PR 7).
+
+Two co-equal halves:
+
+* a property-based invariant suite — 200+ seeded random interleavings
+  of admit / fork / decode-append / finish / migrate / evict against a
+  host-level content oracle, asserting refcount conservation
+  (``BlockAllocator.check_refcounts``), no-write-to-shared (every KV
+  write targets a block whose sole table reference is the writer), and
+  content exactness (every live request's mapped blocks spell exactly
+  its token stream; every trie entry spells exactly its key);
+
+* engine twin-exactness — a trie-admitted request (zero prefill compute
+  for the shared prefix, CoW on the divergent tail) emits a token
+  stream IDENTICAL to the same request served with the cache off, for
+  greedy, sampled, and micro-batched decode, and across a mid-decode
+  migration — plus the capacity half: shared admissions fit where
+  unshared cannot (pool occupancy < sum of table lengths), pressure
+  evicts trie-only blocks instead of failing.
+"""
+
+import jax
+import numpy as np
+import pytest
+from _hyp import given, interleaving_seed, seed_corpus, settings
+from conftest import build_model, make_pam
+
+from repro.cluster import can_migrate, migrate
+from repro.serving import (BlockAllocator, OutOfBlocks, PrefixTrie,
+                           Request, ServingConfig, ServingEngine)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------- allocator refcounts
+def test_adopt_shares_and_free_decrefs():
+    alloc = BlockAllocator(num_blocks=8, block_size=4)
+    t0 = alloc.allocate(0, 12)                      # 3 fresh blocks
+    alloc.adopt(1, t0[:2])                          # share 2 of them
+    alloc.allocate(1, 12)                           # + 1 fresh
+    assert alloc.refcount[t0[0]] == 2
+    assert alloc.used_blocks == 4                   # NOT 3 + 3
+    assert alloc.used_blocks < sum(len(t) for t in alloc.tables.values())
+    assert alloc.free(0) == 1                       # only the unshared one
+    assert alloc.refcount[t0[0]] == 1               # still live via seq 1
+    assert alloc.free(1) == 3
+    assert alloc.free_blocks == 8
+    assert alloc.check_refcounts()
+
+
+def test_free_unknown_is_noop_and_double_decref_raises():
+    alloc = BlockAllocator(num_blocks=4, block_size=4)
+    assert alloc.free(99) == 0                      # unknown: explicit no-op
+    tbl = alloc.allocate(0, 4)
+    assert alloc.free(0) == 1
+    assert alloc.free(0) == 0                       # second free: no-op
+    with pytest.raises(ValueError, match="double free"):
+        alloc.decref(tbl[0])                        # raw double-free: loud
+    with pytest.raises(ValueError):
+        alloc.incref(tbl[0])                        # free block can't gain refs
+    assert alloc.check_refcounts()
+
+
+def test_admit_shared_is_atomic_under_out_of_blocks():
+    alloc = BlockAllocator(num_blocks=4, block_size=4)
+    t0 = alloc.allocate(0, 8)
+    before = (dict(alloc.refcount), alloc.free_blocks)
+    with pytest.raises(OutOfBlocks):
+        alloc.admit_shared(1, t0, 9 * 4)            # needs 7 fresh > 2 free
+    assert (dict(alloc.refcount), alloc.free_blocks) == before
+    assert 1 not in alloc.tables                    # nothing half-mapped
+    assert alloc.check_refcounts()
+
+
+def test_backpressure_accounts_shared_blocks_once():
+    """OutOfBlocks triggers on PHYSICAL occupancy, not on the sum of
+    table lengths — sharing buys real admission headroom."""
+    alloc = BlockAllocator(num_blocks=6, block_size=4)
+    t0 = alloc.allocate(0, 16)                      # 4 blocks
+    alloc.admit_shared(1, t0[:3], 16)               # 3 shared + 1 fresh
+    assert sum(len(t) for t in alloc.tables.values()) == 8 > 6
+    assert alloc.used_blocks == 5 and alloc.free_blocks == 1
+    with pytest.raises(OutOfBlocks):
+        alloc.allocate(2, 8)                        # 2 fresh > 1 free
+    alloc.allocate(2, 4)                            # 1 fresh still fits
+    assert alloc.check_refcounts()
+
+
+def test_checker_catches_corruption():
+    """check_refcounts is a real oracle: seeded corruptions trip it."""
+    alloc = BlockAllocator(num_blocks=4, block_size=4)
+    alloc.allocate(0, 8)
+    assert alloc.check_refcounts()
+    alloc.refcount[alloc.table(0)[0]] += 1          # phantom reference
+    assert not alloc.check_refcounts()
+    alloc.refcount[alloc.table(0)[0]] -= 1
+    alloc.tables[0].append(alloc.tables[0][0])      # double mapping
+    assert not alloc.check_refcounts()
+    alloc.tables[0].pop()
+    alloc._free.append(alloc.table(0)[1])           # freed while referenced
+    assert not alloc.check_refcounts()
+
+
+# --------------------------------------------------------- prefix trie
+def _mk(num_blocks=32, bs=4):
+    alloc = BlockAllocator(num_blocks, bs)
+    return alloc, PrefixTrie(bs, alloc)
+
+
+def test_trie_roundtrip_full_and_partial():
+    alloc, trie = _mk()
+    toks = list(range(10))                          # 2 full blocks + 2 tail
+    tbl = alloc.allocate(0, 10 + 4)
+    assert trie.insert(toks, tbl) == 3              # 2 full + 1 partial
+    m, ids = trie.lookup(toks)
+    assert m == 10 and ids == tbl[:3]
+    m, ids = trie.lookup(toks[:6])                  # 1 full + partial lcp 2
+    assert m == 6 and ids == tbl[:2]
+    m, ids = trie.lookup([99] + toks)               # shifted: no match
+    assert m == 0 and ids == []
+    # trie holds one pin per indexed block: publisher finishing keeps KV
+    alloc.free(0)
+    assert alloc.used_blocks == 3
+    assert alloc.check_refcounts(trie.block_refs())
+
+
+def test_trie_eviction_is_lru_leaf_first_and_respects_sharers():
+    alloc, trie = _mk(num_blocks=8)
+    a = list(range(8))                              # 2 full blocks
+    b = list(range(4)) + [9, 9, 9, 9]               # shares block 0 path
+    trie.insert(a, alloc.allocate(0, 8))
+    trie.insert(b, alloc.allocate(1, 8))            # publishes 1 new block
+    alloc.free(0)
+    # seq 1 still live: its published leaf (rc 2) must survive eviction,
+    # and the shared interior node (b's path runs through it) must too —
+    # even though its block is now trie-only
+    touched, _ = trie.lookup(a)                     # a's leaf is now MRU
+    assert touched == 8
+    freed = trie.evict(10)                          # drain what's legal
+    assert freed == 1                               # only a's leaf block
+    m, _ = trie.lookup(b)
+    assert m == 8                                   # pinned path intact
+    m, _ = trie.lookup(a)
+    assert m == 4                                   # interior node survives
+    assert alloc.check_refcounts(trie.block_refs())
+
+
+def test_trie_interior_nodes_survive_leaf_eviction():
+    alloc, trie = _mk(num_blocks=8)
+    toks = list(range(12))                          # chain of 3 full blocks
+    trie.insert(toks, alloc.allocate(0, 12))
+    alloc.free(0)
+    assert trie.evict(1) == 1                       # only the LEAF goes
+    m, _ = trie.lookup(toks)
+    assert m == 8                                   # prefix still contiguous
+    assert alloc.check_refcounts(trie.block_refs())
+
+
+# ---------------------------------------- property: random interleavings
+def _drive_interleaving(seed, steps=40):
+    """Host-model mirror of the engine's admission/CoW protocol, driven
+    by one rng seed; asserts the full invariant set after every op."""
+    rng = np.random.default_rng(seed)
+    bs = 4
+    alloc = BlockAllocator(num_blocks=24, block_size=bs)
+    trie = PrefixTrie(bs, alloc)
+    content: dict[int, list] = {}        # physical block -> slot tokens
+    live: dict[int, dict] = {}           # rid -> {toks, prompt_len, window}
+    past: list[list[int]] = []           # prompts seen (fork targets)
+    next_rid = [0]
+    prefixes = [list(map(int, rng.integers(0, 5, 8))) for _ in range(3)]
+
+    def table_refs(b):
+        return alloc.refcount.get(b, 0) - trie.block_refs().get(b, 0)
+
+    def write(rid, p, tok):
+        b = alloc.table(rid)[p // bs]
+        assert table_refs(b) == 1, \
+            f"write to shared block {b} (rid {rid}, pos {p})"
+        c = content.setdefault(b, [])
+        while len(c) <= p % bs:
+            c.append(None)
+        c[p % bs] = tok
+
+    def admit(toks, *, via_trie=True):
+        rid = next_rid[0]
+        next_rid[0] += 1
+        window = len(toks) + int(rng.integers(1, 9))
+        if alloc.blocks_for(window) > alloc.num_blocks:
+            return
+        if via_trie:
+            matched, ids = trie.lookup(toks)
+            matched = min(matched, len(toks) - 1)
+        else:
+            matched, ids = 0, []         # migration import: all fresh
+        nfull = matched // bs
+        shared, cow = ids[:nfull], matched % bs > 0
+        cow_src = ids[nfull] if cow else -1
+        try:                             # engine's admission order
+            alloc.adopt(rid, shared)
+            if cow:
+                alloc.incref(cow_src)    # pin across eviction
+            need = alloc.blocks_for(window) - len(shared)
+            if need > alloc.free_blocks:
+                trie.evict(need - alloc.free_blocks)
+            alloc.allocate(rid, window)
+        except OutOfBlocks:              # backpressure: full rollback
+            if cow:
+                alloc.decref(cow_src)
+            alloc.free(rid)
+            assert alloc.check_refcounts(trie.block_refs())
+            return
+        tbl = alloc.table(rid)
+        for b in tbl[len(shared):]:
+            content[b] = []              # fresh blocks start blank
+        if cow:                          # duplicate BEFORE first write
+            content[tbl[nfull]] = list(content[cow_src])
+            alloc.decref(cow_src)        # pin released after the copy
+        for p in range(matched, len(toks)):
+            write(rid, p, toks[p])       # suffix prefill scatter
+        trie.insert(toks, tbl)           # publish after commit
+        live[rid] = {"toks": list(toks), "prompt": len(toks),
+                     "window": window}
+        past.append(list(toks))
+
+    def check_all():
+        assert alloc.check_refcounts(trie.block_refs())
+        for rid, info in live.items():
+            tbl = alloc.table(rid)
+            got = [content[tbl[p // bs]][p % bs]
+                   for p in range(len(info["toks"]))]
+            assert got == info["toks"], f"rid {rid} content diverged"
+        stack = [trie.root]
+        while stack:                     # every trie entry spells its key
+            node = stack.pop()
+            for key, child in node.children.items():
+                assert content[child.block][:bs] == list(key)
+                stack.append(child)
+            for key, entry in node.partials.items():
+                assert content[entry[0]][:len(key)] == list(key)
+
+    for _ in range(steps):
+        op = rng.choice(["admit", "fork", "append", "finish", "migrate",
+                         "evict"], p=[.3, .2, .25, .1, .08, .07])
+        if op == "admit":
+            pre = prefixes[rng.integers(len(prefixes))]
+            toks = pre + list(map(int, rng.integers(0, 5,
+                                                    rng.integers(1, 9))))
+            admit(toks)
+        elif op == "fork" and past:
+            admit(list(past[rng.integers(len(past))]))  # exact duplicate
+        elif op == "append" and live:
+            rid = int(rng.choice(sorted(live)))
+            info = live[rid]
+            if len(info["toks"]) < info["window"]:
+                tok = int(rng.integers(0, 5))
+                info["toks"].append(tok)
+                write(rid, len(info["toks"]) - 1, tok)
+        elif op == "finish" and live:
+            rid = int(rng.choice(sorted(live)))
+            alloc.free(rid)
+            del live[rid]
+        elif op == "migrate" and live:
+            rid = int(rng.choice(sorted(live)))
+            info = live.pop(rid)
+            alloc.free(rid)              # export: free-without-finish
+            nrid = next_rid[0]
+            next_rid[0] += 1
+            need = alloc.blocks_for(info["window"])
+            if need > alloc.free_blocks:
+                trie.evict(need - alloc.free_blocks)
+            try:                         # import: fresh blocks only
+                alloc.allocate(nrid, info["window"])
+            except OutOfBlocks:
+                check_all()
+                continue
+            for b in alloc.table(nrid):
+                content[b] = []
+            for p, tok in enumerate(info["toks"]):
+                write(nrid, p, tok)      # snapshot scatter
+            trie.insert(info["toks"][:info["prompt"]],
+                        alloc.table(nrid))
+            live[nrid] = info
+        elif op == "evict":
+            trie.evict(int(rng.integers(1, 4)))
+        check_all()
+    for rid in sorted(live):             # drain
+        alloc.free(rid)
+    assert alloc.check_refcounts(trie.block_refs())
+    trie.evict(alloc.num_blocks)
+    assert alloc.free_blocks == alloc.num_blocks   # nothing leaked
+
+
+@pytest.mark.parametrize("seed", seed_corpus(220))
+def test_interleaving_invariants(seed):
+    """220 seeded random interleavings through the host model — the
+    always-on half of the property suite."""
+    _drive_interleaving(seed)
+
+
+@settings(max_examples=60, deadline=None)
+@given(interleaving_seed)
+def test_interleaving_invariants_hypothesis(seed):
+    """Hypothesis exploration (and shrinking) of the same driver."""
+    _drive_interleaving(seed)
+
+
+# -------------------------------------------------- engine twin tests
+def _pam():
+    return make_pam(max_len=64, hot=16, warm=24)
+
+
+def _eng(model, *, prefix_cache, name="dev", max_batch=2, pool=None, **kw):
+    cfg, params = model
+    scfg = ServingConfig(max_batch=max_batch, max_len=64, pam=_pam(),
+                         block_size=8, prefix_cache=prefix_cache,
+                         pool_blocks=pool, **kw)
+    return ServingEngine(cfg, params, scfg, name=name)
+
+
+def _shared_prompts(vocab, seed=7):
+    """1-3 share a 20-token prefix (distinct 6-token tails), 4 is an
+    exact duplicate of 1 (forces a CoW admission), 5 is unrelated."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, vocab, 20)
+    p = {i: np.concatenate([shared, rng.integers(0, vocab, 6)])
+         for i in (1, 2, 3)}
+    p[4] = p[1].copy()
+    p[5] = rng.integers(0, vocab, 5)
+    return p
+
+
+@pytest.mark.parametrize("mode", ["greedy", "sampled", "micro"])
+def test_twin_exactness_staggered(qwen_model, mode):
+    """Trie-admitted requests (staggered waves: later arrivals hit the
+    prefixes earlier ones published, incl. one CoW fork) emit token
+    streams IDENTICAL to the cache-off engine."""
+    kw = {"sampled": dict(temperature=0.8, top_k=8, sample_seed=3),
+          "micro": dict(micro_steps=8)}.get(mode, {})
+    prompts = _shared_prompts(qwen_model[0].vocab)
+    streams = {}
+    for cache in (False, True):
+        eng = _eng(qwen_model, prefix_cache=cache, **kw)
+        for i in sorted(prompts):
+            eng.submit(Request(id=i, prompt=prompts[i], max_new_tokens=10))
+        s = eng.run()
+        streams[cache] = {i: eng.requests[i].outputs for i in prompts}
+        if cache:
+            assert eng.allocator.check_refcounts(eng.trie.block_refs())
+            assert s["prefix_hits"] > 0 and s["cow_copies"] > 0
+            assert s["cached_prefix_tokens"] > 0
+            assert s["novel_prefill_tokens"] < sum(
+                len(p) for p in prompts.values())
+    assert streams[True] == streams[False]
+
+
+def test_twin_exactness_across_migration(qwen_model):
+    """A trie-admitted (CoW) request migrated mid-decode continues its
+    exact stream on the target; refcounts stay conserved on BOTH pools
+    and the import republishes the prompt to the target's trie."""
+    cfg, _ = qwen_model
+    rng = np.random.default_rng(11)
+    prompts = {0: rng.integers(0, cfg.vocab, 26), 2: rng.integers(0, cfg.vocab, 12)}
+    prompts[1] = prompts[0].copy()
+    twin = _eng(qwen_model, prefix_cache=False, max_batch=3, name="twin")
+    for i in sorted(prompts):
+        twin.submit(Request(id=i, prompt=prompts[i], max_new_tokens=12))
+    twin.run()
+
+    src = _eng(qwen_model, prefix_cache=True, name="src")
+    dst = _eng(qwen_model, prefix_cache=True, name="dst")
+    for i in [0, 2, 1]:                   # duplicate arrives in wave 2
+        src.submit(Request(id=i, prompt=prompts[i], max_new_tokens=12))
+    while not (1 in src.requests
+               and src.requests[1].status == "running"):
+        src.step()
+    src.step()                            # mid-decode on the CoW request
+    assert src.prefix_hits > 0 and src.cow_copies > 0
+    assert can_migrate(src, dst, 1)
+    migrate(src, dst, 1)
+    assert src.allocator.check_refcounts(src.trie.block_refs())
+    while any(s is not None for s in src.slots) or src.waiting:
+        src.step()
+    while any(s is not None for s in dst.slots) or dst.waiting:
+        dst.step()
+    for rid in prompts:
+        eng = dst if rid == 1 else src
+        assert eng.requests[rid].outputs == twin.requests[rid].outputs, rid
+    assert dst.trie.num_blocks > 0        # import published the prompt
+    assert dst.allocator.check_refcounts(dst.trie.block_refs())
+
+
+def test_shared_admission_fits_where_unshared_cannot(qwen_model):
+    """Capacity half of the tentpole: a 6-block pool serves a 24-token
+    prompt (4-block window) AND its duplicate CONCURRENTLY only with
+    the prefix cache — occupancy counts shared blocks once — while the
+    cache-off engine must serialize them. Streams stay twin-exact."""
+    cfg, _ = qwen_model
+    rng = np.random.default_rng(5)
+    prompts = {0: rng.integers(0, cfg.vocab, 24)}
+    prompts[1] = prompts[0].copy()
+    ref = _eng(qwen_model, prefix_cache=False, max_batch=2, name="ref")
+    for i in sorted(prompts):
+        ref.submit(Request(id=i, prompt=prompts[i], max_new_tokens=8))
+    ref.run()
+
+    both_running = {}
+    streams = {}
+    for cache in (False, True):
+        eng = _eng(qwen_model, prefix_cache=cache, pool=6, name="tight")
+        for i in sorted(prompts):
+            eng.submit(Request(id=i, prompt=prompts[i], max_new_tokens=8))
+        seen = False
+        while any(s is not None for s in eng.slots) or eng.waiting:
+            eng.step()
+            running = sum(s is not None for s in eng.slots)
+            if running == 2:
+                seen = True
+                assert eng.allocator.used_blocks < sum(
+                    len(t) for t in eng.allocator.tables.values())
+        both_running[cache] = seen
+        streams[cache] = {i: eng.requests[i].outputs for i in prompts}
+    assert both_running[True] and not both_running[False]
+    assert streams[True] == streams[False] == {
+        i: ref.requests[i].outputs for i in prompts}
+
+
+def test_pressure_evicts_trie_blocks_instead_of_failing(qwen_model):
+    """Once the publishers finish, their trie-pinned blocks are the only
+    occupancy; an unrelated admission that needs the space evicts them
+    (cache degrades to recompute) rather than backpressuring forever."""
+    cfg, _ = qwen_model
+    rng = np.random.default_rng(9)
+    a = rng.integers(0, cfg.vocab, 24)
+    b = rng.integers(0, cfg.vocab, 24)
+    eng = _eng(qwen_model, prefix_cache=True, pool=6, name="tight")
+    eng.submit(Request(id=0, prompt=a, max_new_tokens=8))
+    eng.run()
+    assert eng.trie.num_blocks > 0
+    eng.submit(Request(id=1, prompt=b, max_new_tokens=8))
+    eng.run()
+    assert eng.trie.evictions > 0
+    assert eng.requests[1].outputs
+    assert eng.allocator.check_refcounts(eng.trie.block_refs())
+    ref = _eng(qwen_model, prefix_cache=False, max_batch=2, name="ref")
+    ref.submit(Request(id=1, prompt=b, max_new_tokens=8))
+    ref.run()
+    assert eng.requests[1].outputs == ref.requests[1].outputs
+
+
+def test_prefix_cache_config_validation(qwen_model):
+    cfg, params = qwen_model
+    with pytest.raises(ValueError):       # trie needs the paged pool
+        ServingEngine(cfg, params, ServingConfig(
+            max_batch=2, max_len=64, pam=_pam(), prefix_cache=True))
+
+
+def test_summary_reports_sharing_counters(qwen_model):
+    prompts = _shared_prompts(qwen_model[0].vocab)
+    eng = _eng(qwen_model, prefix_cache=True)
+    for i in sorted(prompts):
+        eng.submit(Request(id=i, prompt=prompts[i], max_new_tokens=6))
+    s = eng.run()
+    for key in ("prefix_hits", "cached_prefix_tokens",
+                "novel_prefill_tokens", "cow_copies", "trie_blocks",
+                "trie_evictions"):
+        assert key in s, key
+    assert s["prefix_hits"] >= 2          # two later waves hit
+    assert s["cached_prefix_tokens"] >= 16

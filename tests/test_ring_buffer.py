@@ -14,13 +14,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import build_model, make_pam
+
 from repro.cluster.migration import migrate
 from repro.core.tiers import HOT, WARM, clamp_hot_to_window
 from repro.kernels.flash_decode import ring_position_map
 from repro.models import transformer as tf
-from repro.models.config import get_config, reduced
-from repro.serving import (PAMManagerConfig, Request, ServingConfig,
-                           ServingEngine)
+from repro.serving import Request, ServingConfig, ServingEngine
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -28,16 +28,12 @@ WINDOW = 16
 
 
 @pytest.fixture(scope="module")
-def setup():
-    cfg = reduced(get_config("pam-llama-7b"))
-    params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    return cfg, params
+def setup(llama_model):
+    return llama_model
 
 
 def _pam(max_len=64):
-    return PAMManagerConfig(max_tokens=max_len, hot_capacity=8,
-                            warm_capacity=16, compression=4,
-                            recency_window=4, schedule_interval=2)
+    return make_pam(max_len=max_len, hot=8, warm=16)
 
 
 def _engine(cfg, params, *, max_len=64, block_size=0, hot_window=0,

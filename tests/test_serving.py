@@ -6,10 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from _hyp import given, settings, st  # hypothesis, or skip-stub fallback
+from conftest import build_model, make_pam
 
 from repro.core.tiers import COLD, HOT, WARM
 from repro.models import transformer as tf
-from repro.models.config import get_config, reduced
 from repro.serving import (BlockAllocator, PagedKVPool, PAMManager,
                            PAMManagerConfig, Request, ServingConfig,
                            ServingEngine)
@@ -121,11 +121,8 @@ def test_scheduling_promotes_important_cold_tokens():
 
 # ------------------------------------------------------------------- engine
 def _engine(arch="qwen3-0.6b", pam=True, max_batch=3, max_len=64):
-    cfg = reduced(get_config(arch))
-    params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    pam_cfg = PAMManagerConfig(
-        max_tokens=max_len, hot_capacity=16, warm_capacity=24,
-        compression=4, recency_window=4, schedule_interval=2) if pam else None
+    cfg, params = build_model(arch)
+    pam_cfg = make_pam(max_len=max_len, hot=16, warm=24) if pam else None
     scfg = ServingConfig(max_batch=max_batch, max_len=max_len, pam=pam_cfg)
     return cfg, params, ServingEngine(cfg, params, scfg)
 
