@@ -18,7 +18,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
                     choices=["all", "figs", "kernels", "engine",
-                             "roofline", "cluster", "chaos", "prefix"])
+                             "roofline", "cluster", "chaos", "prefix",
+                             "serving"])
     ap.add_argument("--dryrun-dir", default="experiments/dryrun")
     ap.add_argument("--out", default=None, metavar="BENCH.json",
                     help="write decode tokens/s + dispatch counts (and all "
@@ -66,6 +67,11 @@ def main(argv=None) -> None:
         from benchmarks.prefix_bench import prefix_rows
         prefix, prows = prefix_rows()
         rows += prows
+    serving = None
+    if args.section in ("all", "serving"):
+        from benchmarks.serving_bench import serving_rows
+        serving, srows = serving_rows()
+        rows += srows
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
@@ -97,6 +103,18 @@ def main(argv=None) -> None:
                 prefix["flops_saved_at_half"]
             payload["prefix_occupancy_drop"] = \
                 prefix["occupancy_drop_lo_to_hi"]
+        if serving is not None:
+            # serving-under-load trajectory point (PR 8): TTFT/TPOT
+            # tails + SLO attainment over seeded arrival traces, zero
+            # lost/dup streamed tokens, chunked prefill cutting the
+            # p99 TPOT tail at equal offered load
+            payload["serving"] = serving
+            payload["serving_slo_attainment"] = \
+                serving["smoke_slo_attainment"]
+            payload["serving_p99_ttft_s"] = serving["p99_ttft_s_worst"]
+            payload["serving_tokens_lost"] = serving["tokens_lost_total"]
+            payload["serving_chunked_p99_tpot_ratio"] = \
+                serving["chunked_prefill"]["p99_tpot_ratio"]
         if chaos is not None:
             # fault-tolerance trajectory point (PR 6): goodput under an
             # injected device kill, token-exact vs the failure-free twin

@@ -1,0 +1,203 @@
+"""Serving-under-load benchmark (PR 8): the front end scored on tails.
+
+Serves seeded arrival traces (Poisson + bursty Gamma/ON-OFF) through
+``repro.frontend.AsyncServer`` — SLO admission attached — on a
+single-device engine and on the paper's ``hbm:1,cxl:2`` heterogeneous
+cluster, recording TTFT/TPOT p50/p95/p99, SLO attainment, shed /
+forced-preemption counts, and the zero-lost/zero-duplicated streamed
+token check per scenario.
+
+Two extra points pin the PR 8 mechanisms:
+
+* **chunked vs unchunked prefill** on a long-prompt trace at equal
+  offered load: a monolithic prefill stalls every co-running decode for
+  one big step (the TPOT tail), while pow-2 slices bound the stall —
+  chunked p99 TPOT must come out LOWER at matched throughput.
+* **generator scale**: ``cluster_bench`` serves 96 requests; the load
+  generator here is exercised at 100x that (9600-request trace,
+  generation + arrival-stat checks only — the SCORED scenarios serve
+  CI-sized traces so the committed bench stays reproducible in
+  minutes).
+"""
+
+from __future__ import annotations
+
+import asyncio
+from typing import Optional
+
+import numpy as np
+
+# single-device scenarios run the reduced model's own latency model;
+# the cluster runs hardware-scale device models (context_scale), so its
+# time base — and therefore its sustainable rate and SLO — is ~100x
+# coarser (cluster_bench's regime: ~3 req/s, 50 ms-class token gaps).
+SLO_TTFT_S = 0.25
+SLO_TPOT_S = 0.05
+CLUSTER_SLO_TTFT_S = 2.0
+CLUSTER_SLO_TPOT_S = 0.1
+CLUSTER_RATE_RPS = 3.0
+
+
+def _score_keys(sc: dict, adm) -> dict:
+    out = dict(sc)
+    out["admission"] = adm.summary()
+    return out
+
+
+def serving_sweep(n_requests: int = 256, rate_rps: float = 300.0,
+                  seed: int = 11) -> dict:
+    import jax
+    from repro.cluster import (BalancerConfig, KVBalancer, RecoveryConfig,
+                               build_cluster)
+    from repro.frontend.admission import SLOAdmission, SLOSpec
+    from repro.frontend.loadgen import TraceConfig, make_trace, score
+    from repro.frontend.server import AsyncServer
+    from repro.models import transformer as tf
+    from repro.models.config import get_config, reduced
+    from repro.perfmodel import make_latency_model
+    from repro.perfmodel.devices import parse_devices
+    from repro.perfmodel.model import PAM_LLAMA_7B, make_system
+
+    cfg = reduced(get_config("qwen3-0.6b"))
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    lat = make_latency_model(make_system("pam"), PAM_LLAMA_7B)
+    slo = SLOSpec(ttft_s=SLO_TTFT_S, tpot_s=SLO_TPOT_S)
+    cluster_slo = SLOSpec(ttft_s=CLUSTER_SLO_TTFT_S,
+                          tpot_s=CLUSTER_SLO_TPOT_S)
+
+    from repro.serving import PAMManagerConfig, ServingConfig, ServingEngine
+
+    def scfg(max_len=128, chunk=0):
+        pam = PAMManagerConfig(max_tokens=max_len,
+                               hot_capacity=max_len // 8,
+                               warm_capacity=max_len // 4, compression=4,
+                               recency_window=8, schedule_interval=2)
+        return ServingConfig(max_batch=4, max_len=max_len, pam=pam,
+                             block_size=8, prefill_chunk=chunk)
+
+    def engine(**kw):
+        return ServingEngine(cfg, params, scfg(**kw), latency_model=lat)
+
+    def cluster():
+        return build_cluster(cfg, params, parse_devices("hbm:1,cxl:2"),
+                             scfg=scfg(),
+                             balancer=KVBalancer(BalancerConfig()),
+                             recovery=RecoveryConfig())
+
+    def trace(kind, tseed, **kw):
+        base = dict(kind=kind, n_requests=n_requests, rate_rps=rate_rps,
+                    prompt_len=(8, 48), max_new=(4, 16), vocab=cfg.vocab,
+                    seed=tseed)
+        base.update(kw)
+        return make_trace(TraceConfig(**base))
+
+    def serve(backend, reqs, spec):
+        adm = SLOAdmission(spec)
+        srv = AsyncServer(backend, admission=adm)
+        records = asyncio.run(srv.serve_trace(reqs))
+        sc = score(records.values(), ttft_slo_s=spec.ttft_s,
+                   tpot_slo_s=spec.tpot_s)
+        back = srv.router.summary()
+        sc["throughput_tok_s"] = back["throughput_tok_s"]
+        sc["makespan_s"] = back["makespan_s"]
+        return _score_keys(sc, adm)
+
+    n_cluster = max(n_requests // 2, 32)
+    scenarios = {}
+    scenarios["single_poisson"] = serve(engine(), trace("poisson", seed),
+                                        slo)
+    scenarios["single_gamma"] = serve(engine(), trace("gamma", seed + 1),
+                                      slo)
+    scenarios["single_onoff"] = serve(engine(), trace("onoff", seed + 2),
+                                      slo)
+    scenarios["cluster_poisson"] = serve(
+        cluster(), trace("poisson", seed + 3, rate_rps=CLUSTER_RATE_RPS,
+                         n_requests=n_cluster), cluster_slo)
+    scenarios["cluster_onoff"] = serve(
+        cluster(), trace("onoff", seed + 4, rate_rps=CLUSTER_RATE_RPS,
+                         n_requests=n_cluster, period_s=20.0),
+        cluster_slo)
+
+    # ---- chunked vs unchunked prefill, long-prompt trace, equal load.
+    # TPOT here is the pooled per-token gap distribution (itl_s): the
+    # mechanism under test is ONE monolithic long prefill stalling the
+    # co-running decode step, a single-gap spike that per-request means
+    # average away but the pooled p99 pins.
+    long_kw = dict(prompt_len=(112, 160), max_new=(8, 16), rate_rps=150.0,
+                   n_requests=max(n_requests // 4, 32))
+    chunk_cmp = {}
+    for label, chunk in (("unchunked", 0), ("chunked", 16)):
+        reqs = trace("poisson", seed + 9, **long_kw)
+        sc = serve(engine(max_len=192, chunk=chunk), reqs, slo)
+        chunk_cmp[label] = sc
+    chunk_cmp["chunk_budget"] = 16
+    chunk_cmp["p99_tpot_ratio"] = (
+        chunk_cmp["chunked"]["itl_s"]["p99"]
+        / max(chunk_cmp["unchunked"]["itl_s"]["p99"], 1e-12))
+
+    # ---- generator at 100x cluster_bench scale (generation only)
+    big = TraceConfig(kind="gamma", n_requests=9600, rate_rps=2000.0,
+                      vocab=cfg.vocab, seed=seed + 5)
+    arr = np.array([r.arrival for r in make_trace(big)])
+    gaps = np.diff(arr)
+    scale = {
+        "n_requests": big.n_requests,
+        "monotone": bool((gaps >= 0).all()),
+        "mean_rate_rps": float((big.n_requests - 1) / (arr[-1] - arr[0])),
+        "gap_cv2": float(np.var(gaps) / np.mean(gaps) ** 2),
+    }
+
+    lost = sum(s["lost_tokens"] + s["dup_tokens"]
+               for s in scenarios.values())
+    lost += sum(chunk_cmp[k]["lost_tokens"] + chunk_cmp[k]["dup_tokens"]
+                for k in ("unchunked", "chunked"))
+    return {
+        "scenarios": scenarios,
+        "chunked_prefill": chunk_cmp,
+        "scale_trace": scale,
+        "slo": {"ttft_s": slo.ttft_s, "tpot_s": slo.tpot_s,
+                "cluster_ttft_s": cluster_slo.ttft_s,
+                "cluster_tpot_s": cluster_slo.tpot_s,
+                "cluster_rate_rps": CLUSTER_RATE_RPS},
+        "n_requests_per_scenario": n_requests,
+        "smoke_slo_attainment": scenarios["single_poisson"][
+            "slo_attainment"],
+        "p99_ttft_s_worst": max(s["ttft_s"]["p99"]
+                                for s in scenarios.values()),
+        "tokens_lost_total": int(lost),
+    }
+
+
+def serving_rows(result: Optional[dict] = None) -> tuple[dict, list]:
+    if result is None:
+        result = serving_sweep()
+    rows = []
+    for name in sorted(result["scenarios"]):
+        s = result["scenarios"][name]
+        rows.append((
+            f"serving/{name}", 0.0,
+            f"ttft_p99={s['ttft_s']['p99']:.4f}s "
+            f"tpot_p99={s['tpot_s']['p99']:.4f}s "
+            f"slo={s['slo_attainment']:.3f} "
+            f"shed={s['admission']['shed']} "
+            f"lost={s['lost_tokens']} dup={s['dup_tokens']}"))
+    cc = result["chunked_prefill"]
+    rows.append(("serving/chunked_vs_unchunked", 0.0,
+                 f"p99_tpot chunked={cc['chunked']['itl_s']['p99']:.4f}s "
+                 f"unchunked={cc['unchunked']['itl_s']['p99']:.4f}s "
+                 f"ratio={cc['p99_tpot_ratio']:.3f} "
+                 f"tok_s {cc['chunked']['throughput_tok_s']:.0f}"
+                 f"/{cc['unchunked']['throughput_tok_s']:.0f}"))
+    sc = result["scale_trace"]
+    rows.append(("serving/loadgen_scale", 0.0,
+                 f"n={sc['n_requests']} monotone={sc['monotone']} "
+                 f"rate={sc['mean_rate_rps']:.0f}rps "
+                 f"cv2={sc['gap_cv2']:.2f}"))
+    return result, rows
+
+
+if __name__ == "__main__":
+    _, rows = serving_rows()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")

@@ -20,6 +20,14 @@ Checks (prefix section, ``BENCH_pr7.json``):
   * prefill FLOPs saved > 0 wherever the share ratio >= 0.5
   * peak pool occupancy monotonically helped: occupancy at the highest
     share ratio below the no-sharing ratio's (shared blocks count once)
+
+Checks (serving section, ``BENCH_pr8.json``):
+  * zero lost / duplicated streamed tokens across every scenario
+  * SLO attainment >= 0.9 on the smoke trace (single-device Poisson)
+  * p99 TTFT on the smoke trace below the committed ceiling
+  * chunked prefill cuts the pooled p99 token-gap tail on the
+    long-prompt trace (ratio vs unchunked <= 0.9) at matched
+    throughput (within 5%)
 """
 
 import json
@@ -64,6 +72,35 @@ def check_prefix(d: dict) -> None:
           f"{hi['pool_occupancy_peak']:.3f}")
 
 
+def check_serving(d: dict) -> None:
+    lost = d["serving_tokens_lost"]
+    assert lost == 0, (
+        f"{lost} streamed tokens lost or duplicated — the server loop "
+        f"broke the stream contract")
+    att = d["serving_slo_attainment"]
+    assert att >= 0.9, (
+        f"smoke-trace SLO attainment {att:.3f} below the 0.9 floor")
+    smoke = d["serving"]["scenarios"]["single_poisson"]
+    p99 = smoke["ttft_s"]["p99"]
+    # the sim clock is modeled and seeded, so this is deterministic;
+    # the ceiling is ~5x the committed value (0.0037 s)
+    assert p99 <= 0.02, (
+        f"smoke-trace p99 TTFT {p99:.4f}s above the 0.02s ceiling")
+    ratio = d["serving_chunked_p99_tpot_ratio"]
+    assert ratio <= 0.9, (
+        f"chunked prefill no longer cuts the p99 token-gap tail: "
+        f"ratio {ratio:.3f} vs unchunked (floor 0.9)")
+    cc = d["serving"]["chunked_prefill"]
+    tc = cc["chunked"]["throughput_tok_s"]
+    tu = cc["unchunked"]["throughput_tok_s"]
+    assert abs(tc - tu) <= 0.05 * tu, (
+        f"chunked/unchunked throughput diverged: {tc:.0f} vs {tu:.0f} "
+        f"tok/s — the tail comparison is no longer at equal load")
+    print(f"serving bench OK: 0 lost/dup tokens, smoke SLO {att:.3f} "
+          f"(floor 0.9), p99 TTFT {p99 * 1e3:.2f} ms, chunked p99 "
+          f"token-gap {ratio:.3f}x unchunked at {tc:.0f}/{tu:.0f} tok/s")
+
+
 def main(path: str, floor: float = 100.0) -> None:
     d = json.load(open(path))
     done = False
@@ -72,6 +109,9 @@ def main(path: str, floor: float = 100.0) -> None:
         done = True
     if "chaos_kill_goodput_ratio" in d:
         check_chaos(d)
+        done = True
+    if "serving_slo_attainment" in d:
+        check_serving(d)
         done = True
     if done and "dispatches_per_step" not in d:
         return                           # section-only bench file

@@ -26,5 +26,8 @@ if [[ "${1:-}" != "--fast" ]]; then
 
     echo "== chaos smoke (1 injected kill, replay exactness) =="
     python scripts/chaos_smoke.py
+
+    echo "== serving smoke (front end: stream exactness, chunked prefill, SLO) =="
+    python scripts/serving_smoke.py
 fi
 echo "verify OK"

@@ -408,7 +408,13 @@ class ClusterRouter:
             eng.requests.pop(rid, None)
             self.queue.append(self._requests[rid])
         eng.waiting.clear()
-        running = [rid for rid in eng.slots if rid is not None]
+        # only RUNNING requests have exportable KV; a mid-chunked-prefill
+        # (PREFILLING) request has no hot row or sampled token yet — it
+        # finishes filling and decodes on the drained device (slow, not
+        # dead), exactly like residual work the transfer path rejects
+        running = [rid for rid in eng.slots
+                   if rid is not None
+                   and eng.requests[rid].status == RUNNING]
         for rid in running:
             snap = KVSnapshot.export(eng, rid)
             dst = self._rescue_target(snap, exclude=dev.name)
@@ -450,12 +456,68 @@ class ClusterRouter:
                 self._drain(d)
 
     # ------------------------------------------------- degradation policies
+    def shed(self, rid: int) -> bool:
+        """Admission-control hook (PR 8): drop a QUEUED request and end
+        its stream with a rejection event — load shedding for a request
+        whose deadline is provably unmeetable (``repro.frontend.
+        admission``). Only the shared queue is sheddable: a request
+        already placed on a device is past admission. Returns True if
+        the request was found and shed."""
+        for req in self.queue:
+            if req.id == rid:
+                self.queue.remove(req)
+                self._reject(req)
+                return True
+        return False
+
+    def _preempt_victim(self, window: int,
+                        exclude_rid: Optional[int] = None) -> bool:
+        """Suspend the fleet's lowest-importance running request — the
+        cheapest accuracy stake, Alg. 2's rule at cluster scope — into a
+        host-held snapshot, freeing its slot and blocks for a ``window``
+        -token admission. Returns True if a victim was suspended."""
+        rec = self.recovery
+        best = None
+        for d in self._up():
+            if d.killed or not d.engine.serviceable(window):
+                continue
+            for rid, mass in d.engine.slot_importance_mass().items():
+                if rid == exclude_rid:
+                    continue
+                rs = d.engine.requests[rid]
+                left = rs.request.max_new_tokens - len(rs.outputs)
+                if left < rec.cfg.min_preempt_remaining:
+                    continue
+                if best is None or mass < best[0]:
+                    best = (mass, d, rid)
+        if best is None:
+            return False
+        _, dev, rid = best
+        rec.suspend(dev.engine, rid, self.ticks)
+        return True
+
+    def force_preempt(self, rid: int) -> bool:
+        """SLO-admission hook (PR 8): preempt on behalf of queued
+        request ``rid`` NOW, bypassing the tick-based starvation fuse —
+        the deadline-aware front end decides a queue head has burned too
+        much of its TTFT budget and frees capacity immediately. Requires
+        an attached ``RecoveryManager`` (the suspension machinery).
+        Returns True if a victim was suspended."""
+        if self.recovery is None:
+            return False
+        shape = self._shape.get(rid)
+        if shape is None:
+            return False
+        if self._preempt_victim(shape[0] + shape[1]):
+            self._head_since = (rid, self.ticks)   # re-arm the fuse
+            return True
+        return False
+
     def _maybe_preempt(self) -> None:
         """Preemption-by-demotion: when the shared queue's head has
         starved for ``preempt_after_ticks`` (pool exhaustion, capacity
-        loss), suspend the fleet's lowest-importance running request —
-        the cheapest accuracy stake, Alg. 2's rule at cluster scope —
-        into a host-held snapshot, freeing its slot and blocks."""
+        loss), suspend the fleet's lowest-importance running request
+        (``_preempt_victim``)."""
         rec = self.recovery
         if not self.queue:
             self._head_since = None
@@ -468,23 +530,8 @@ class ClusterRouter:
                 < rec.cfg.preempt_after_ticks):
             return
         plen, glen = self._shape[head.id]
-        window = plen + glen
-        best = None
-        for d in self._up():
-            if d.killed or not d.engine.serviceable(window):
-                continue
-            for rid, mass in d.engine.slot_importance_mass().items():
-                rs = d.engine.requests[rid]
-                left = rs.request.max_new_tokens - len(rs.outputs)
-                if left < rec.cfg.min_preempt_remaining:
-                    continue
-                if best is None or mass < best[0]:
-                    best = (mass, d, rid)
-        if best is None:
-            return
-        _, dev, rid = best
-        rec.suspend(dev.engine, rid, self.ticks)
-        self._head_since = (head.id, self.ticks)   # re-arm the fuse
+        if self._preempt_victim(plen + glen):
+            self._head_since = (head.id, self.ticks)   # re-arm the fuse
 
     def _maybe_resume(self) -> None:
         """Resume cooled-down suspended snapshots wherever capacity has

@@ -1,0 +1,26 @@
+"""Continuous-batching serving front end (PR 8).
+
+- ``chunking``: chunked-prefill slice planning (engine hook).
+- ``server``: async streaming server over ``ClusterRouter``/``PAMEngine``.
+- ``admission``: SLO-aware admission control (shed / preempt).
+- ``loadgen``: seeded arrival traces + TTFT/TPOT/SLO scoring.
+
+Submodules are imported lazily: the serving engine imports
+``repro.frontend.chunking`` while ``repro.frontend.server`` imports the
+cluster layer (which imports the engine) — eager imports here would be
+a cycle.
+"""
+
+import importlib
+
+_SUBMODULES = ("admission", "chunking", "loadgen", "server")
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"{__name__}.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_SUBMODULES))

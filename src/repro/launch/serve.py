@@ -17,6 +17,18 @@ recovery watchdog attached:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
         --reduced --requests 32 --devices hbm:1,cxl:2 --block-size 8 \
         --chaos 'kill:cxl1@40,corrupt@20' --chaos-seed 0
+
+Serving front-end mode (PR 8) — run a seeded arrival trace through the
+async streaming server (``repro.frontend``) with chunked prefill and
+SLO-aware admission, scoring TTFT/TPOT tails and SLO attainment:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+        --reduced --serve --requests 64 --trace onoff --rate 200 \
+        --block-size 8 --prefill-chunk 8 --slo-ttft-ms 250
+
+``--port N`` additionally drives the trace through the line-delimited
+JSON socket endpoint on 127.0.0.1:N (0 picks a free port) instead of
+the in-process API — same tokens, exercised over the wire.
 """
 
 from __future__ import annotations
@@ -69,6 +81,25 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="on-device sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked-prefill slice budget in tokens (pow-2; "
+                         "0 = monolithic prefill; requires --block-size)")
+    ap.add_argument("--serve", action="store_true",
+                    help="front-end mode: stream a seeded arrival trace "
+                         "through the async server (repro.frontend)")
+    ap.add_argument("--trace", default="poisson",
+                    choices=["poisson", "gamma", "onoff"],
+                    help="--serve: arrival trace shape")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="--serve: mean arrival rate (req/s)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=250.0,
+                    help="--serve: time-to-first-token SLO")
+    ap.add_argument("--slo-tpot-ms", type=float, default=50.0,
+                    help="--serve: per-output-token SLO")
+    ap.add_argument("--port", type=int, default=None,
+                    help="--serve: drive the trace through the NDJSON "
+                         "socket endpoint on this port (0 = ephemeral)")
+    ap.add_argument("--trace-seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -85,12 +116,18 @@ def main(argv=None):
             compression=4, recency_window=8, schedule_interval=2,
             use_sparsity=not args.no_sparsity)
 
+    if args.prefill_chunk and not args.block_size:
+        ap.error("--prefill-chunk requires --block-size (paged KV)")
     scfg = ServingConfig(max_batch=args.max_batch, max_len=args.max_len,
                          pam=pam_cfg, block_size=args.block_size,
                          pool_blocks=args.pool_blocks,
                          hot_window=args.hot_window,
-                         temperature=args.temperature, top_k=args.top_k)
+                         temperature=args.temperature, top_k=args.top_k,
+                         prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(0)
+
+    if args.serve:                     # ---- front-end mode (PR 8)
+        return _serve_mode(args, ap, cfg, params, scfg)
 
     if args.devices:                   # ---- cluster mode (paper §4.3)
         if args.system not in ("pam", "wallclock"):
@@ -138,6 +175,95 @@ def main(argv=None):
     for slo_ms in (100, 150, 200):
         print(f"SLO {slo_ms}ms attainment: "
               f"{eng.slo_attainment(slo_ms/1e3):.3f}")
+
+
+async def _drive_socket(srv, trace, port: int):
+    """Replay the trace over the NDJSON endpoint: one loopback client
+    per request, all token lines consumed (the wire-path variant of
+    ``serve_trace`` — arrivals happen as connections land)."""
+    import asyncio
+    import json as _json
+
+    server, bound, pump = await srv.serve_endpoint(port=port)
+
+    async def one(req):
+        reader, writer = await asyncio.open_connection("127.0.0.1", bound)
+        writer.write((_json.dumps(
+            {"id": req.id, "prompt": req.prompt.tolist(),
+             "max_new_tokens": req.max_new_tokens}) + "\n").encode())
+        await writer.drain()
+        while True:
+            line = await reader.readline()
+            if not line or _json.loads(line)["done"]:
+                break
+        writer.close()
+
+    try:
+        await asyncio.gather(*(one(r) for r in trace))
+    finally:
+        pump.cancel()
+        server.close()
+        await server.wait_closed()
+    return bound
+
+
+def _serve_mode(args, ap, cfg, params, scfg) -> None:
+    import asyncio
+
+    from repro.frontend.admission import SLOAdmission, SLOSpec
+    from repro.frontend.loadgen import TraceConfig, make_trace, score
+    from repro.frontend.server import AsyncServer
+
+    if args.devices:
+        if args.system not in ("pam", "wallclock"):
+            ap.error("--devices models PAM-class devices; --system must "
+                     "be 'pam' (modeled, the default) or 'wallclock'")
+        from repro.cluster import (BalancerConfig, KVBalancer,
+                                   RecoveryConfig, build_cluster)
+        from repro.perfmodel.devices import parse_devices
+        backend = build_cluster(
+            cfg, params, parse_devices(args.devices), scfg=scfg,
+            balancer=KVBalancer(BalancerConfig()),
+            recovery=RecoveryConfig(),
+            wallclock=(args.system == "wallclock"))
+    else:
+        latency = None
+        if args.system != "wallclock":
+            latency = make_latency_model(make_system(args.system),
+                                         PAM_LLAMA_7B)
+        backend = ServingEngine(cfg, params, scfg, latency_model=latency)
+
+    slo = SLOSpec(ttft_s=args.slo_ttft_ms / 1e3,
+                  tpot_s=args.slo_tpot_ms / 1e3)
+    trace = make_trace(TraceConfig(
+        kind=args.trace, n_requests=args.requests, rate_rps=args.rate,
+        prompt_len=(max(args.prompt_len // 2, 1), args.prompt_len),
+        max_new=(max(args.gen_len // 2, 1), args.gen_len),
+        vocab=cfg.vocab, seed=args.trace_seed))
+    srv = AsyncServer(backend, admission=SLOAdmission(slo))
+
+    port = None
+    if args.port is None:
+        asyncio.run(srv.serve_trace(trace))
+    else:
+        port = asyncio.run(_drive_socket(srv, trace, args.port))
+
+    sc = score(srv.records.values(), ttft_slo_s=slo.ttft_s,
+               tpot_slo_s=slo.tpot_s)
+    back = srv.router.summary()
+    payload = {
+        "mode": "serve",
+        "trace": args.trace,
+        "rate_rps": args.rate,
+        "prefill_chunk": args.prefill_chunk,
+        "port": port,
+        "score": sc,
+        "admission": srv.admission.summary(),
+        "backend": {k: back[k] for k in
+                    ("finished", "rejected", "total_tokens",
+                     "makespan_s", "throughput_tok_s", "ticks")},
+    }
+    print(json.dumps(payload, indent=1))
 
 
 if __name__ == "__main__":

@@ -119,6 +119,7 @@ import numpy as np
 
 from repro.core import pam_interface as pam_if
 from repro.core import tiers as tiers_mod
+from repro.frontend.chunking import ChunkPlan, validate_budget
 from repro.core.tiers import HOT
 from repro.kernels.flash_decode import ring_position_map
 from repro.models import transformer as tf
@@ -132,7 +133,8 @@ from repro.serving.pam_manager import (PAMManager, PAMManagerConfig,
                                        make_masked_decode_attn,
                                        make_masked_latent_attn)
 
-WAITING, RUNNING, DONE = "waiting", "running", "done"
+WAITING, PREFILLING, RUNNING, DONE = (
+    "waiting", "prefilling", "running", "done")
 
 
 @dataclasses.dataclass
@@ -199,6 +201,16 @@ class ServingConfig:
     # before its first divergent write. Requires block_size > 0 and a
     # token-only GQA family. Off by default: the engine is then
     # bit-identical to PR 6.
+    prefill_chunk: int = 0             # chunked prefill budget (PR 8):
+    # a prompt whose novel part exceeds this many tokens admits in
+    # bounded power-of-two slices interleaved with decode steps — each
+    # slice is ONE fused dispatch appending its KV through the pool
+    # commit path, the final slice rides the suffix-commit path (hot-row
+    # rebuild + first-token sample), and no engine step ever prefills
+    # more than `prefill_chunk` tokens per in-flight admission. Token
+    # streams are bit-identical to single-shot admission. Requires the
+    # paged pool (block_size > 0) and a token-only GQA family; must be a
+    # power of two. 0 = off (single-shot prefill, PR 7 behavior).
 
 
 class StepBufs(NamedTuple):
@@ -480,83 +492,132 @@ def _admit_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int,
 
 @functools.lru_cache(maxsize=None)
 def _suffix_prefill_fn(cfg: ModelConfig, smax: int):
-    """Suffix-only prefill dispatch for prefix-cache admissions (PR 7):
-    gather the request's cached prefix from the pool THROUGH its block
-    table (the §6.2 sharer-side re-layout — a pure read of the shared
-    blocks), then run ``tf.prefill_suffix`` over just the novel tokens.
-    One dispatch; retraces per suffix bucket like ``_prefill_fn``.
-    Returns (last-token logits, suffix K/V in cache layout)."""
+    """Batched suffix-only prefill dispatch (PR 7 path, batched in
+    PR 8): gather each row's cached prefix from the pool THROUGH its
+    block table (the §6.2 sharer-side re-layout — a pure read of the
+    shared blocks), then run ``tf.prefill_suffix`` over just the novel
+    tokens of every row at once. Rows with ``prefix_len == 0`` are
+    plain admissions riding the same dispatch — the gathered prefix is
+    all zeros and masked inside attention, so their result is exactly
+    the from-scratch prefill. One dispatch; retraces per (group size,
+    suffix bucket) like ``_prefill_fn``. Returns (last-token logits
+    (n, V), suffix K/V (L, n, Hkv, S, dh))."""
     @jax.jit
-    def pre(params, tokens, pk, pv, table_row, prefix_len, true_len):
-        gk = pam_if.gather_prefix_logical(pk, table_row, prefix_len)
-        gv = pam_if.gather_prefix_logical(pv, table_row, prefix_len)
-        return tf.prefill_suffix(cfg, params, tokens, gk[:, None],
-                                 gv[:, None], prefix_len[None],
-                                 true_len=true_len)
+    def pre(params, tokens, pk, pv, read_rows, prefix_lens, true_lens):
+        gather = jax.vmap(pam_if.gather_prefix_logical,
+                          in_axes=(None, 0, 0), out_axes=1)
+        gk = gather(pk, read_rows, prefix_lens)    # (L, n, Hkv, P, dh)
+        gv = gather(pv, read_rows, prefix_lens)
+        return tf.prefill_suffix(cfg, params, tokens, gk, gv,
+                                 prefix_lens, true_len=true_lens)
 
     return pre
 
 
 @functools.lru_cache(maxsize=None)
-def _trie_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int,
-                    temperature: float = 0.0, top_k: int = 0,
-                    hot_window: int = 0, seed: int = 0,
-                    cow: bool = False):
-    """ONE donated dispatch committing a prefix-cache admission:
+def _suffix_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int,
+                      n: int, temperature: float = 0.0, top_k: int = 0,
+                      hot_window: int = 0, seed: int = 0):
+    """ONE donated dispatch committing a suffix-prefill admission GROUP
+    (prefix-cache hits, the plain same-bucket admissions batched with
+    them, and final chunked-prefill slices):
 
-    1. ``cow``: duplicate the shared, partially-filled tail block
-       (``cow_src``, still owned by its publisher/trie) into this
-       request's fresh ``cow_dst`` BEFORE any write — the copy-on-write
-       that keeps shared blocks write-free. Fully-shared interior blocks
-       are never copied: the table maps them directly.
-    2. Scatter the novel suffix's K/V token-by-token into the request's
+    1. Copy-on-write each row's shared, partially-filled tail block
+       (``cow_srcs[i]``, still owned by its publisher/trie) into that
+       row's fresh ``cow_dsts[i]`` BEFORE any write. Rows with nothing
+       to copy pass the sentinel for both — a self-copy of the trash
+       block, i.e. a no-op. Fully-shared interior blocks are never
+       copied: the table maps them directly.
+    2. Scatter each row's novel-suffix K/V token-by-token into its
        fresh blocks (pad positions routed to the sentinel trash block).
-    3. Rebuild the slot's dense hot row by gathering the FULL logical
-       sequence back through the table (shared prefix + fresh suffix),
+    3. Rebuild each slot's dense hot row by gathering the FULL logical
+       sequence back through its table (shared prefix + fresh suffix),
        re-based onto ring coordinates when ``hot_window`` is set.
-    4. Sample the first token at absolute position ``length`` under the
-       same per-request-key policy as every other dispatch, and place
-       the PAM rows + block table.
+    4. Sample each first token at absolute position ``lengths[i]``
+       under the same per-request-key policy as every other dispatch,
+       and place the PAM rows + block tables.
 
-    The donation/one-dispatch invariants match ``_admit_commit_fn``;
-    only the prefill feeding it got cheaper (novel tokens, not prompt
-    length)."""
+    The donation/one-dispatch invariants match ``_admit_commit_fn``: a
+    burst of n same-bucket admissions costs 2 dispatches whether or not
+    any of them hit the prefix cache."""
     def commit(cache, pam_state, tokens_dev, suf_k, suf_v, logits,
-               slot, length, rid, table_row, bids, sids, cow_src,
-               cow_dst):
+               slots, lengths, rids, table_rows, bids, sids, cow_srcs,
+               cow_dsts):
+        pk, pv = cache.pk, cache.pv
+        for i in range(n):
+            pk = pkv.copy_block(pk, cow_srcs[i], cow_dsts[i])
+            pv = pkv.copy_block(pv, cow_srcs[i], cow_dsts[i])
+        sk = jnp.moveaxis(suf_k, 2, 3)             # (L, n, S, Hkv, dh)
+        sv = jnp.moveaxis(suf_v, 2, 3)
+        pk = pk.at[:, bids, sids].set(sk)          # bids/sids: (n, S)
+        pv = pv.at[:, bids, sids].set(sv)
+        gat = jax.vmap(pkv.gather_sequence, in_axes=(None, 0),
+                       out_axes=1)
+        gk = gat(pk, table_rows)                   # (L, n, Hkv, smax, dh)
+        gv = gat(pv, table_rows)
+        live = (jnp.arange(gk.shape[3])[None, None, None, :, None]
+                < lengths[None, :, None, None, None])
+        gk = jnp.where(live, gk, jnp.zeros((), gk.dtype))
+        gv = jnp.where(live, gv, jnp.zeros((), gv.dtype))
+        if hot_window:
+            ring_pos, valid = ring_position_map(lengths, hot_window)
+            ring_of = jax.vmap(pam_if.logical_to_ring,
+                               in_axes=(1, 0, 0), out_axes=1)
+            dk = ring_of(gk, ring_pos, valid)
+            dv = ring_of(gv, ring_pos, valid)
+        else:
+            dk, dv = gk, gv
+        cache = cache._replace(
+            k=cache.k.at[:, slots].set(dk),
+            v=cache.v.at[:, slots].set(dv),
+            lengths=cache.lengths.at[slots].set(lengths),
+            pk=pk, pv=pv)
+        firsts = _sample_tokens(logits, seed, rids, lengths,
+                                temperature, top_k)
+        tokens_dev = tokens_dev.at[slots].set(firsts)
+        if pcfg is not None:
+            for i in range(n):
+                pam_state = pm.place_prefill_state(
+                    pcfg, pam_state, slots[i], lengths[i],
+                    table_rows[i])
+        return cache, pam_state, tokens_dev, firsts
+
+    return jax.jit(commit, donate_argnums=(0, 1, 2))
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_fill_fn(cfg: ModelConfig, smax: int, cow: bool = False):
+    """ONE donated dispatch advancing a chunked-prefill admission by an
+    INTERMEDIATE slice (PR 8): optionally copy-on-write the shared tail
+    block (first slice of a prefix-cache hit), gather the already-
+    filled prefix ``[0, begin)`` from the pool through the request's
+    own table, run the suffix prefill over just this slice's tokens,
+    and scatter the slice's K/V into the mapped pool blocks. No dense
+    hot row, no sampling, no PAM placement — those happen once, in the
+    FINAL slice's suffix commit, after which the request is
+    indistinguishable from a single-shot admission. The slice logits
+    are discarded (only the final slice's feed sampling)."""
+    def fill(params, cache, tokens, table_row, begin, true_len, bids,
+             sids, cow_src, cow_dst):
         pk, pv = cache.pk, cache.pv
         if cow:
+            # after the copy the request's own table maps cow_dst, which
+            # now holds the shared tail bytes — the gather below reads
+            # the prefix entirely through the request's own row
             pk = pkv.copy_block(pk, cow_src, cow_dst)
             pv = pkv.copy_block(pv, cow_src, cow_dst)
+        gk = pam_if.gather_prefix_logical(pk, table_row, begin)
+        gv = pam_if.gather_prefix_logical(pv, table_row, begin)
+        _, suf_k, suf_v = tf.prefill_suffix(
+            cfg, params, tokens, gk[:, None], gv[:, None], begin[None],
+            true_len=true_len)
         sk = jnp.moveaxis(suf_k[:, 0], 1, 2)       # (L, S, Hkv, dh)
         sv = jnp.moveaxis(suf_v[:, 0], 1, 2)
         pk = pk.at[:, bids, sids].set(sk)
         pv = pv.at[:, bids, sids].set(sv)
-        gk = pkv.gather_sequence(pk, table_row)    # (L, Hkv, smax, dh)
-        gv = pkv.gather_sequence(pv, table_row)
-        live = jnp.arange(gk.shape[2])[None, None, :, None] < length
-        gk = jnp.where(live, gk, jnp.zeros((), gk.dtype))
-        gv = jnp.where(live, gv, jnp.zeros((), gv.dtype))
-        if hot_window:
-            ring_pos, valid = ring_position_map(length[None], hot_window)
-            dk = pam_if.logical_to_ring(gk, ring_pos[0], valid[0])
-            dv = pam_if.logical_to_ring(gv, ring_pos[0], valid[0])
-        else:
-            dk, dv = gk, gv
-        cache = cache._replace(
-            k=cache.k.at[:, slot].set(dk),
-            v=cache.v.at[:, slot].set(dv),
-            lengths=cache.lengths.at[slot].set(length),
-            pk=pk, pv=pv)
-        firsts = _sample_tokens(logits, seed, rid, length[None],
-                                temperature, top_k)
-        tokens_dev = tokens_dev.at[slot].set(firsts[0])
-        if pcfg is not None:
-            pam_state = pm.place_prefill_state(pcfg, pam_state, slot,
-                                               length, table_row)
-        return cache, pam_state, tokens_dev, firsts
+        return cache._replace(pk=pk, pv=pv)
 
-    return jax.jit(commit, donate_argnums=(0, 1, 2))
+    return jax.jit(fill, donate_argnums=(1,))
 
 
 @functools.lru_cache(maxsize=None)
@@ -712,6 +773,21 @@ class ServingEngine:
             self.novel_prefill_tokens = 0   # prefill compute performed
             self.cow_copies = 0             # tail blocks duplicated
 
+        self.chunk = scfg.prefill_chunk
+        self._chunking: dict[int, ChunkPlan] = {}  # rid -> in-flight plan
+        if self.chunk:
+            validate_budget(self.chunk)
+            if not self.block_size:
+                raise ValueError("prefill_chunk (chunked prefill) "
+                                 "requires the paged pool (block_size > "
+                                 "0): slices append KV through the pool "
+                                 "commit path")
+            # chunk_slices counts slice dispatches; max_chunk_slice is
+            # the largest slice actually prefilled (tests pin <= budget)
+            self.chunked_admissions = 0
+            self.chunk_slices = 0
+            self.max_chunk_slice = 0
+
         self.requests: dict[int, RequestState] = {}
         self.waiting: collections.deque[int] = collections.deque()
         self.slots: list[Optional[int]] = [None] * B
@@ -817,8 +893,11 @@ class ServingEngine:
         pool fill, PAM placement and token seeds for every member), so a
         router burst of n same-length prompts costs 2 dispatches, not 2n.
         """
-        admitted: list[tuple] = []     # (rid, rs, prompt, s_len, slot, row)
-        trie_admits: list[tuple] = []  # ... + (matched, cow_src)
+        # unified admission items: (rid, rs, prompt, s_len, slot,
+        # table_row, start, cow_src) — start = cache-resident prefix
+        # tokens (0 for plain admissions), cow_src = shared tail block
+        # pinned for copy-on-write (-1 = none)
+        admitted: list[tuple] = []
         free = self._free_slots()
         while self.waiting and free:
             rid = self.waiting.popleft()
@@ -873,19 +952,40 @@ class ServingEngine:
                                           self.allocator.occupancy)
             slot = free.pop(0)
             if matched > 0:
-                trie_admits.append((rid, rs, prompt, s_len, slot,
-                                    matched, cow_src))
-            else:
-                admitted.append((rid, rs, prompt, s_len, slot, table_row))
+                self.prefix_hits += 1
+                self.cached_prefix_tokens += matched
+            if self.chunk and s_len - matched > self.chunk:
+                # chunked admission (PR 8): claim the slot and the full
+                # block window NOW, then fill the prompt one bounded
+                # slice per engine step — interleaved with decode. The
+                # slot is occupied but NOT decode-eligible (PREFILLING)
+                # until the final slice's suffix commit seeds its first
+                # token.
+                rs.status, rs.slot = PREFILLING, slot
+                self.slots[slot] = rid
+                self.rids_host[slot] = rid
+                self._chunking[rid] = ChunkPlan(
+                    rid=rid, slot=slot, start=matched, total=s_len,
+                    budget=self.chunk, cow_src=cow_src)
+                self.chunked_admissions += 1
+                continue
+            admitted.append((rid, rs, prompt, s_len, slot, table_row,
+                             matched, cow_src))
 
-        # group by prefill bucket, preserving admission order
+        # group by NOVEL-length prefill bucket, preserving admission
+        # order. A group with any prefix-cache hit commits through the
+        # batched suffix path (plain members ride along: their zeroed
+        # prefix is masked inside attention — exact); prefix-free groups
+        # keep the PR 1/4 full-prefill path unchanged.
         groups: dict[int, list[tuple]] = {}
         for item in admitted:
-            groups.setdefault(self._bucket_len(item[3]), []).append(item)
-        total = sum(self._commit_group(bucket, group)
-                    for bucket, group in groups.items())
-        return total + sum(self._commit_trie(*item)
-                           for item in trie_admits)
+            bucket = self._bucket_len(item[3] - item[6])
+            groups.setdefault(bucket, []).append(item)
+        return sum(
+            self._commit_suffix_group(bucket, group)
+            if any(it[6] > 0 for it in group)
+            else self._commit_group(bucket, group)
+            for bucket, group in groups.items())
 
     def _commit_group(self, bucket: int, group: list[tuple]) -> int:
         """Prefill + commit one same-bucket admission group: ONE batched
@@ -893,7 +993,7 @@ class ServingEngine:
         n = len(group)
         padded = np.zeros((n, bucket), np.int32)
         lens = np.zeros((n,), np.int32)
-        for i, (_, _, prompt, s_len, _, _) in enumerate(group):
+        for i, (_, _, prompt, s_len, *_rest) in enumerate(group):
             padded[i, :s_len] = prompt
             lens[i] = s_len
         pre = self._prefill_for_len(bucket)
@@ -909,7 +1009,7 @@ class ServingEngine:
         (self.cache, self.pam_state, self.tokens_dev,
          first_dev) = self._admit_jit(*args)
         self.admit_dispatches += 1
-        for rid, _, _, _, slot, _ in group:
+        for rid, _, _, _, slot, *_rest in group:
             self.rids_host[slot] = rid
         if self.trie is not None:
             # publish AFTER the commit lands the prompts' KV in the pool
@@ -917,102 +1017,26 @@ class ServingEngine:
             # trie takes its own refcount, so these prefixes stay cached
             # even after their publisher finishes
             self.novel_prefill_tokens += int(lens.sum())
-            for rid, _, prompt, _, _, _ in group:
+            for rid, _, prompt, _, _, *_rest in group:
                 self.trie.insert(prompt, self.allocator.table(rid))
         firsts = np.asarray(first_dev)
-        eos = self.scfg.eos_token
-        for i, (rid, rs, _, _, slot, _) in enumerate(group):
-            rs.status, rs.slot = RUNNING, slot
-            tok = int(firsts[i])
-            rs.outputs.append(tok)
-            rs.planned = 1
-            rs.first_token_time = None     # stamped after latency charge
-            self.slots[slot] = rid
-            # the PREFILL's token can already end the request (EOS, or a
-            # max_new_tokens budget of 1) — finish before any decode,
-            # stamped here because such requests never join a decode
-            # wave (the fast path's _consume would otherwise skip them)
-            if (eos >= 0 and tok == eos) or rs.request.max_new_tokens <= 1:
-                rs.status = DONE
-                rs.first_token_time = self.clock
-                rs.token_times = [self.clock]
-                rs.finish_time = self.clock
-                self.slots[slot] = None
-                if self.allocator is not None:
-                    self.allocator.free(rid)
+        for i, (rid, rs, _, _, slot, *_rest) in enumerate(group):
+            self._finish_admit(rid, rs, slot, int(firsts[i]))
         return int(lens.sum())
 
-    def _commit_trie(self, rid: int, rs: RequestState, prompt: np.ndarray,
-                     s_len: int, slot: int, matched: int,
-                     cow_src: int) -> int:
-        """Commit one prefix-cache admission: a suffix-only prefill
-        dispatch plus ONE donated commit dispatch (CoW copy -> suffix
-        scatter -> hot-row rebuild -> first-token sample -> PAM
-        placement; see ``_trie_commit_fn``). The blocks were mapped in
-        ``_admit``: indices ``[0, matched // bs)`` of the table are
-        ADOPTED shared blocks (never written), the rest fresh. Returns
-        the novel-token count — the admission's actual prefill cost."""
-        bs = self.block_size
-        nb = self.scfg.max_len // bs
-        nfull = matched // bs
-        cow = matched % bs > 0
-        # the fresh block covering position `matched` receives the CoW
-        # duplicate of the publisher's partially-filled tail block
-        cow_dst = self.allocator.table(rid)[nfull] if cow else 0
-        t = s_len - matched
-        bucket = self._bucket_len(t)
-        padded = np.zeros((1, bucket), np.int32)
-        padded[0, :t] = prompt[matched:]
-        row = self.allocator.padded_table(rid, nb, self.sentinel)
-        # token-granular scatter coordinates for the suffix KV; bucket
-        # padding past the real suffix routes to the sentinel trash block
-        pos = matched + np.arange(bucket)
-        bids = np.where(np.arange(bucket) < t,
-                        row[np.minimum(pos // bs, nb - 1)],
-                        self.sentinel).astype(np.int32)
-        sids = (pos % bs).astype(np.int32)
-        row_dev = jnp.asarray(row)
-        # READ view of the table for the prefix gather: the prefix's
-        # tail positions live in the publisher's cow_src until the
-        # commit dispatch duplicates it into cow_dst — the prefill runs
-        # first, so it must read through the source block
-        read_row = row.copy()
-        if cow:
-            read_row[nfull] = cow_src
-        pre = _suffix_prefill_fn(self.cfg, self.scfg.max_len)
-        logits, suf_k, suf_v = pre(self.params, jnp.asarray(padded),
-                                   self.cache.pk, self.cache.pv,
-                                   jnp.asarray(read_row),
-                                   jnp.int32(matched), jnp.int32(t))
-        self.prefill_dispatches += 1
-        fn = _trie_commit_fn(self.pam_cfg, bs, self.scfg.temperature,
-                             self.scfg.top_k, self.hot_window,
-                             self.scfg.sample_seed, cow)
-        (self.cache, self.pam_state, self.tokens_dev, first_dev) = fn(
-            self.cache, self.pam_state, self.tokens_dev, suf_k, suf_v,
-            logits, jnp.int32(slot), jnp.int32(s_len),
-            jnp.asarray(np.array([rid], np.uint32)), row_dev,
-            jnp.asarray(bids), jnp.asarray(sids),
-            jnp.int32(max(cow_src, 0)), jnp.int32(cow_dst))
-        self.admit_dispatches += 1
-        if cow:
-            # the dispatch reading cow_src is enqueued; device ordering
-            # makes any later reuse of the block safe — release the pin
-            self.allocator.decref(cow_src)
-            self.cow_copies += 1
-        self.prefix_hits += 1
-        self.cached_prefix_tokens += matched
-        self.novel_prefill_tokens += t
-        self.rids_host[slot] = rid
-        # publish this prompt too (suffix blocks now hold its KV) —
-        # before any EOS teardown below frees the table
-        self.trie.insert(prompt, self.allocator.table(rid))
-        tok = int(np.asarray(first_dev)[0])
+    def _finish_admit(self, rid: int, rs: RequestState, slot: int,
+                      tok: int) -> None:
+        """Shared admission epilogue: record the first token and mark
+        the request RUNNING — or DONE immediately when the PREFILL's
+        token already ends it (EOS, or a max_new_tokens budget of 1).
+        Such requests never join a decode wave (the fast path's
+        _consume would otherwise skip them), so their times stamp
+        here."""
         eos = self.scfg.eos_token
         rs.status, rs.slot = RUNNING, slot
         rs.outputs.append(tok)
         rs.planned = 1
-        rs.first_token_time = None
+        rs.first_token_time = None         # stamped after latency charge
         self.slots[slot] = rid
         if (eos >= 0 and tok == eos) or rs.request.max_new_tokens <= 1:
             rs.status = DONE
@@ -1020,8 +1044,170 @@ class ServingEngine:
             rs.token_times = [self.clock]
             rs.finish_time = self.clock
             self.slots[slot] = None
-            self.allocator.free(rid)
-        return t
+            if self.allocator is not None:
+                self.allocator.free(rid)
+
+    def _suffix_coords(self, row: np.ndarray, start: int, t: int,
+                       width: int) -> tuple[np.ndarray, np.ndarray]:
+        """Token-granular pool scatter coordinates for ``width`` suffix
+        positions beginning at absolute position ``start`` (``t`` of
+        them real); padding past ``t`` routes to the sentinel trash
+        block."""
+        bs = self.block_size
+        nb = self.scfg.max_len // bs
+        pos = start + np.arange(width)
+        bids = np.where(np.arange(width) < t,
+                        row[np.minimum(pos // bs, nb - 1)],
+                        self.sentinel).astype(np.int32)
+        sids = (pos % bs).astype(np.int32)
+        return bids, sids
+
+    def _commit_suffix_group(self, bucket: int,
+                             group: list[tuple]) -> int:
+        """Prefill + commit one same-bucket admission group through the
+        SUFFIX path: ONE batched suffix-prefill dispatch (each row's
+        cached prefix gathered from the pool through its table — all
+        zeros for plain riders) and ONE donated multi-slot commit
+        dispatch (per-row CoW -> suffix scatter -> hot-row rebuild ->
+        first-token sample -> PAM placement; ``_suffix_commit_fn``).
+        Also commits FINAL chunked-prefill slices (``start`` = the last
+        slice's begin; earlier slices already live in the pool).
+        Returns the novel-token count — the group's actual prefill
+        cost."""
+        bs = self.block_size
+        nb = self.scfg.max_len // bs
+        n = len(group)
+        padded = np.zeros((n, bucket), np.int32)
+        suf_lens = np.zeros((n,), np.int32)
+        starts = np.zeros((n,), np.int32)
+        full_lens = np.zeros((n,), np.int32)
+        rows = np.zeros((n, nb), np.int32)
+        read_rows = np.zeros((n, nb), np.int32)
+        bids = np.zeros((n, bucket), np.int32)
+        sids = np.zeros((n, bucket), np.int32)
+        cow_srcs = np.full((n,), self.sentinel, np.int32)
+        cow_dsts = np.full((n,), self.sentinel, np.int32)
+        cow_pins: list[int] = []
+        for i, (rid, _, prompt, s_len, _, _, start, cow_src) \
+                in enumerate(group):
+            t = s_len - start
+            padded[i, :t] = prompt[start:]
+            suf_lens[i], starts[i], full_lens[i] = t, start, s_len
+            row = self.allocator.padded_table(rid, nb, self.sentinel)
+            rows[i] = row
+            # READ view of the table for the prefix gather: a CoW row's
+            # tail positions live in the publisher's cow_src until the
+            # commit dispatch duplicates it — the prefill runs first,
+            # so it must read through the source block
+            read_rows[i] = row
+            if cow_src >= 0:
+                nfull = start // bs
+                read_rows[i, nfull] = cow_src
+                cow_srcs[i] = cow_src
+                cow_dsts[i] = row[nfull]
+                cow_pins.append(cow_src)
+            bids[i], sids[i] = self._suffix_coords(row, start, t, bucket)
+        pre = _suffix_prefill_fn(self.cfg, self.scfg.max_len)
+        logits, suf_k, suf_v = pre(
+            self.params, jnp.asarray(padded), self.cache.pk,
+            self.cache.pv, jnp.asarray(read_rows), jnp.asarray(starts),
+            jnp.asarray(suf_lens))
+        self.prefill_dispatches += 1
+        slots = np.array([g[4] for g in group], np.int32)
+        rids = np.array([g[0] for g in group], np.uint32)
+        fn = _suffix_commit_fn(self.pam_cfg, bs, n,
+                               self.scfg.temperature, self.scfg.top_k,
+                               self.hot_window, self.scfg.sample_seed)
+        (self.cache, self.pam_state, self.tokens_dev, first_dev) = fn(
+            self.cache, self.pam_state, self.tokens_dev, suf_k, suf_v,
+            logits, jnp.asarray(slots), jnp.asarray(full_lens),
+            jnp.asarray(rids), jnp.asarray(rows), jnp.asarray(bids),
+            jnp.asarray(sids), jnp.asarray(cow_srcs),
+            jnp.asarray(cow_dsts))
+        self.admit_dispatches += 1
+        for src in cow_pins:
+            # the dispatch reading cow_src is enqueued; device ordering
+            # makes any later reuse of the block safe — release the pin
+            self.allocator.decref(src)
+            self.cow_copies += 1
+        if self.trie is not None:
+            self.novel_prefill_tokens += int(suf_lens.sum())
+        for rid, _, _, _, slot, *_rest in group:
+            self.rids_host[slot] = rid
+        if self.trie is not None:
+            # publish AFTER the commit lands the suffix KV in the pool
+            # and before any EOS teardown frees the tables
+            for rid, _, prompt, _, _, *_rest in group:
+                self.trie.insert(prompt, self.allocator.table(rid))
+        firsts = np.asarray(first_dev)
+        for i, (rid, rs, _, _, slot, *_rest) in enumerate(group):
+            self._finish_admit(rid, rs, slot, int(firsts[i]))
+        return int(suf_lens.sum())
+
+    # --------------------------------------------- chunked prefill (PR 8)
+    def _advance_chunks(self) -> int:
+        """Advance every in-flight chunked admission by ONE slice (one
+        fused dispatch each): intermediate slices scatter their KV into
+        the pool (``_chunk_fill_fn``); the final slice commits through
+        the batched suffix path, seeding the first token — the request
+        turns RUNNING and joins the next decode wave. Returns prefill
+        tokens processed (the latency model's admission charge), which
+        never exceeds ``prefill_chunk`` per in-flight admission per
+        step: that bound is what turns one monolithic prefill stall
+        into evenly-spread slices."""
+        if not self._chunking:
+            return 0
+        total = 0
+        for rid in list(self._chunking):
+            plan = self._chunking[rid]
+            begin, t = plan.next_slice()
+            final = begin + t >= plan.total
+            rs = self.requests[rid]
+            prompt = np.asarray(rs.request.prompt, np.int32)
+            if final:
+                del self._chunking[rid]
+                # cow_src is -1 here by construction: a chunked plan
+                # has >= 2 slices, so the first (CoW-carrying) slice
+                # was an intermediate fill
+                self._commit_suffix_group(
+                    self._bucket_len(t),
+                    [(rid, rs, prompt, plan.total, plan.slot, None,
+                      begin, -1)])
+            else:
+                self._chunk_fill(plan, prompt, begin, t)
+                plan.done += t
+            plan.slices += 1
+            self.chunk_slices += 1
+            self.max_chunk_slice = max(self.max_chunk_slice, t)
+            total += t
+        return total
+
+    def _chunk_fill(self, plan: ChunkPlan, prompt: np.ndarray,
+                    begin: int, t: int) -> None:
+        """One INTERMEDIATE slice: a single fused dispatch (optional
+        first-slice CoW -> prefix gather -> suffix prefill over the
+        slice -> pool scatter). Slices are always exactly ``budget``
+        tokens, so this traces once per engine config."""
+        nb = self.scfg.max_len // self.block_size
+        bs = self.block_size
+        row = self.allocator.padded_table(plan.rid, nb, self.sentinel)
+        cow = plan.cow_src >= 0
+        cow_dst = row[begin // bs] if cow else self.sentinel
+        bids, sids = self._suffix_coords(row, begin, t, t)
+        fn = _chunk_fill_fn(self.cfg, self.scfg.max_len, cow)
+        self.cache = fn(
+            self.params, self.cache,
+            jnp.asarray(prompt[begin:begin + t][None]),
+            jnp.asarray(row), jnp.int32(begin), jnp.int32(t),
+            jnp.asarray(bids), jnp.asarray(sids),
+            jnp.int32(max(plan.cow_src, 0)), jnp.int32(cow_dst))
+        self.prefill_dispatches += 1
+        if cow:
+            self.allocator.decref(plan.cow_src)
+            self.cow_copies += 1
+            plan.cow_src = -1
+        if self.trie is not None:
+            self.novel_prefill_tokens += t
 
     # ------------------------------------------------------------ stepping
     def step(self) -> dict[str, Any]:
@@ -1029,9 +1215,13 @@ class ServingEngine:
         all running sequences — a single fused device dispatch. Returns
         step stats."""
         t0 = time.perf_counter()
-        prefill_tokens = self._admit()
+        prefill_tokens = self._admit() + self._advance_chunks()
 
-        active_np = np.array([s is not None for s in self.slots])
+        # decode-eligible = occupied AND past prefill (a chunking slot
+        # is claimed but PREFILLING until its final slice commits)
+        active_np = np.array([
+            s is not None and self.requests[s].status == RUNNING
+            for s in self.slots])
         stats: dict[str, Any] = {"prefill_tokens": prefill_tokens,
                                  "active": int(active_np.sum()),
                                  "tier_reads": np.zeros(3, np.int64),
@@ -1139,10 +1329,17 @@ class ServingEngine:
         while self.steps < max_steps:
             if not self.waiting and all(s is None for s in self.slots):
                 break
-            prefill_tokens = self._admit()
+            prefill_tokens = self._admit() + self._advance_chunks()
             pairs = [(i, rid) for i, rid in enumerate(self.slots)
-                     if rid is not None]
+                     if rid is not None
+                     and self.requests[rid].status == RUNNING]
             if not pairs:
+                if self._chunking:
+                    # chunk slices are filling with nothing decoding:
+                    # charge the admission latency directly (there is
+                    # no decode dispatch to carry it) so TTFT stays
+                    # honest in micro mode
+                    self._charge_prefill_only(prefill_tokens)
                 if prefill_tokens:
                     continue   # the whole admission wave finished at
                     # prefill (EOS / 1-token budgets); admit the rest
@@ -1241,6 +1438,21 @@ class ServingEngine:
                         if self.allocator is not None:
                             self.allocator.free(rid)
 
+    def _charge_prefill_only(self, prefill_tokens: int) -> None:
+        """Clock charge for a fast-path iteration that did admission/
+        chunk-fill work but dispatched no decode step (nothing RUNNING
+        yet). Only the chunked path takes it — legacy admission waves
+        keep their PR 1 timing behavior bit-for-bit."""
+        stats = {"prefill_tokens": prefill_tokens, "active": 0,
+                 "tier_reads": np.zeros(3, np.int64), "moved_tokens": 0,
+                 "batch_lengths": np.asarray(self.cache.lengths)}
+        if self.latency_model is not None:
+            self.clock += float(self.latency_model(stats))
+        else:
+            wall = time.perf_counter()
+            self.clock += wall - self._wall_anchor
+            self._wall_anchor = wall
+
     # ------------------------------------------ cluster / migration hooks
     def can_accept(self, n_tokens: int, *,
                    reserve_queued: bool = True) -> bool:
@@ -1301,11 +1513,13 @@ class ServingEngine:
         """Per running request: total importance mass (sum of the eq. 7
         EMA over its tokens) — the balancer's migration-victim signal
         (move the LOWEST mass first: cheapest accuracy stake)."""
+        running = [(slot, rid) for slot, rid in enumerate(self.slots)
+                   if rid is not None
+                   and self.requests[rid].status == RUNNING]
         if self.pam_cfg is None:
-            return {rid: 0.0 for rid in self.slots if rid is not None}
+            return {rid: 0.0 for _, rid in running}
         mass = np.asarray(jnp.sum(self.pam_state.importance, axis=-1))
-        return {rid: float(mass[slot])
-                for slot, rid in enumerate(self.slots) if rid is not None}
+        return {rid: float(mass[slot]) for slot, rid in running}
 
     def _require_migratable(self) -> None:
         if self.cache.k.size == 0 or self.cache.conv.size > 0 \
@@ -1480,6 +1694,10 @@ class ServingEngine:
             out["hot_bytes_per_slot"] = int(
                 (self.cache.k.nbytes + self.cache.v.nbytes)
                 // self.scfg.max_batch)
+        if self.chunk:
+            out["chunked_admissions"] = self.chunked_admissions
+            out["chunk_slices"] = self.chunk_slices
+            out["max_chunk_slice_tokens"] = self.max_chunk_slice
         if self.trie is not None:
             out["prefix_hits"] = self.prefix_hits
             out["cached_prefix_tokens"] = self.cached_prefix_tokens

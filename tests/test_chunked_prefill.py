@@ -1,0 +1,247 @@
+"""Chunked prefill (PR 8): bounded admission slices interleaved with
+decode, bit-identical to single-shot admission.
+
+Acceptance invariants pinned here:
+  * twin exactness — greedy, sampled (temperature + top-k), micro k=8,
+    and across a mid-decode migration;
+  * no engine step prefills more than ``prefill_chunk`` tokens per
+    in-flight admission (``max_chunk_slice_tokens``);
+  * decode keeps exactly ONE fused dispatch per device step while
+    chunks advance, and running requests keep emitting tokens while a
+    long prompt is still filling (the latency-spike fix);
+  * chunked admission composes with the prefix cache (trie hit + CoW);
+  * the PR 7 follow-on: same-bucket trie and plain admissions batch
+    through ONE suffix prefill + ONE donated multi-slot commit.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import build_model, make_engine, make_pam, make_requests
+from repro.frontend.chunking import ChunkPlan, plan_slices, validate_budget
+from repro.serving import Request
+from repro.serving.engine import PREFILLING, RUNNING
+
+
+def _chunk_engine(name="dev", chunk=8, max_len=64, latency=None, **kw):
+    cfg, params = build_model()
+    pam = make_pam(max_len=max_len)
+    return cfg, make_engine(cfg, params, pam=pam, name=name,
+                            latency=latency, max_batch=4, max_len=max_len,
+                            block_size=8, prefill_chunk=chunk, **kw)
+
+
+def _streams(eng, rids):
+    return {i: list(eng.requests[i].outputs) for i in rids}
+
+
+# --------------------------------------------------------- host planning
+def test_plan_slices_covers_and_bounds():
+    for start, total, budget in ((0, 30, 8), (5, 64, 16), (12, 13, 4)):
+        slices = plan_slices(start, total, budget)
+        assert slices[0][0] == start
+        assert sum(t for _, t in slices) == total - start
+        assert all(t == budget for _, t in slices[:-1])
+        assert 0 < slices[-1][1] <= budget
+        ends = [b + t for b, t in slices]
+        assert ends == [b for b, _ in slices[1:]] + [total]
+
+
+def test_chunk_plan_next_slice_walks_schedule():
+    plan = ChunkPlan(rid=0, slot=1, start=3, total=20, budget=8)
+    seen = []
+    while not plan.finished:
+        begin, t = plan.next_slice()
+        seen.append((begin, t))
+        plan.done += t
+    assert seen == plan_slices(3, 20, 8)
+
+
+def test_validate_budget_rejects_non_pow2():
+    validate_budget(16)
+    for bad in (0, -8, 3, 12):
+        with pytest.raises(ValueError):
+            validate_budget(bad)
+
+
+def test_engine_rejects_chunk_without_paged_pool():
+    cfg, params = build_model()
+    with pytest.raises(ValueError):
+        make_engine(cfg, params, pam=make_pam(), max_batch=2, max_len=64,
+                    block_size=0, prefill_chunk=8)
+
+
+# --------------------------------------------------------- twin exactness
+def _mixed_requests(cfg, plens=(30, 9, 16, 5), max_new=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(id=i, prompt=rng.integers(0, cfg.vocab, p),
+                    max_new_tokens=max_new)
+            for i, p in enumerate(plens)]
+
+
+@pytest.mark.parametrize("sampling", ["greedy", "sampled"])
+def test_chunked_twin_exact(sampling):
+    kw = ({} if sampling == "greedy"
+          else dict(temperature=0.8, top_k=8, sample_seed=7))
+    cfg, eng = _chunk_engine("chunked", chunk=8, **kw)
+    _, twin = _chunk_engine("twin", chunk=0, **kw)
+    for e in (eng, twin):
+        for r in _mixed_requests(cfg):
+            e.submit(Request(id=r.id, prompt=r.prompt,
+                             max_new_tokens=r.max_new_tokens))
+        e.run()
+    assert _streams(eng, range(4)) == _streams(twin, range(4))
+    s = eng.summary()
+    # prompts of 30, 9 and 16 novel tokens exceed the budget of 8
+    assert s["chunked_admissions"] == 3
+    assert s["max_chunk_slice_tokens"] <= 8
+    assert twin.summary().get("chunked_admissions") is None
+
+
+def test_chunked_twin_exact_micro8():
+    cfg, eng = _chunk_engine("chunked", chunk=8, micro_steps=8)
+    _, twin = _chunk_engine("twin", chunk=0, micro_steps=8)
+    for e in (eng, twin):
+        for r in _mixed_requests(cfg, max_new=12):
+            e.submit(Request(id=r.id, prompt=r.prompt,
+                             max_new_tokens=r.max_new_tokens))
+        e.run()
+    assert _streams(eng, range(4)) == _streams(twin, range(4))
+    assert eng.summary()["chunked_admissions"] == 3
+
+
+def test_chunked_twin_exact_across_migration():
+    from repro.cluster import can_migrate, migrate
+
+    twin_cfg, twin = _chunk_engine("twin", chunk=0)
+    reqs = _mixed_requests(twin_cfg, plens=(30, 12, 26), max_new=10)
+    for r in reqs:
+        twin.submit(Request(id=r.id, prompt=r.prompt,
+                            max_new_tokens=r.max_new_tokens))
+    twin.run()
+
+    _, src = _chunk_engine("src", chunk=8)
+    _, dst = _chunk_engine("dst", chunk=8)
+    for r in reqs:
+        src.submit(Request(id=r.id, prompt=r.prompt,
+                           max_new_tokens=r.max_new_tokens))
+    # step past the chunked fills into mid-decode, then migrate rid 0
+    while (0 not in src.requests
+           or src.requests[0].status != RUNNING
+           or len(src.requests[0].outputs) < 3):
+        src.step()
+    assert can_migrate(src, dst, 0)
+    migrate(src, dst, 0)
+    while any(s is not None for s in src.slots) or src.waiting:
+        src.step()
+    while any(s is not None for s in dst.slots) or dst.waiting:
+        dst.step()
+    assert dst.requests[0].outputs == twin.requests[0].outputs
+    for rid in (1, 2):
+        assert src.requests[rid].outputs == twin.requests[rid].outputs
+
+
+def test_chunked_composes_with_prefix_cache_cow():
+    cfg, params = build_model()
+    rng = np.random.default_rng(4)
+    shared = rng.integers(0, cfg.vocab, 12)       # unaligned vs block 8
+    prompts = [np.concatenate([shared, rng.integers(0, cfg.vocab, 18)])
+               for _ in range(2)]
+
+    def run(chunk, cache):
+        pam = make_pam(max_len=64)
+        eng = make_engine(cfg, params, pam=pam, name="e", max_batch=1,
+                          max_len=64, block_size=8, prefix_cache=cache,
+                          prefill_chunk=chunk)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(id=i, prompt=p, max_new_tokens=6))
+        eng.run()
+        return _streams(eng, range(2)), eng.summary()
+
+    ref, _ = run(0, False)
+    plain, s_plain = run(0, True)
+    chunked, s_chunk = run(8, True)
+    assert plain == ref and chunked == ref
+    # same trie behavior either way: one hit, one CoW of the shared tail
+    for s in (s_plain, s_chunk):
+        assert s["prefix_hits"] == 1 and s["cow_copies"] == 1
+    assert s_chunk["chunked_admissions"] >= 1
+
+
+# ------------------------------------------------- dispatch + interleave
+def test_decode_single_dispatch_and_interleave_while_chunking():
+    cfg, eng = _chunk_engine("dev", chunk=8, max_len=96)
+    short = make_requests(1, cfg.vocab, plen=8, max_new=24)[0]
+    long_ = Request(id=1,
+                    prompt=np.random.default_rng(9).integers(
+                        0, cfg.vocab, 40),
+                    max_new_tokens=4)
+    eng.submit(short)
+    eng.step()                          # short is RUNNING
+    assert eng.requests[0].status == RUNNING
+    eng.submit(long_)
+    eng.step()                          # long admits its first slice
+    assert eng.requests[1].status == PREFILLING
+    emitted = [len(eng.requests[0].outputs)]
+    while eng.requests[1].status == PREFILLING:
+        d0 = eng.decode_dispatches
+        eng.step()
+        emitted.append(len(eng.requests[0].outputs))
+        # decode stays ONE fused dispatch per step while a slice fills
+        assert eng.decode_dispatches - d0 == 1
+    # the running request kept streaming during every fill step
+    assert all(b - a == 1 for a, b in zip(emitted, emitted[1:]))
+    eng.run()
+    assert eng.decode_dispatches == eng.decode_device_steps
+    s = eng.summary()
+    assert s["chunk_slices"] == len(plan_slices(0, 40, 8))
+    assert s["max_chunk_slice_tokens"] <= 8
+
+
+def test_chunk_slice_lengths_bounded_by_budget():
+    cfg, eng = _chunk_engine("dev", chunk=16, max_len=96)
+    rng = np.random.default_rng(2)
+    for i, plen in enumerate((70, 33, 17)):
+        eng.submit(Request(id=i, prompt=rng.integers(0, cfg.vocab, plen),
+                           max_new_tokens=4))
+    eng.run()
+    s = eng.summary()
+    assert s["chunked_admissions"] == 3
+    assert s["max_chunk_slice_tokens"] <= 16
+    assert s["chunk_slices"] == sum(
+        len(plan_slices(0, p, 16)) for p in (70, 33, 17))
+
+
+# ------------------------------------- PR 7 follow-on: batched trie path
+def test_trie_and_plain_admissions_batch_in_one_commit():
+    """A prefix-cache hit and a plain same-bucket admission arriving
+    together ride ONE batched suffix prefill + ONE donated multi-slot
+    commit, and the plain rider's stream is untouched by sharing."""
+    cfg, params = build_model()
+    rng = np.random.default_rng(6)
+    parent = rng.integers(0, cfg.vocab, 24)       # 3 full blocks
+    child = np.concatenate([parent[:16],          # trie hit: 16 cached,
+                            rng.integers(0, cfg.vocab, 12)])  # 12 novel
+    plain = rng.integers(0, cfg.vocab, 14)        # novel bucket 16, like
+    #                                               the child's suffix
+
+    pam = make_pam(max_len=64)
+    eng = make_engine(cfg, params, pam=pam, name="dev", max_batch=4,
+                      max_len=64, block_size=8, prefix_cache=True)
+    eng.submit(Request(id=0, prompt=parent, max_new_tokens=4))
+    eng.step()                                    # parent published
+    eng.submit(Request(id=1, prompt=child, max_new_tokens=4))
+    eng.submit(Request(id=2, prompt=plain, max_new_tokens=4))
+    p0, a0 = eng.prefill_dispatches, eng.admit_dispatches
+    eng.step()
+    assert eng.prefill_dispatches - p0 == 1       # one batched prefill
+    assert eng.admit_dispatches - a0 == 1         # one multi-slot commit
+    assert eng.summary()["prefix_hits"] == 1
+    eng.run()
+
+    ref = make_engine(cfg, params, pam=make_pam(max_len=64), name="ref",
+                      max_batch=4, max_len=64, block_size=8)
+    for rid, prompt in ((0, parent), (1, child), (2, plain)):
+        ref.submit(Request(id=rid, prompt=prompt, max_new_tokens=4))
+    ref.run()
+    assert _streams(eng, range(3)) == _streams(ref, range(3))

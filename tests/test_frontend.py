@@ -1,0 +1,380 @@
+"""Continuous-batching front end (PR 8): load generator, async
+streaming server, SLO admission, and the router hooks they drive.
+
+Pinned here:
+  * traces are seeded-deterministic, time-ordered, and match their
+    statistical shape (gamma burstier than poisson, onoff arrivals
+    confined to ON windows);
+  * scoring counts TTFT/TPOT/attainment the way the bench relies on,
+    and stream integrity catches lost and duplicated tokens;
+  * every stream the server emits is bit-identical to a direct engine
+    run of the same requests — the front end adds latency accounting,
+    never tokens;
+  * the NDJSON endpoint round-trips concurrent streams exactly;
+  * SLO admission sheds provably-late requests and force-preempts for
+    a starving head, and disarms shedding in wall-clock mode;
+  * ``ClusterRouter.shed`` / ``force_preempt`` touch only what their
+    contracts say (queued requests; recovery-backed fleets).
+"""
+
+import asyncio
+import json
+
+import numpy as np
+import pytest
+
+from conftest import build_model, make_engine, make_pam
+from repro.frontend.admission import SLOAdmission, SLOSpec
+from repro.frontend.loadgen import (TRACE_KINDS, TraceConfig, make_trace,
+                                    score, stream_integrity)
+from repro.frontend.server import (AsyncServer, StreamRecord,
+                                   single_device_router)
+from repro.perfmodel import make_latency_model
+from repro.perfmodel.model import PAM_LLAMA_7B, make_system
+from repro.serving import Request
+
+
+def _latency():
+    return make_latency_model(make_system("pam"), PAM_LLAMA_7B)
+
+
+def _engine(max_batch=4, max_len=96, chunk=8, latency="model", **kw):
+    cfg, params = build_model()
+    lat = _latency() if latency == "model" else latency
+    return cfg, make_engine(cfg, params, pam=make_pam(max_len=max_len,
+                                                      hot=12, warm=24),
+                            latency=lat, max_batch=max_batch,
+                            max_len=max_len, block_size=8,
+                            prefill_chunk=chunk, **kw)
+
+
+def _twin_outputs(tcfg, max_batch=4, max_len=96, chunk=8):
+    """Direct engine run of the same trace: the exactness reference."""
+    _, twin = _engine(max_batch=max_batch, max_len=max_len, chunk=chunk)
+    for r in make_trace(tcfg):
+        twin.submit(Request(id=r.id, prompt=r.prompt,
+                            max_new_tokens=r.max_new_tokens))
+    twin.run()
+    return {rid: rs.outputs for rid, rs in twin.requests.items()}
+
+
+# ------------------------------------------------------------------ loadgen
+@pytest.mark.parametrize("kind", TRACE_KINDS)
+def test_trace_deterministic_and_time_ordered(kind):
+    tcfg = TraceConfig(kind=kind, n_requests=64, rate_rps=100.0,
+                       prompt_len=(4, 20), max_new=(2, 9), seed=5,
+                       first_id=10)
+    a, b = make_trace(tcfg), make_trace(tcfg)
+    assert [r.id for r in a] == list(range(10, 74))
+    for ra, rb in zip(a, b):
+        assert ra.arrival == rb.arrival
+        assert ra.max_new_tokens == rb.max_new_tokens
+        assert np.array_equal(ra.prompt, rb.prompt)
+        assert 4 <= len(ra.prompt) <= 20 and 2 <= ra.max_new_tokens <= 9
+    arr = [r.arrival for r in a]
+    assert arr == sorted(arr) and arr[0] > 0
+
+
+def test_gamma_burstier_than_poisson():
+    def cv2(kind, **kw):
+        t = np.array([r.arrival for r in make_trace(TraceConfig(
+            kind=kind, n_requests=4000, rate_rps=100.0, seed=1, **kw))])
+        g = np.diff(t)
+        return float(np.var(g) / np.mean(g) ** 2)
+
+    assert 0.7 < cv2("poisson") < 1.4      # memoryless: CV^2 ~= 1
+    assert cv2("gamma", burstiness=4.0) > 2.5
+
+
+def test_onoff_arrivals_confined_to_on_windows():
+    tcfg = TraceConfig(kind="onoff", n_requests=300, rate_rps=80.0,
+                       duty_cycle=0.25, period_s=1.0, seed=2)
+    phase = np.array([r.arrival for r in make_trace(tcfg)]) % 1.0
+    assert np.all(phase < 0.25 + 1e-9)
+
+
+def test_trace_validation_errors():
+    for bad in (TraceConfig(kind="weibull"),
+                TraceConfig(rate_rps=0.0),
+                TraceConfig(kind="gamma", burstiness=-1.0),
+                TraceConfig(kind="onoff", duty_cycle=1.5),
+                TraceConfig(prompt_len=(9, 4)),
+                TraceConfig(max_new=(0, 4))):
+        with pytest.raises(ValueError):
+            make_trace(bad)
+
+
+def _rec(rid, arrival, times, indices=None, done=True, rejected=False):
+    times = list(times)
+    return StreamRecord(
+        rid=rid, arrival=arrival, prompt_len=8, max_new=len(times),
+        tokens=[100 + i for i in range(len(times))], times=times,
+        indices=list(indices if indices is not None
+                     else range(len(times))),
+        done=done, rejected=rejected)
+
+
+def test_score_counts_attainment_and_integrity():
+    records = [
+        _rec(0, 0.0, [0.1, 0.2, 0.3]),                 # attains
+        _rec(1, 0.0, [], rejected=True),               # rejected
+        _rec(2, 0.0, [0.9, 1.0, 1.1], indices=[0, 2, 3]),   # lost idx 1
+        _rec(3, 0.0, [0.9, 1.0, 1.1], indices=[0, 1, 1]),   # dup idx 1
+        _rec(4, 0.0, [0.05], done=False),              # never finished
+    ]
+    assert stream_integrity(records) == (1, 1)
+    sc = score(records, ttft_slo_s=0.15, tpot_slo_s=0.15)
+    assert sc["n"] == 5 and sc["finished"] == 3 and sc["rejected"] == 1
+    assert sc["lost_tokens"] == 1 and sc["dup_tokens"] == 1
+    # only rid 0 is finished AND inside both budgets
+    assert sc["slo_attainment"] == pytest.approx(1 / 5)
+    assert sc["ttft_s"]["p50"] == pytest.approx(0.9)   # of [.1, .9, .9]
+    assert sc["tpot_s"]["p50"] == pytest.approx(0.1)
+    # pooled gaps: six decode gaps of 0.1 across the finished streams
+    assert sc["itl_s"]["p99"] == pytest.approx(0.1)
+
+
+def test_score_empty_is_neutral():
+    sc = score([], ttft_slo_s=1.0, tpot_slo_s=1.0)
+    assert sc["n"] == 0 and sc["slo_attainment"] == 1.0
+    assert sc["ttft_s"]["p99"] == 0.0
+
+
+# ------------------------------------------------------------------- server
+def test_server_streams_match_direct_engine_run():
+    tcfg = TraceConfig(kind="poisson", n_requests=8, rate_rps=200.0,
+                       prompt_len=(6, 40), max_new=(3, 10), seed=7)
+    _, eng = _engine()
+    srv = AsyncServer(eng)
+    records = asyncio.run(srv.serve_trace(make_trace(tcfg)))
+    twin = _twin_outputs(tcfg)
+    assert set(records) == set(twin)
+    for rid, rec in records.items():
+        assert rec.done and not rec.rejected
+        assert rec.tokens == twin[rid]
+        assert rec.indices == list(range(len(rec.tokens)))
+        assert rec.times == sorted(rec.times)
+        assert rec.times[0] >= rec.arrival
+    assert stream_integrity(records.values()) == (0, 0)
+    assert srv.summary()["requests"] == 8
+
+
+def test_stream_handle_iterates_live_events():
+    _, eng = _engine()
+    srv = AsyncServer(eng, ticks_per_yield=1)
+
+    async def run():
+        rng = np.random.default_rng(0)
+        h = srv.submit(rng.integers(0, 1000, 12), 6)
+
+        async def collect():
+            return [ev async for ev in h]
+
+        evs, _ = await asyncio.gather(collect(), srv.drain())
+        return h.record, evs
+
+    rec, evs = asyncio.run(run())
+    assert [ev.token for ev in evs] == rec.tokens and len(evs) == 6
+    assert [ev.index for ev in evs] == list(range(6))
+    assert evs[-1].done and not any(ev.rejected for ev in evs)
+
+
+def test_duplicate_rid_rejected_at_submit():
+    _, eng = _engine()
+    srv = AsyncServer(eng)
+    srv.submit([1, 2, 3], 2, rid=5)
+    with pytest.raises(ValueError):
+        srv.submit([4, 5, 6], 2, rid=5)
+
+
+def test_unserviceable_request_rejects_synchronously():
+    _, eng = _engine(max_len=64)
+    srv = AsyncServer(eng)
+    h = srv.submit(np.zeros(200, np.int32), 4)   # window 204 > 64
+
+    async def collect():
+        return [ev async for ev in h]
+
+    evs = asyncio.run(collect())                 # no pump needed
+    assert len(evs) == 1 and evs[0].rejected and evs[0].done
+    assert h.record.rejected and h.record.tokens == []
+    assert srv.summary()["rejected"] == 1
+
+
+def test_ndjson_endpoint_streams_exactly():
+    tcfg = TraceConfig(kind="poisson", n_requests=4, rate_rps=500.0,
+                       prompt_len=(6, 24), max_new=(3, 8), seed=9)
+    reqs = make_trace(tcfg)
+    twin = _twin_outputs(tcfg)
+    _, eng = _engine()
+    srv = AsyncServer(eng, ticks_per_yield=1)
+
+    async def client(port, req):
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        writer.write(json.dumps({
+            "prompt": [int(t) for t in req.prompt],
+            "max_new_tokens": req.max_new_tokens,
+            "id": req.id}).encode() + b"\n")
+        await writer.drain()
+        evs = []
+        while True:
+            line = await reader.readline()
+            if not line:
+                break
+            evs.append(json.loads(line))
+            if evs[-1]["done"]:
+                break
+        writer.close()
+        return evs
+
+    async def run():
+        server, port, pump = await srv.serve_endpoint()
+        try:
+            return await asyncio.gather(*(client(port, r) for r in reqs))
+        finally:
+            pump.cancel()
+            server.close()
+            await server.wait_closed()
+
+    streams = asyncio.run(run())
+    for req, evs in zip(reqs, streams):
+        assert [ev["token"] for ev in evs] == twin[req.id]
+        assert [ev["index"] for ev in evs] == list(range(len(evs)))
+        assert evs[-1]["done"] and not any(ev["rejected"] for ev in evs)
+
+
+# ---------------------------------------------------------- SLO admission
+def test_slospec_validation():
+    for bad in (dict(ttft_s=0.0), dict(tpot_s=-1.0),
+                dict(starvation_frac=0.0), dict(starvation_frac=1.0)):
+        with pytest.raises(ValueError):
+            SLOSpec(**bad)
+
+
+def test_slo_admission_sheds_under_overload():
+    # a burst far beyond one small device's capacity with a tight TTFT
+    # budget: admission must shed rather than serve everyone late
+    tcfg = TraceConfig(kind="gamma", n_requests=24, rate_rps=5000.0,
+                       prompt_len=(16, 48), max_new=(4, 10), seed=3,
+                       burstiness=6.0)
+    _, eng = _engine(max_batch=2)
+    adm = SLOAdmission(SLOSpec(ttft_s=0.02, tpot_s=0.05))
+    srv = AsyncServer(eng, admission=adm)
+    records = asyncio.run(srv.serve_trace(make_trace(tcfg)))
+    sc = score(records.values(), ttft_slo_s=0.02, tpot_slo_s=0.05)
+    assert adm.shed > 0
+    assert sc["rejected"] == adm.shed
+    assert sc["finished"] + sc["rejected"] == tcfg.n_requests
+    assert sc["lost_tokens"] == 0 and sc["dup_tokens"] == 0
+    # survivors stream bit-identically to a direct run of the SAME
+    # requests (shedding changes membership, never tokens)
+    _, twin = _engine(max_batch=2)
+    for r in make_trace(tcfg):
+        if not records[r.id].rejected:
+            twin.submit(Request(id=r.id, prompt=r.prompt,
+                                max_new_tokens=r.max_new_tokens))
+    twin.run()
+    for rid, rec in records.items():
+        if not rec.rejected:
+            assert rec.tokens == twin.requests[rid].outputs
+
+
+def test_slo_admission_force_preempts_starving_head():
+    tcfg = TraceConfig(kind="poisson", n_requests=12, rate_rps=2000.0,
+                       prompt_len=(12, 40), max_new=(6, 14), seed=4)
+    _, eng = _engine(max_batch=2)
+    # generous TTFT (no shedding), aggressive starvation trigger
+    adm = SLOAdmission(SLOSpec(ttft_s=10.0, tpot_s=1.0,
+                               starvation_frac=0.001,
+                               preempt_cooldown_ticks=4))
+    srv = AsyncServer(eng, admission=adm)
+    records = asyncio.run(srv.serve_trace(make_trace(tcfg)))
+    assert adm.forced_preemptions > 0 and adm.shed == 0
+    assert all(r.done and not r.rejected for r in records.values())
+    assert stream_integrity(records.values()) == (0, 0)
+    # suspend/resume is exact: preempted streams still match the twin
+    twin = _twin_outputs(tcfg, max_batch=2)
+    for rid, rec in records.items():
+        assert rec.tokens == twin[rid]
+
+
+def test_wallclock_mode_disarms_shedding():
+    _, eng = _engine(latency=None)        # no model: no provable bound
+    router = single_device_router(eng)
+    adm = SLOAdmission(SLOSpec(ttft_s=1e-9, tpot_s=1.0))
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        router.submit(Request(id=i, prompt=rng.integers(0, 1000, 8),
+                              max_new_tokens=2, arrival=0.0))
+    router.tick()
+    assert adm._prefill_floor(router) == 0.0
+    queued = len(router.queue)
+    assert queued > 0
+    adm.control(router)
+    assert adm.shed == 0 and len(router.queue) == queued
+    # no RecoveryManager either: force-preempt must refuse, not crash
+    assert adm.forced_preemptions == 0
+    while router.tick():
+        pass
+    assert router.summary()["rejected"] == 0
+
+
+# ------------------------------------------------------------ router hooks
+def test_router_shed_hits_queued_requests_only():
+    _, eng = _engine(max_batch=2)
+    router = single_device_router(eng)
+    rng = np.random.default_rng(1)
+    for i in range(5):
+        router.submit(Request(id=i, prompt=rng.integers(0, 1000, 8),
+                              max_new_tokens=3, arrival=0.0))
+    router.tick()                          # 2 admitted, 3 queued
+    router.drain_events()
+    queued = [r.id for r in router.queue]
+    running = [i for i in range(5) if i not in queued]
+    assert len(queued) == 3 and len(running) == 2
+    assert router.shed(queued[0]) is True
+    evs = router.drain_events()
+    assert [ev.request_id for ev in evs if ev.rejected] == [queued[0]]
+    assert queued[0] not in [r.id for r in router.queue]
+    assert router.shed(running[0]) is False     # past admission
+    assert router.shed(999) is False            # unknown
+    while router.tick():
+        pass
+    s = router.summary()
+    assert s["finished"] == 4 and s["rejected"] == 1
+
+
+def test_force_preempt_suspends_victim_and_stays_exact():
+    cfg, eng = _engine(max_batch=1, max_len=64)
+    router = single_device_router(eng, preemptible=True)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab, 10) for _ in range(2)]
+    for i, p in enumerate(prompts):
+        router.submit(Request(id=i, prompt=p, max_new_tokens=10,
+                              arrival=0.0))
+    while not router.finished and not eng.requests.get(0, None):
+        router.tick()
+    while 0 in eng.slots and len(eng.requests[0].outputs) < 2:
+        router.tick()
+    assert router.force_preempt(999) is False   # unknown rid
+    assert router.force_preempt(1) is True      # suspends rid 0
+    assert [snap.request.id
+            for snap, _ in router.recovery.suspended] == [0]
+    while router.tick():
+        pass
+    assert router.summary()["finished"] == 2
+    # resume-after-preempt is exact
+    _, twin = _engine(max_batch=1, max_len=64)
+    for i, p in enumerate(prompts):
+        twin.submit(Request(id=i, prompt=p, max_new_tokens=10))
+    twin.run()
+    for i in range(2):
+        assert router.finished[i].outputs == twin.requests[i].outputs
+
+
+def test_force_preempt_requires_recovery_manager():
+    _, eng = _engine(max_batch=1)
+    router = single_device_router(eng)      # preemptible=False
+    router.submit(Request(id=0, prompt=np.zeros(8, np.int32),
+                          max_new_tokens=2, arrival=0.0))
+    assert router.force_preempt(0) is False

@@ -1,0 +1,95 @@
+"""`python -m repro.launch.serve` end-to-end, one smoke per mode
+(PR 8 satellite): the CLI is the repo's demo surface and its arg
+wiring — chunk validation, serve-mode plumbing, the socket driver —
+is exactly the code no other test exercises.
+
+Each test calls ``main(argv)`` in-process and parses what it printed:
+batch/cluster/chaos modes print a summary JSON doc followed by
+``SLO ...`` attainment lines; serve mode prints ONE JSON payload.
+"""
+
+import json
+
+import pytest
+
+from repro.launch.serve import main
+
+COMMON = ["--reduced", "--max-len", "64", "--prompt-len", "16",
+          "--gen-len", "4"]
+
+
+def _summary_and_slo(out: str):
+    """Split batch-mode output: indent-1 JSON doc, then SLO lines."""
+    lines = out.strip().splitlines()
+    cut = next(i for i, ln in enumerate(lines) if ln.startswith("SLO "))
+    return json.loads("\n".join(lines[:cut])), lines[cut:]
+
+
+def test_single_device_mode(capsys):
+    main(COMMON + ["--requests", "4"])
+    summary, slo = _summary_and_slo(capsys.readouterr().out)
+    assert summary["finished"] == 4
+    assert summary["total_tokens"] == 16
+    assert len(slo) == 3 and all("attainment" in ln for ln in slo)
+
+
+def test_single_device_chunked_prefill(capsys):
+    main(COMMON + ["--requests", "4", "--block-size", "8",
+                   "--prefill-chunk", "8"])
+    summary, _ = _summary_and_slo(capsys.readouterr().out)
+    assert summary["finished"] == 4
+    assert summary["chunked_admissions"] == 4      # 16-token prompts
+    assert summary["max_chunk_slice_tokens"] <= 8
+
+
+def test_chunk_without_paged_pool_is_an_argparse_error(capsys):
+    with pytest.raises(SystemExit) as ei:
+        main(COMMON + ["--prefill-chunk", "8"])
+    assert ei.value.code == 2
+    assert "--block-size" in capsys.readouterr().err
+
+
+def test_cluster_mode(capsys):
+    main(COMMON + ["--requests", "6", "--devices", "hbm:1,cxl:2",
+                   "--block-size", "8"])
+    summary, slo = _summary_and_slo(capsys.readouterr().out)
+    assert summary["finished"] == 6 and summary["rejected"] == 0
+    assert set(summary["devices"]) == {"hbm0", "cxl0", "cxl1"}
+    assert len(slo) == 3
+
+
+def test_chaos_mode(capsys):
+    main(COMMON + ["--requests", "12", "--devices", "hbm:1,cxl:2",
+                   "--block-size", "8", "--chaos", "kill:cxl1@6",
+                   "--chaos-seed", "0"])
+    summary, _ = _summary_and_slo(capsys.readouterr().out)
+    # graceful degradation: the kill is detected, the fleet loses the
+    # device, and every request still finishes
+    assert summary["finished"] == 12
+    assert summary["devices"]["cxl1"]["state"] == "dead"
+    assert summary["fault_tolerance"]["kills_detected"] == 1
+
+
+def test_serve_mode_in_process(capsys):
+    main(COMMON + ["--serve", "--requests", "6", "--trace", "gamma",
+                   "--rate", "200", "--block-size", "8",
+                   "--prefill-chunk", "8", "--trace-seed", "1"])
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["mode"] == "serve" and payload["trace"] == "gamma"
+    assert payload["port"] is None
+    sc = payload["score"]
+    assert sc["finished"] + sc["rejected"] == 6
+    assert sc["lost_tokens"] == 0 and sc["dup_tokens"] == 0
+    assert payload["backend"]["finished"] == sc["finished"]
+    assert {"shed", "forced_preemptions"} <= payload["admission"].keys()
+
+
+def test_serve_mode_over_socket(capsys):
+    main(COMMON + ["--serve", "--requests", "4", "--rate", "500",
+                   "--block-size", "8", "--prefill-chunk", "8",
+                   "--port", "0"])
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["port"] > 0                     # ephemeral bind
+    sc = payload["score"]
+    assert sc["finished"] + sc["rejected"] == 4
+    assert sc["lost_tokens"] == 0 and sc["dup_tokens"] == 0
