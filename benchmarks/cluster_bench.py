@@ -45,7 +45,8 @@ def _run_cluster(cfg, params, classes, scfg, trace, balanced: bool,
     summary["slo_attainment"] = router.slo_attainment(slo_s)
     summary["slo_s"] = slo_s
     summary["migrations_per_1k_ticks"] = (
-        1000.0 * summary["migrations"] / max(summary["ticks"], 1))
+        1000.0 * summary["balancer_migrations"]
+        / max(summary["ticks"], 1))
     return summary
 
 
@@ -96,7 +97,7 @@ def bench_cluster(n_requests: int = 96, slo_s: float = 0.05,
     out["cluster_tok_s"] = out["cluster_3dev"]["throughput_tok_s"]
     out["cluster_speedup_vs_best_single"] = (
         out["cluster_tok_s"] / max(best_single, 1e-9))
-    out["migrations"] = out["cluster_3dev"]["migrations"]
+    out["migrations"] = out["cluster_3dev"]["balancer_migrations"]
     return out
 
 
@@ -110,7 +111,7 @@ def cluster_rows(result: Optional[dict] = None) -> tuple[dict, list]:
                         for d, v in s["devices"].items())
         rows.append((f"cluster/{name}", s["makespan_s"] * 1e6,
                      f"tok_s={s['throughput_tok_s']:.1f} "
-                     f"migrations={s['migrations']} "
+                     f"migrations={s['balancer_migrations']} "
                      f"slo={s['slo_attainment']:.3f} util[{util}]"))
     rows.append(("cluster/speedup_vs_best_single", 0.0,
                  f"{res['cluster_speedup_vs_best_single']:.2f}x "

@@ -129,7 +129,7 @@ twin5.run()
 assert all(rs.outputs == twin5.requests[rid].outputs
            for rid, rs in router.finished.items())
 print(f"5. cluster served {cs['finished']} requests on "
-      f"{len(cs['devices'])} device classes, {cs['migrations']} "
+      f"{len(cs['devices'])} device classes, {cs['balancer_migrations']} "
       f"migrations, streams exact; aggregate "
       f"{cs['throughput_tok_s']:.0f} tok/s")
 print("quickstart OK")

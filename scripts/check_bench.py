@@ -21,6 +21,11 @@ Checks (prefix section, ``BENCH_pr7.json``):
   * peak pool occupancy monotonically helped: occupancy at the highest
     share ratio below the no-sharing ratio's (shared blocks count once)
 
+Checks (obs section, ``BENCH_pr9.json``):
+  * telemetry-on decode tok/s >= 0.95x telemetry-off (the PR 9
+    zero-allocation-when-disabled / cheap-when-enabled floor)
+  * token streams identical with collectors on and off
+
 Checks (serving section, ``BENCH_pr8.json``):
   * zero lost / duplicated streamed tokens across every scenario
   * SLO attainment >= 0.9 on the smoke trace (single-device Poisson)
@@ -72,6 +77,23 @@ def check_prefix(d: dict) -> None:
           f"{hi['pool_occupancy_peak']:.3f}")
 
 
+def check_obs(d: dict) -> None:
+    ratio = d["obs_overhead_ratio"]
+    assert ratio >= 0.95, (
+        f"telemetry overhead ratio {ratio:.3f} below the 0.95 floor — "
+        f"the collectors are no longer cheap on the decode fast path")
+    assert d["obs"]["streams_identical"] is True, (
+        "telemetry changed the token streams")
+    assert d["obs"]["enabled"]["trace_events"] > 0, (
+        "enabled run recorded no trace events — the collector was not "
+        "actually active during the measurement")
+    print(f"obs bench OK: telemetry-on decode "
+          f"{d['obs_decode_tok_s_enabled']:.0f} tok/s = {ratio:.3f}x "
+          f"telemetry-off {d['obs_decode_tok_s_disabled']:.0f} "
+          f"(floor 0.95), {d['obs']['enabled']['trace_events']} trace "
+          f"events, streams identical")
+
+
 def check_serving(d: dict) -> None:
     lost = d["serving_tokens_lost"]
     assert lost == 0, (
@@ -112,6 +134,9 @@ def main(path: str, floor: float = 100.0) -> None:
         done = True
     if "serving_slo_attainment" in d:
         check_serving(d)
+        done = True
+    if "obs_overhead_ratio" in d:
+        check_obs(d)
         done = True
     if done and "dispatches_per_step" not in d:
         return                           # section-only bench file

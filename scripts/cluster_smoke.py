@@ -43,8 +43,8 @@ def main():
     summary = router.run()
 
     assert summary["finished"] == 8, summary
-    assert summary["migrations"] >= 1, \
-        f"no migrations: {summary['migrations']}"
+    assert summary["balancer_migrations"] >= 1, \
+        f"no migrations: {summary['balancer_migrations']}"
 
     # exactness: every stream equals an unmigrated twin's
     twin = ServingEngine(cfg, params, scfg)
@@ -58,7 +58,7 @@ def main():
     moved = [d for d, v in summary["devices"].items()
              if v["migrations_in"] or v["migrations_out"]]
     print(f"cluster smoke OK: {summary['finished']} requests, "
-          f"{summary['migrations']} migrations across {moved}, "
+          f"{summary['balancer_migrations']} migrations across {moved}, "
           f"{summary['throughput_tok_s']:.0f} tok/s aggregate, "
           f"streams exact")
 

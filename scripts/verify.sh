@@ -8,6 +8,7 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 BENCH_OUT="${BENCH_OUT:-/tmp/BENCH_smoke.json}"
+TRACE_OUT="${TRACE_OUT:-/tmp/pam_trace_smoke.json}"
 
 if [[ "${1:-}" != "--bench-only" ]]; then
     echo "== tier-1 tests =="
@@ -29,5 +30,8 @@ if [[ "${1:-}" != "--fast" ]]; then
 
     echo "== serving smoke (front end: stream exactness, chunked prefill, SLO) =="
     python scripts/serving_smoke.py
+
+    echo "== trace smoke (telemetry: schema-valid chaos trace artifact) =="
+    TRACE_OUT="$TRACE_OUT" python scripts/trace_smoke.py
 fi
 echo "verify OK"

@@ -48,7 +48,29 @@ from typing import Callable, Optional
 from repro.cluster.faults import FaultInjector
 from repro.cluster.migration import KVSnapshot
 from repro.distributed.elastic import HeartbeatLedger, StragglerMonitor
+from repro.obs import metrics as obs_metrics
 from repro.serving.paged_kv import OutOfBlocks
+
+
+class _MirroredStats(dict):
+    """The recovery ``stats`` dict, with every increment mirrored into
+    the ``pam_cluster_recovery_events_total{event=...}`` counter of the
+    registry installed at construction. Increments happen both here and
+    in the router (which owns placement decisions), so mirroring at the
+    dict write is the one choke point that catches them all."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._counter = obs_metrics.get_registry().counter(
+            "pam_cluster_recovery_events_total",
+            "recovery-path events (detections, drains, replays, "
+            "retries, suspensions), by kind", ("event",))
+
+    def __setitem__(self, key: str, value: float) -> None:
+        delta = value - self.get(key, 0)
+        if delta > 0:
+            self._counter.labels(event=key).inc(delta)
+        super().__setitem__(key, value)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,12 +105,12 @@ class RecoveryManager:
         self.ledger = HeartbeatLedger(dead_after=cfg.heartbeat_timeout_s)
         # host-held suspended snapshots: (KVSnapshot, suspend tick)
         self.suspended: list[tuple[KVSnapshot, int]] = []
-        self.stats: dict[str, float] = {
+        self.stats: dict[str, float] = _MirroredStats({
             "kills_detected": 0, "drains": 0, "replays": 0,
             "preemptions": 0, "resumes": 0, "transfer_retries": 0,
             "transfers_dropped": 0, "corruptions_detected": 0,
             "transfer_failures": 0, "abandoned": 0,
-        }
+        })
         self.recovery_latencies: list[float] = []
 
     # ------------------------------------------------------------ detection

@@ -50,6 +50,8 @@ from repro.cluster.balancer import BalancerConfig, KVBalancer
 from repro.cluster.faults import TRANSFER_KINDS, FaultEvent, FaultInjector
 from repro.cluster.migration import KVSnapshot
 from repro.cluster.recovery import RecoveryConfig, RecoveryManager
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.perfmodel.devices import (DeviceClass, make_device_latency_model,
                                      step_time_prior)
 from repro.serving.engine import (DONE, RUNNING, Request, ServingConfig,
@@ -137,6 +139,60 @@ class ClusterRouter:
         # control plane's own notion of time, which keeps advancing even
         # when EVERY device is silent (otherwise a whole-fleet kill
         # would freeze the frontier and silence could never time out)
+        self._bind_obs()
+
+    def _bind_obs(self) -> None:
+        """Bind the router's instruments against the currently installed
+        registry (see ``ServingEngine._bind_obs``; canonical names in
+        docs/ARCHITECTURE.md). Balancer work is metered by diffing its
+        cumulative counters once per rebalance tick."""
+        reg = obs_metrics.get_registry()
+        self._mreg = reg
+        self._m_ticks = reg.counter(
+            "pam_cluster_ticks_total", "router scheduling iterations")
+        self._m_queue = reg.gauge(
+            "pam_cluster_queue_depth",
+            "requests in the shared (unbound) queue")
+        self._m_rejected = reg.counter(
+            "pam_cluster_rejected_total",
+            "streams ended with a rejection event")
+        self._m_sheds = reg.counter(
+            "pam_cluster_sheds_total",
+            "queued requests shed by admission control")
+        self._m_force_preempts = reg.counter(
+            "pam_cluster_force_preempts_total",
+            "SLO-driven immediate preemptions")
+        self._m_faults = reg.counter(
+            "pam_cluster_faults_total", "chaos faults applied, by kind",
+            ("kind",))
+        self._m_verdicts = reg.counter(
+            "pam_cluster_watchdog_verdicts_total",
+            "watchdog verdicts, by outcome", ("verdict",))
+        self._m_bal_migrations = reg.counter(
+            "pam_cluster_balancer_migrations_total",
+            "requests moved by the online balancer")
+        self._m_bal_bytes = reg.counter(
+            "pam_cluster_balancer_migrated_bytes_total",
+            "KV bytes moved by the online balancer")
+        self._m_mig_bytes_h = reg.histogram(
+            "pam_cluster_migration_bytes",
+            "bytes per balancer rebalance burst",
+            buckets=obs_metrics.BYTES_BUCKETS)
+        self._bal_seen = (0, 0)          # (migrations, bytes) last diffed
+
+    def _observe_balancer(self) -> None:
+        """Fold the balancer's cumulative counters into the registry
+        (called right after each rebalance)."""
+        if self.balancer is None or not self._mreg.enabled:
+            return
+        m, b = self.balancer.migrations, self.balancer.moved_bytes
+        dm, db = m - self._bal_seen[0], b - self._bal_seen[1]
+        self._bal_seen = (m, b)
+        if dm:
+            self._m_bal_migrations.inc(dm)
+        if db:
+            self._m_bal_bytes.inc(db)
+            self._m_mig_bytes_h.observe(db)
 
     # -------------------------------------------------------- device views
     def _steppable(self) -> list[ClusterDevice]:
@@ -167,10 +223,18 @@ class ClusterRouter:
         rejection event (done=True, no token) instead of raising —
         one lost request must never kill the whole stream."""
         self.rejected += 1
+        self._m_rejected.inc()
+        t = max(self.now(), req.arrival)
         self._events.append(TokenEvent(
-            time=max(self.now(), req.arrival), request_id=req.id,
+            time=t, request_id=req.id,
             token=-1, index=self._seen_tokens.get(req.id, 0), device="",
             done=True, rejected=True))
+        tr = obs_trace.COLLECTOR
+        if tr is not None:
+            tr.mark(req.id, "reject", t)
+            phase = tr.open_phase(req.id)
+            if phase is not None:
+                tr.end(req.id, phase, t)
 
     def submit(self, req: Request) -> None:
         """Add a request to the shared stream (``req.arrival`` is its
@@ -186,6 +250,12 @@ class ClusterRouter:
             self._reject(req)
             return
         self.arrivals.append(req)
+        tr = obs_trace.COLLECTOR
+        if tr is not None:
+            # the span opens at ARRIVAL; engine-side submit re-begins
+            # the same phase idempotently when the request is bound
+            tr.begin(req.id, "queued", req.arrival,
+                     prompt=len(req.prompt))
 
     def submit_to(self, req: Request, device_name: str) -> None:
         """Pin a request to one device, bypassing cost-based dispatch
@@ -225,7 +295,7 @@ class ClusterRouter:
         — prefill included — is what stops bursts from sinking onto a
         slow device whose queue-free slots look temptingly open."""
         sig = dev.engine.load_signal()
-        step = sig["last_step_time"] or dev.step_prior
+        step = sig["step_time_s"] or dev.step_prior
         service = prompt_len * dev.prefill_tok_prior + gen_len * step
         ahead = (sig["queue_depth"] + pending + 0.5 * sig["running"])
         waves = -(-int(ahead + 1) // max(dev.engine.scfg.max_batch, 1))
@@ -311,6 +381,10 @@ class ClusterRouter:
     # ---------------------------------------------------------- fault path
     def _apply_fault(self, ev: FaultEvent) -> None:
         """Apply one injected fault (``FaultInjector`` ground truth)."""
+        self._m_faults.labels(kind=ev.kind).inc()
+        tr = obs_trace.COLLECTOR
+        if tr is not None:
+            tr.instant(ev.device, f"fault:{ev.kind}", self.now())
         if ev.kind in TRANSFER_KINDS:
             return                       # armed inside the injector
         dev = self._by_name(ev.device)
@@ -373,6 +447,10 @@ class ClusterRouter:
         rec = self.recovery
         dev.state = "dead"
         rec.stats["kills_detected"] += 1
+        self._m_verdicts.labels(verdict="dead").inc()
+        tr = obs_trace.COLLECTOR
+        if tr is not None:
+            tr.instant(dev.name, "watchdog:dead", self.now())
         t_kill = self._kill_clock.get(dev.name, dev.engine.clock)
         alive = self._alive()
         t_now = (max(d.engine.clock for d in alive) if alive
@@ -389,6 +467,9 @@ class ClusterRouter:
                 self._replaying.add(rid)
             if rs.status == RUNNING:
                 rec.stats["replays"] += 1
+                if tr is not None:
+                    tr.mark(rid, "replay", self.now(), lost=dev.name)
+                    tr.begin(rid, "queued", self.now(), replay=True)
             self.queue.append(req)
         # the dead engine's host bookkeeping is gone with it
         eng.waiting.clear()
@@ -403,6 +484,10 @@ class ClusterRouter:
         drained device, but it finishes whatever could not move."""
         rec = self.recovery
         dev.state = "drained"
+        self._m_verdicts.labels(verdict="drained").inc()
+        tr = obs_trace.COLLECTOR
+        if tr is not None:
+            tr.instant(dev.name, "watchdog:drain", self.now())
         eng = dev.engine
         for rid in list(eng.waiting):
             eng.requests.pop(rid, None)
@@ -466,6 +551,10 @@ class ClusterRouter:
         for req in self.queue:
             if req.id == rid:
                 self.queue.remove(req)
+                self._m_sheds.inc()
+                tr = obs_trace.COLLECTOR
+                if tr is not None:
+                    tr.mark(rid, "shed", self.now())
                 self._reject(req)
                 return True
         return False
@@ -510,6 +599,7 @@ class ClusterRouter:
             return False
         if self._preempt_victim(shape[0] + shape[1]):
             self._head_since = (rid, self.ticks)   # re-arm the fuse
+            self._m_force_preempts.inc()
             return True
         return False
 
@@ -600,6 +690,13 @@ class ClusterRouter:
             for d in alive:
                 d.engine.clock = max(d.engine.clock, t)
         self.ticks += 1
+        if self._mreg.enabled:
+            self._m_ticks.inc()
+            self._m_queue.set(len(self.queue))
+        tr = obs_trace.COLLECTOR
+        if tr is not None:
+            tr.counter("router", "shared_queue", self.now(),
+                       depth=len(self.queue))
         if self.recovery is not None:
             self._watchdog()
         if (self.balancer is not None
@@ -608,6 +705,7 @@ class ClusterRouter:
             # tokens surface at the destination's next _collect
             self.balancer.rebalance(
                 [d for d in self._up() if not d.killed], self.ticks)
+            self._observe_balancer()
         return bool(self.arrivals or self.queue or self._steppable()
                     or self._failed_pending()
                     or (self.recovery and self.recovery.suspended))
@@ -657,10 +755,17 @@ class ClusterRouter:
             "makespan_s": makespan,
             "throughput_tok_s": (total_tokens / makespan
                                  if makespan > 0 else 0.0),
-            "migrations": (self.balancer.migrations
-                           if self.balancer is not None else 0),
+            # canonical names (PR 9): balancer_* is the online
+            # balancer's own work; migrations_in/out are the fleet-wide
+            # engine-level sums (balancing + drain + suspend/resume)
+            "balancer_migrations": (self.balancer.migrations
+                                    if self.balancer is not None else 0),
             "migrated_bytes": (self.balancer.moved_bytes
                                if self.balancer is not None else 0),
+            "migrations_in": sum(d.engine.migrations_in
+                                 for d in self.devices),
+            "migrations_out": sum(d.engine.migrations_out
+                                  for d in self.devices),
             "ticks": self.ticks,
             "devices": per_device,
         }

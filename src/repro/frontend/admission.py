@@ -28,6 +28,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.obs import metrics as obs_metrics
+
 
 @dataclasses.dataclass(frozen=True)
 class SLOSpec:
@@ -53,6 +55,14 @@ class SLOAdmission:
         self.shed = 0
         self.forced_preemptions = 0
         self._last_force = None
+        reg = obs_metrics.get_registry()
+        self._m_shed = reg.counter(
+            "pam_frontend_shed_total",
+            "queued requests shed by SLO admission (deadline "
+            "provably unmeetable)")
+        self._m_force = reg.counter(
+            "pam_frontend_force_preempt_total",
+            "forced preemptions triggered by queue-head starvation")
 
     # ------------------------------------------------------------ signals
     def _prefill_floor(self, router) -> float:
@@ -83,6 +93,7 @@ class SLOAdmission:
                         > self.slo.ttft_s):
                     if router.shed(req.id):
                         self.shed += 1
+                        self._m_shed.inc()
         if not router.queue:
             return
         head = router.queue[0]
@@ -95,6 +106,7 @@ class SLOAdmission:
             return
         if router.force_preempt(head.id):
             self.forced_preemptions += 1
+            self._m_force.inc()
             self._last_force = router.ticks
 
     def summary(self) -> dict:

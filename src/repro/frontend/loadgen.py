@@ -27,6 +27,7 @@ from typing import Iterable
 
 import numpy as np
 
+from repro.obs.metrics import LATENCY_BUCKETS, Histogram
 from repro.serving.engine import Request
 
 TRACE_KINDS = ("poisson", "gamma", "onoff")
@@ -105,12 +106,18 @@ def make_trace(tcfg: TraceConfig) -> list[Request]:
 
 # ----------------------------------------------------------------- scoring
 def _pcts(xs: list[float]) -> dict[str, float]:
-    if not xs:
-        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
-    a = np.asarray(xs)
-    return {"p50": float(np.percentile(a, 50)),
-            "p95": float(np.percentile(a, 95)),
-            "p99": float(np.percentile(a, 99))}
+    """Percentiles through the registry's log-bucket histogram (PR 9):
+    offline scoring and live export share one source of percentile
+    math, so a scorecard p99 and the exported
+    ``pam_frontend_ttft_seconds`` p99 agree bucket-for-bucket. An empty
+    sample returns zeros WITH an explicit ``n=0`` marker — zeros then
+    mean "no samples", never "zero latency"."""
+    h = Histogram.standalone("score", LATENCY_BUCKETS)
+    for x in xs:
+        h.observe(float(x))
+    s = h.summary()
+    return {"p50": s["p50"], "p95": s["p95"], "p99": s["p99"],
+            "n": s["n"]}
 
 
 def stream_integrity(records: Iterable) -> tuple[int, int]:

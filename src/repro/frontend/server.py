@@ -32,6 +32,7 @@ import numpy as np
 from repro.cluster.recovery import RecoveryConfig, RecoveryManager
 from repro.cluster.router import (ClusterDevice, ClusterRouter,
                                   RouterConfig, TokenEvent)
+from repro.obs import metrics as obs_metrics
 from repro.perfmodel.devices import DeviceClass
 from repro.serving.engine import Request, ServingEngine
 
@@ -117,6 +118,37 @@ class AsyncServer:
         self._handles: dict[int, StreamHandle] = {}
         self._next_rid = 0
         self._last_arrival = 0.0
+        self._bind_obs()
+
+    def _bind_obs(self) -> None:
+        """Bind front-end instruments against the installed registry
+        (once, at construction — the hot path only mutates)."""
+        reg = obs_metrics.get_registry()
+        self._mreg = reg
+        self._m_submitted = reg.counter(
+            "pam_frontend_requests_total",
+            "requests accepted by the front end")
+        self._m_finished = reg.counter(
+            "pam_frontend_finished_total",
+            "streams closed by a final (non-rejection) event")
+        self._m_rejected = reg.counter(
+            "pam_frontend_rejected_total",
+            "streams closed by a rejection event")
+        self._m_tokens = reg.counter(
+            "pam_frontend_streamed_tokens_total",
+            "token events fanned out to stream handles")
+        self._m_queue = reg.gauge(
+            "pam_frontend_queue_depth",
+            "router shared-queue depth after the last pump tick")
+        self._m_ttft = reg.histogram(
+            "pam_frontend_ttft_seconds",
+            "time to first streamed token (sim seconds)")
+        self._m_itl = reg.histogram(
+            "pam_frontend_itl_seconds",
+            "inter-token gap, pooled across streams (sim seconds)")
+        self._m_tpot = reg.histogram(
+            "pam_frontend_tpot_seconds",
+            "per-stream mean decode-token gap (sim seconds)")
 
     # ------------------------------------------------------------ intake
     def submit(self, prompt, max_new_tokens: int, *,
@@ -141,6 +173,7 @@ class AsyncServer:
         handle = StreamHandle(rec)
         self.records[rid] = rec
         self._handles[rid] = handle
+        self._m_submitted.inc()
         self.router.submit(Request(id=rid, prompt=prompt,
                                    max_new_tokens=int(max_new_tokens),
                                    arrival=arrival))
@@ -155,12 +188,26 @@ class AsyncServer:
                 continue
             if ev.rejected:
                 rec.rejected = True
+                self._m_rejected.inc()
             else:
+                if self._mreg.enabled:
+                    self._m_tokens.inc()
+                    if not rec.times:   # first token: TTFT vs arrival
+                        self._m_ttft.observe(
+                            max(ev.time - rec.arrival, 0.0))
+                    else:               # later tokens: pooled ITL gap
+                        self._m_itl.observe(
+                            max(ev.time - rec.times[-1], 0.0))
                 rec.tokens.append(ev.token)
                 rec.times.append(ev.time)
                 rec.indices.append(ev.index)
             if ev.done:
                 rec.done = True
+                if not ev.rejected:
+                    self._m_finished.inc()
+                    if self._mreg.enabled and len(rec.times) > 1:
+                        gaps = np.maximum(np.diff(rec.times), 0.0)
+                        self._m_tpot.observe(float(np.mean(gaps)))
             handle = self._handles.get(ev.request_id)
             if handle is not None:
                 handle._push(ev)
@@ -174,6 +221,8 @@ class AsyncServer:
             self.admission.control(self.router)
         live = self.router.tick()
         self._fanout()
+        if self._mreg.enabled:
+            self._m_queue.set(len(self.router.queue))
         return live or bool(self._handles)
 
     async def drain(self, max_ticks: Optional[int] = None) -> int:
@@ -208,8 +257,10 @@ class AsyncServer:
         request object — ``{"prompt": [int, ...], "max_new_tokens": n,
         "id": optional}`` — and receives one JSON line per
         ``TokenEvent`` (``{"rid", "token", "index", "time", "done",
-        "rejected"}``). Returns ``(server, port, pump_task)``; the
-        caller owns shutdown (cancel the task, close the server)."""
+        "rejected"}``). A ``{"op": "metrics"}`` line instead returns
+        one JSON line with the live registry snapshot. Returns
+        ``(server, port, pump_task)``; the caller owns shutdown
+        (cancel the task, close the server)."""
         server = await asyncio.start_server(self._handle_conn, host, port)
         bound = server.sockets[0].getsockname()[1]
         pump = asyncio.create_task(self._endpoint_pump())
@@ -227,6 +278,14 @@ class AsyncServer:
             if not line:
                 return
             msg = json.loads(line)
+            if msg.get("op") == "metrics":
+                reg = obs_metrics.get_registry()
+                writer.write(json.dumps({
+                    "op": "metrics", "enabled": reg.enabled,
+                    "metrics": reg.snapshot(),
+                }).encode() + b"\n")
+                await writer.drain()
+                return
             handle = self.submit(np.asarray(msg["prompt"], np.int32),
                                  int(msg["max_new_tokens"]),
                                  rid=msg.get("id"))
@@ -246,8 +305,14 @@ class AsyncServer:
 
     # ------------------------------------------------------------ metrics
     def summary(self) -> dict:
+        """Front-end scorecard on the canonical key set (see
+        docs/ARCHITECTURE.md): ``finished``/``rejected`` count closed
+        streams, ``streamed_tokens`` the fanned-out token events."""
+        recs = self.records.values()
         out = {"requests": len(self.records),
-               "rejected": sum(r.rejected for r in self.records.values()),
+               "finished": sum(r.done and not r.rejected for r in recs),
+               "rejected": sum(r.rejected for r in recs),
+               "streamed_tokens": sum(len(r.tokens) for r in recs),
                "backend": self.router.summary()}
         if self.admission is not None:
             out["admission"] = self.admission.summary()

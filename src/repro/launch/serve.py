@@ -29,6 +29,16 @@ SLO-aware admission, scoring TTFT/TPOT tails and SLO attainment:
 ``--port N`` additionally drives the trace through the line-delimited
 JSON socket endpoint on 127.0.0.1:N (0 picks a free port) instead of
 the in-process API — same tokens, exercised over the wire.
+
+Telemetry (PR 9) — any mode: ``--trace-out trace.json`` records the
+request-lifecycle/device-event trace (open trace.json at
+https://ui.perfetto.dev) and ``--metrics-interval N`` streams live
+registry snapshots as JSON lines; both print the final metrics
+snapshot at exit:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+        --reduced --requests 32 --devices hbm:1,cxl:2 --block-size 8 \
+        --chaos 'kill:cxl1@40' --trace-out trace.json
 """
 
 from __future__ import annotations
@@ -39,6 +49,8 @@ import json
 import jax
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.perfmodel import make_latency_model
 from repro.models import transformer as tfm
 from repro.models.config import get_config, reduced
@@ -100,7 +112,23 @@ def main(argv=None):
                     help="--serve: drive the trace through the NDJSON "
                          "socket endpoint on this port (0 = ephemeral)")
     ap.add_argument("--trace-seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record request-lifecycle + device events and "
+                         "write a Perfetto-loadable Chrome trace JSON "
+                         "here at exit (enables the metrics registry)")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    help="emit a live metrics snapshot JSON line every "
+                         "N steps/ticks (0 = only the final snapshot; "
+                         "any value enables the metrics registry)")
     args = ap.parse_args(argv)
+
+    # telemetry (PR 9): install registry/collector BEFORE building
+    # engines — instruments bind at construction time
+    telemetry = bool(args.trace_out) or args.metrics_interval > 0
+    if telemetry:
+        obs_metrics.install()
+    if args.trace_out:
+        obs_trace.install()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -126,9 +154,40 @@ def main(argv=None):
                          prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(0)
 
-    if args.serve:                     # ---- front-end mode (PR 8)
-        return _serve_mode(args, ap, cfg, params, scfg)
+    try:
+        if args.serve:                 # ---- front-end mode (PR 8)
+            return _serve_mode(args, ap, cfg, params, scfg)
+        return _batch_mode(args, ap, cfg, params, scfg, rng)
+    finally:
+        if telemetry:
+            _finish_telemetry(args)
 
+
+def _metrics_emit(tick: int) -> None:
+    """One live metrics line (scalar series only; histograms land in
+    the final snapshot)."""
+    snap = obs_metrics.get_registry().snapshot()
+    print(json.dumps({"op": "metrics", "tick": tick,
+                      "counters": snap["counters"],
+                      "gauges": snap["gauges"]}))
+
+
+def _finish_telemetry(args) -> None:
+    """Exit-time telemetry flush: final registry snapshot and (with
+    ``--trace-out``) the balanced Chrome trace JSON."""
+    reg = obs_metrics.get_registry()
+    if reg.enabled:
+        print(json.dumps({"op": "metrics", "final": True,
+                          "metrics": reg.snapshot()}))
+    tr = obs_trace.COLLECTOR
+    if tr is not None and args.trace_out:
+        tr.close_open()          # balanced even if work was in flight
+        tr.write(args.trace_out)
+        print(f"trace: {len(tr.events)} events "
+              f"({tr.dropped} dropped) -> {args.trace_out}")
+
+
+def _batch_mode(args, ap, cfg, params, scfg, rng) -> None:
     if args.devices:                   # ---- cluster mode (paper §4.3)
         if args.system not in ("pam", "wallclock"):
             ap.error("--devices models PAM-class devices; --system must "
@@ -153,7 +212,17 @@ def main(argv=None):
             router.submit(Request(
                 id=i, prompt=rng.integers(0, cfg.vocab, args.prompt_len),
                 max_new_tokens=args.gen_len, arrival=t))
-        summary = router.run()
+        if args.metrics_interval > 0:
+            limit, n = router.rcfg.max_ticks, 0
+            while router.tick():
+                n += 1
+                if n >= limit:
+                    raise RuntimeError(f"no drain in {limit} ticks")
+                if n % args.metrics_interval == 0:
+                    _metrics_emit(n)
+            summary = router.summary()
+        else:
+            summary = router.run()
         print(json.dumps(summary, indent=1))
         for slo_ms in (100, 150, 200):
             print(f"SLO {slo_ms}ms attainment: "
@@ -170,11 +239,41 @@ def main(argv=None):
         eng.submit(Request(
             id=i, prompt=rng.integers(0, cfg.vocab, args.prompt_len),
             max_new_tokens=args.gen_len))
-    summary = eng.run()
+    if args.metrics_interval > 0 and scfg.micro_steps == 1:
+        n = 0
+        for _ in range(10_000):
+            if not eng.waiting and all(s is None for s in eng.slots):
+                break
+            eng.step()
+            n += 1
+            if n % args.metrics_interval == 0:
+                _metrics_emit(n)
+        summary = eng.summary()
+    else:
+        summary = eng.run()
     print(json.dumps(summary, indent=1))
     for slo_ms in (100, 150, 200):
         print(f"SLO {slo_ms}ms attainment: "
               f"{eng.slo_attainment(slo_ms/1e3):.3f}")
+
+
+async def _pump_with_metrics(srv, trace, interval: int) -> None:
+    """``serve_trace`` with a live metrics line every ``interval``
+    pump iterations."""
+    import asyncio
+
+    for req in trace:
+        srv.submit(req.prompt, req.max_new_tokens, rid=req.id,
+                   arrival=req.arrival)
+    limit, n = srv.router.rcfg.max_ticks, 0
+    while srv.step():
+        n += 1
+        if n >= limit:
+            raise RuntimeError(f"server did not drain in {limit} ticks")
+        if n % interval == 0:
+            _metrics_emit(n)
+        if n % srv.ticks_per_yield == 0:
+            await asyncio.sleep(0)
 
 
 async def _drive_socket(srv, trace, port: int):
@@ -244,7 +343,11 @@ def _serve_mode(args, ap, cfg, params, scfg) -> None:
 
     port = None
     if args.port is None:
-        asyncio.run(srv.serve_trace(trace))
+        if args.metrics_interval > 0:
+            asyncio.run(_pump_with_metrics(srv, trace,
+                                           args.metrics_interval))
+        else:
+            asyncio.run(srv.serve_trace(trace))
     else:
         port = asyncio.run(_drive_socket(srv, trace, args.port))
 

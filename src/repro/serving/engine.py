@@ -124,6 +124,8 @@ from repro.core.tiers import HOT
 from repro.kernels.flash_decode import ring_position_map
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving import pam_manager as pm
 from repro.serving import paged_kv as pkv
 from repro.serving.paged_kv import (BlockAllocator, OutOfBlocks,
@@ -809,6 +811,142 @@ class ServingEngine:
         self._micro_jits: dict[int, Any] = {}    # keyed by fused step count
         self._prefill_jit: dict[int, Any] = {}   # keyed by prompt bucket
         self._admit_jit = self._admit_commit_dispatch
+        self._bind_obs()
+
+    def _bind_obs(self) -> None:
+        """Bind this engine's labeled instruments against the registry
+        installed RIGHT NOW (``repro.obs.metrics.install`` before
+        construction). Every series carries a ``device`` label so a
+        cluster fleet shares one registry. With the default (disabled)
+        registry each update is a single attribute check — nothing
+        allocates on the step path; the canonical name table lives in
+        docs/ARCHITECTURE.md."""
+        reg = obs_metrics.get_registry()
+        self._mreg = reg
+        c, g, h = reg.counter, reg.gauge, reg.histogram
+        dl = ("device",)
+        d = {"device": self.name}
+        self._m_steps = c(
+            "pam_engine_steps_total",
+            "engine iterations (admission pass + decode step)",
+            dl).labels(**d)
+        self._m_decode_disp = c(
+            "pam_engine_decode_dispatches_total",
+            "fused decode device dispatches", dl).labels(**d)
+        self._m_device_steps = c(
+            "pam_engine_decode_device_steps_total",
+            "decode steps executed on device (k per micro dispatch)",
+            dl).labels(**d)
+        self._m_prefill_disp = c(
+            "pam_engine_prefill_dispatches_total",
+            "prefill / suffix-prefill / chunk-slice dispatches",
+            dl).labels(**d)
+        self._m_admit_disp = c(
+            "pam_engine_admit_dispatches_total",
+            "donated admission-commit dispatches", dl).labels(**d)
+        self._m_prefill_tokens = c(
+            "pam_engine_prefill_tokens_total",
+            "prompt tokens prefilled (novel only under prefix cache)",
+            dl).labels(**d)
+        self._m_decode_tokens = c(
+            "pam_engine_decode_tokens_total",
+            "decode tokens emitted to requests", dl).labels(**d)
+        self._m_finished = c(
+            "pam_engine_finished_total",
+            "requests finished (EOS or budget)", dl).labels(**d)
+        self._m_step_h = h(
+            "pam_engine_step_seconds",
+            "per-step latency (modeled or wall-clock)", dl).labels(**d)
+        self._m_active = g(
+            "pam_engine_active_slots",
+            "slots decoding in the last step", dl).labels(**d)
+        self._m_queue = g(
+            "pam_engine_queue_depth",
+            "requests waiting for admission", dl).labels(**d)
+        self._m_pool = g(
+            "pam_engine_pool_occupancy",
+            "paged-pool block occupancy fraction", dl).labels(**d)
+        tier_c = c("pam_engine_tier_read_tokens_total",
+                   "participating tokens read, by KV tier",
+                   ("device", "tier"))
+        self._m_tier = tuple(tier_c.labels(device=self.name, tier=t)
+                             for t in ("hot", "warm", "cold"))
+        self._m_moved = c(
+            "pam_engine_moved_tokens_total",
+            "Alg. 2 tier migrations (tokens)", dl).labels(**d)
+        self._m_blocks_touched = c(
+            "pam_engine_blocks_touched_total",
+            "pool pages touched by paged reads", dl).labels(**d)
+        self._m_blocks_window = c(
+            "pam_engine_blocks_window_total",
+            "dense-window pages a full read would touch",
+            dl).labels(**d)
+        self._m_prefix_hits = c(
+            "pam_engine_prefix_hits_total",
+            "admissions that matched a cached prefix", dl).labels(**d)
+        self._m_cached_prefix_tokens = c(
+            "pam_engine_cached_prefix_tokens_total",
+            "prefill compute skipped via prefix sharing (tokens)",
+            dl).labels(**d)
+        self._m_cow = c(
+            "pam_engine_cow_copies_total",
+            "copy-on-write tail-block duplications", dl).labels(**d)
+        self._m_chunk_adm = c(
+            "pam_engine_chunked_admissions_total",
+            "admissions that went through chunked prefill",
+            dl).labels(**d)
+        self._m_chunk_slices = c(
+            "pam_engine_chunk_slices_total",
+            "chunked-prefill slice dispatches", dl).labels(**d)
+        mig = c("pam_engine_migrations_total",
+                "requests migrated (suspend/resume rides the same "
+                "path)", ("device", "direction"))
+        self._m_mig_in = mig.labels(device=self.name, direction="in")
+        self._m_mig_out = mig.labels(device=self.name, direction="out")
+
+    def _observe_step(self, stats: dict[str, Any], dt: float) -> None:
+        """Per-step telemetry fan-out. Costs one ``enabled`` check when
+        metrics are off plus one ``None`` check when tracing is off —
+        the fused-dispatch fast path never allocates for telemetry."""
+        if self._mreg.enabled:
+            self._m_steps.inc()
+            self._m_step_h.observe(dt)
+            if stats["prefill_tokens"]:
+                self._m_prefill_tokens.inc(stats["prefill_tokens"])
+            self._m_active.set(stats["active"])
+            self._m_queue.set(len(self.waiting))
+            for m, v in zip(self._m_tier, stats["tier_reads"]):
+                if v:
+                    m.inc(int(v))
+            if stats["moved_tokens"]:
+                self._m_moved.inc(stats["moved_tokens"])
+            if "blocks_touched" in stats:
+                self._m_blocks_touched.inc(stats["blocks_touched"])
+                self._m_blocks_window.inc(stats["blocks_window"])
+            if self.allocator is not None:
+                self._m_pool.set(self.allocator.occupancy)
+        tr = obs_trace.COLLECTOR
+        if tr is not None:
+            tr.slice(self.name, "step", self.clock - dt, dt,
+                     active=stats["active"],
+                     prefill_tokens=stats["prefill_tokens"])
+            tr.counter(self.name, "occupancy", self.clock,
+                       active=stats["active"],
+                       queue=len(self.waiting),
+                       pool=(self.allocator.occupancy
+                             if self.allocator is not None else 0.0))
+
+    def _trace_finish(self, rs: RequestState) -> None:
+        """Close a finished request's lifecycle track (finish instant +
+        end of its open phase) and count it."""
+        self._m_finished.inc()
+        tr = obs_trace.COLLECTOR
+        if tr is not None:
+            rid = rs.request.id
+            tr.mark(rid, "finish", self.clock, tokens=len(rs.outputs))
+            phase = tr.open_phase(rid)
+            if phase is not None:
+                tr.end(rid, phase, self.clock)
 
     # ------------------------------------------------------------ builders
     def _get_micro(self, k: int):
@@ -858,6 +996,10 @@ class ServingEngine:
     def submit(self, req: Request) -> None:
         self.requests[req.id] = RequestState(request=req)
         self.waiting.append(req.id)
+        tr = obs_trace.COLLECTOR
+        if tr is not None:
+            tr.begin(req.id, "queued", self.clock,
+                     device=self.name, prompt=len(req.prompt))
 
     def _free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
@@ -954,6 +1096,8 @@ class ServingEngine:
             if matched > 0:
                 self.prefix_hits += 1
                 self.cached_prefix_tokens += matched
+                self._m_prefix_hits.inc()
+                self._m_cached_prefix_tokens.inc(matched)
             if self.chunk and s_len - matched > self.chunk:
                 # chunked admission (PR 8): claim the slot and the full
                 # block window NOW, then fill the prompt one bounded
@@ -968,6 +1112,11 @@ class ServingEngine:
                     rid=rid, slot=slot, start=matched, total=s_len,
                     budget=self.chunk, cow_src=cow_src)
                 self.chunked_admissions += 1
+                self._m_chunk_adm.inc()
+                tr = obs_trace.COLLECTOR
+                if tr is not None:
+                    tr.begin(rid, "prefill", self.clock,
+                             device=self.name, novel=s_len - matched)
                 continue
             admitted.append((rid, rs, prompt, s_len, slot, table_row,
                              matched, cow_src))
@@ -1000,6 +1149,7 @@ class ServingEngine:
         logits, sub = pre(self.params, jnp.asarray(padded),
                           jnp.asarray(lens))
         self.prefill_dispatches += 1
+        self._m_prefill_disp.inc()
         slots = np.array([g[4] for g in group], np.int32)
         rids = np.array([g[0] for g in group], np.uint32)
         args = (self.cache, self.pam_state, self.tokens_dev, sub, logits,
@@ -1009,6 +1159,7 @@ class ServingEngine:
         (self.cache, self.pam_state, self.tokens_dev,
          first_dev) = self._admit_jit(*args)
         self.admit_dispatches += 1
+        self._m_admit_disp.inc()
         for rid, _, _, _, slot, *_rest in group:
             self.rids_host[slot] = rid
         if self.trie is not None:
@@ -1038,6 +1189,11 @@ class ServingEngine:
         rs.planned = 1
         rs.first_token_time = None         # stamped after latency charge
         self.slots[slot] = rid
+        self._m_decode_tokens.inc()
+        tr = obs_trace.COLLECTOR
+        if tr is not None:
+            # begin() auto-closes the open queued/prefill phase
+            tr.begin(rid, "decode", self.clock, device=self.name)
         if (eos >= 0 and tok == eos) or rs.request.max_new_tokens <= 1:
             rs.status = DONE
             rs.first_token_time = self.clock
@@ -1046,6 +1202,7 @@ class ServingEngine:
             self.slots[slot] = None
             if self.allocator is not None:
                 self.allocator.free(rid)
+            self._trace_finish(rs)
 
     def _suffix_coords(self, row: np.ndarray, start: int, t: int,
                        width: int) -> tuple[np.ndarray, np.ndarray]:
@@ -1113,6 +1270,7 @@ class ServingEngine:
             self.cache.pv, jnp.asarray(read_rows), jnp.asarray(starts),
             jnp.asarray(suf_lens))
         self.prefill_dispatches += 1
+        self._m_prefill_disp.inc()
         slots = np.array([g[4] for g in group], np.int32)
         rids = np.array([g[0] for g in group], np.uint32)
         fn = _suffix_commit_fn(self.pam_cfg, bs, n,
@@ -1125,11 +1283,13 @@ class ServingEngine:
             jnp.asarray(sids), jnp.asarray(cow_srcs),
             jnp.asarray(cow_dsts))
         self.admit_dispatches += 1
+        self._m_admit_disp.inc()
         for src in cow_pins:
             # the dispatch reading cow_src is enqueued; device ordering
             # makes any later reuse of the block safe — release the pin
             self.allocator.decref(src)
             self.cow_copies += 1
+            self._m_cow.inc()
         if self.trie is not None:
             self.novel_prefill_tokens += int(suf_lens.sum())
         for rid, _, _, _, slot, *_rest in group:
@@ -1178,6 +1338,7 @@ class ServingEngine:
                 plan.done += t
             plan.slices += 1
             self.chunk_slices += 1
+            self._m_chunk_slices.inc()
             self.max_chunk_slice = max(self.max_chunk_slice, t)
             total += t
         return total
@@ -1202,9 +1363,11 @@ class ServingEngine:
             jnp.asarray(bids), jnp.asarray(sids),
             jnp.int32(max(plan.cow_src, 0)), jnp.int32(cow_dst))
         self.prefill_dispatches += 1
+        self._m_prefill_disp.inc()
         if cow:
             self.allocator.decref(plan.cow_src)
             self.cow_copies += 1
+            self._m_cow.inc()
             plan.cow_src = -1
         if self.trie is not None:
             self.novel_prefill_tokens += t
@@ -1234,6 +1397,8 @@ class ServingEngine:
                 jnp.asarray(active_np), jnp.asarray(self.rids_host))
             self.decode_dispatches += 1
             self.decode_device_steps += 1
+            self._m_decode_disp.inc()
+            self._m_device_steps.inc()
             if self.mgr:
                 stats["tier_reads"] = np.asarray(
                     bufs.tier_reads[0], dtype=np.int64)
@@ -1265,9 +1430,10 @@ class ServingEngine:
             self.last_step_stats = stats
         if active_np.any():
             self.busy_time += dt
-        stats["step_time"] = dt
+        stats["step_time_s"] = dt
         self._stamp_times()
         self.steps += 1
+        self._observe_step(stats, dt)
         return stats
 
     def _emit_tokens(self, nxt: np.ndarray, active: np.ndarray) -> None:
@@ -1277,6 +1443,7 @@ class ServingEngine:
             rs = self.requests[rid]
             tok = int(nxt[slot])
             rs.outputs.append(tok)
+            self._m_decode_tokens.inc()
             rs.planned = len(rs.outputs)
             done = (len(rs.outputs) >= rs.request.max_new_tokens
                     or tok == self.scfg.eos_token)
@@ -1298,6 +1465,7 @@ class ServingEngine:
                         len(rs.outputs) - len(rs.token_times))
                 if rs.status == DONE and rs.finish_time is None:
                     rs.finish_time = self.clock
+                    self._trace_finish(rs)
 
     def run(self, max_steps: int = 10_000) -> dict[str, Any]:
         """Run until all submitted requests finish. Returns summary."""
@@ -1360,6 +1528,8 @@ class ServingEngine:
                 jnp.asarray(active_np), jnp.asarray(self.rids_host))
             self.decode_dispatches += 1
             self.decode_device_steps += k
+            self._m_decode_disp.inc()
+            self._m_device_steps.inc(k)
             self.steps += k
             rec = (bufs, pairs, k, prefill_tokens)
             if pipelined:
@@ -1416,12 +1586,14 @@ class ServingEngine:
                 self.last_step_time = dt     # decode-only load signal
                 self.last_step_stats = stats
             self.busy_time += dt
+            self._observe_step(stats, dt)
             for slot, rid in pairs:
                 rs = self.requests[rid]
                 if eos >= 0 and rs.status == DONE:
                     continue                 # froze at EOS mid-dispatch
                 tok = int(toks[j, slot])
                 rs.outputs.append(tok)
+                self._m_decode_tokens.inc()
                 rs.planned = max(rs.planned, len(rs.outputs))
                 if rs.first_token_time is None:
                     rs.first_token_time = self.clock
@@ -1431,6 +1603,7 @@ class ServingEngine:
                         or (eos >= 0 and tok == eos))
                 if done and rs.finish_time is None:
                     rs.finish_time = self.clock
+                    self._trace_finish(rs)
                 if done and rs.status != DONE:
                     rs.status = DONE
                     if eos >= 0:             # EOS mode frees slots here
@@ -1501,7 +1674,7 @@ class ServingEngine:
             "queue_depth": len(self.waiting),
             "running": running,
             "free_slots": self.scfg.max_batch - running,
-            "last_step_time": self.last_step_time,
+            "step_time_s": self.last_step_time,
             "pool_occupancy": (self.allocator.occupancy
                                if self.allocator is not None else 0.0),
             "free_blocks": (self.allocator.free_blocks
@@ -1579,6 +1752,11 @@ class ServingEngine:
             self.allocator.free(rid)
         del self.requests[rid]
         self.migrations_out += 1
+        self._m_mig_out.inc()
+        tr = obs_trace.COLLECTOR
+        if tr is not None:
+            tr.mark(rid, "migrate_out", self.clock, src=self.name)
+            tr.begin(rid, "suspended", self.clock)  # closes "decode"
         return snap
 
     def import_request(self, snap: dict[str, Any]) -> None:
@@ -1642,6 +1820,11 @@ class ServingEngine:
             self.trie.insert(np.asarray(req.prompt, np.int32),
                              self.allocator.table(req.id))
         self.migrations_in += 1
+        self._m_mig_in.inc()
+        tr = obs_trace.COLLECTOR
+        if tr is not None:
+            tr.mark(req.id, "migrate_in", self.clock, dst=self.name)
+            tr.begin(req.id, "decode", self.clock, device=self.name)
 
     # ----------------------------------------- suspend / resume (recovery)
     def suspend_request(self, rid: int) -> dict[str, Any]:
@@ -1681,6 +1864,10 @@ class ServingEngine:
             "steps": self.steps,
             "decode_dispatches": self.decode_dispatches,
             "decode_device_steps": self.decode_device_steps,
+            "prefill_dispatches": self.prefill_dispatches,
+            "admit_dispatches": self.admit_dispatches,
+            "migrations_in": self.migrations_in,
+            "migrations_out": self.migrations_out,
         }
         if self.block_size:
             n = max(self.decode_device_steps, 1)

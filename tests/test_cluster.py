@@ -213,7 +213,7 @@ def test_balancer_migrates_off_overloaded_device():
             Request(id=100 + i, prompt=rng.integers(0, _CFG.vocab, 16),
                     max_new_tokens=14, arrival=0.0), "cxl0")
     s = router.run()
-    assert s["migrations"] >= 1
+    assert s["balancer_migrations"] >= 1
     hbm = router._by_name("hbm0")
     assert hbm.engine.migrations_in >= 1
     for rs in router.finished.values():
@@ -231,7 +231,7 @@ def test_balancer_hysteresis_blocks_marginal_moves():
     _submit(router, 8, plen=16, max_new=8, arrivals=True)
     s = router.run()
     assert s["finished"] == 8
-    assert s["migrations"] == 0
+    assert s["balancer_migrations"] == 0
 
 
 # ------------------------------------------- fused-dispatch invariants

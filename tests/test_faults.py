@@ -309,7 +309,7 @@ def test_balancer_never_targets_a_killed_device():
         router.submit_to(r, "cxl0")      # load the slow device only
     s = router.run()
     assert s["finished"] == 4
-    assert s["migrations"] == 0          # nowhere healthy to move
+    assert s["balancer_migrations"] == 0          # nowhere healthy to move
     assert router._by_name("hbm0").engine.migrations_in == 0
     for r in reqs:
         assert len(router.finished[r.id].outputs) == r.max_new_tokens

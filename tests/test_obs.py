@@ -1,0 +1,413 @@
+"""PR 9 observability layer: metrics registry semantics, trace-export
+schema validation (balanced spans, monotone sim-clock timestamps),
+metrics determinism under seeded chaos, and the engine fastpath
+invariants (single dispatch per decode step, buffer donation) re-run
+with collectors ENABLED — telemetry must never change dispatch
+structure."""
+
+import asyncio
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import build_model, make_pam, make_requests
+
+from repro.cluster import (FaultEvent, FaultInjector, RecoveryConfig,
+                           build_cluster)
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import (BYTES_BUCKETS, Histogram, MetricsRegistry,
+                               log_buckets)
+from repro.obs.trace import TraceCollector, validate
+from repro.perfmodel.devices import CXL_CLASS, HBM_CLASS
+from repro.serving import Request, ServingConfig, ServingEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+_CFG, _PARAMS = build_model("qwen3-0.6b")
+
+
+# ------------------------------------------------------- metrics registry
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("c_total", "a counter")
+    g = reg.gauge("g", "a gauge")
+    h = reg.histogram("h_seconds", "a histogram")
+    c.inc()
+    c.inc(2.5)
+    g.set(7)
+    g.inc(-3)
+    for v in (0.001, 0.002, 0.004):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["counters"]["c_total"] == 3.5
+    assert snap["gauges"]["g"] == 4.0
+    assert snap["histograms"]["h_seconds"]["count"] == 3
+    assert snap["histograms"]["h_seconds"]["sum"] == pytest.approx(0.007)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_disabled_registry_mutators_are_noops():
+    reg = MetricsRegistry(enabled=False)
+    c = reg.counter("c_total")
+    h = reg.histogram("h_seconds")
+    c.inc(100)
+    h.observe(1.0)
+    snap = reg.snapshot()
+    assert snap["counters"]["c_total"] == 0.0
+    assert snap["histograms"]["h_seconds"]["count"] == 0
+
+
+def test_registration_idempotent_and_type_checked():
+    reg = MetricsRegistry()
+    assert reg.counter("x") is reg.counter("x")
+    with pytest.raises(ValueError):
+        reg.gauge("x")
+
+
+def test_labeled_children_render_and_sort():
+    reg = MetricsRegistry()
+    c = reg.counter("reqs_total", "requests", ("device",))
+    c.labels(device="b").inc(2)
+    c.labels(device="a").inc(1)
+    snap = reg.snapshot()
+    keys = list(snap["counters"])
+    assert keys == ['reqs_total{device="a"}', 'reqs_total{device="b"}']
+    with pytest.raises(ValueError):
+        c.labels(node="a")
+    text = reg.render()
+    assert "# TYPE reqs_total counter" in text
+    assert 'reqs_total{device="a"} 1' in text
+
+
+def test_histogram_render_is_cumulative_prometheus():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_seconds", buckets=(0.0, 1.0, 10.0))
+    for v in (0.5, 0.5, 5.0, 50.0):
+        h.observe(v)
+    text = reg.render()
+    assert 'lat_seconds_bucket{le="1"} 2' in text
+    assert 'lat_seconds_bucket{le="10"} 3' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 4' in text
+    assert "lat_seconds_count 4" in text
+
+
+def test_histogram_percentiles_clamp_to_observed():
+    h = Histogram.standalone()
+    for _ in range(100):
+        h.observe(0.25)
+    # every sample identical: all percentiles clamp to the exact value
+    assert h.percentile(50) == 0.25
+    assert h.percentile(99) == 0.25
+    s = h.summary()
+    assert s["n"] == 100 and s["max"] == 0.25
+
+
+def test_histogram_empty_summary_has_n0_marker():
+    s = Histogram.standalone().summary()
+    assert s == {"p50": 0.0, "p95": 0.0, "p99": 0.0, "n": 0,
+                 "mean": 0.0, "max": 0.0}
+
+
+def test_log_buckets_shape_and_validation():
+    b = log_buckets(1e-3, 1e0, 4)
+    assert b[0] == 0.0 and b[1] == pytest.approx(1e-3)
+    assert b[-1] == pytest.approx(1.0)
+    assert list(b) == sorted(b)
+    with pytest.raises(ValueError):
+        log_buckets(0.0, 1.0, 4)
+    assert BYTES_BUCKETS[0] == 0.0 and BYTES_BUCKETS[1] == 1.0
+
+
+def test_install_use_scoping():
+    base = obs_metrics.get_registry()
+    with obs_metrics.use() as reg:
+        assert obs_metrics.get_registry() is reg
+        assert reg.enabled
+    assert obs_metrics.get_registry() is base
+
+
+# --------------------------------------------------------- trace collector
+def test_spans_balanced_and_idempotent():
+    tr = TraceCollector()
+    tr.begin(1, "queued", 0.0)
+    tr.begin(1, "queued", 0.5)          # idempotent re-begin: dropped
+    tr.begin(1, "decode", 1.0)          # auto-closes "queued"
+    tr.end(1, "prefill", 1.5)           # no matching open span: dropped
+    tr.mark(1, "finish", 2.0)
+    tr.end(1, "decode", 2.0)
+    counts = validate(tr.export())
+    assert counts["spans"] == 2 and counts["requests"] == 1
+    assert counts["phases_per_request"]["1"] == ["decode", "finish",
+                                                 "queued"]
+
+
+def test_timestamps_clamped_monotone_per_track():
+    tr = TraceCollector()
+    tr.slice("dev0", "step", 1.0, 0.5)
+    tr.slice("dev0", "step", 0.2, 0.1)      # clock resync: clamped fwd
+    tr.begin(7, "decode", 3.0)
+    tr.end(7, "decode", 1.0)                # end before begin: clamped
+    validate(tr.export())                   # must not raise
+
+
+def test_ring_bounded_with_dropped_count():
+    tr = TraceCollector(capacity=8)
+    for i in range(20):
+        tr.instant("dev0", f"e{i}", i * 1e-3)
+    assert len(tr.events) == 8 and tr.dropped == 12
+    assert tr.export()["otherData"]["dropped_events"] == 12
+
+
+def test_close_open_defaults_to_last_timestamp():
+    tr = TraceCollector()
+    tr.begin(3, "decode", 1.5)
+    tr.slice("dev0", "step", 2.0, 0.25)
+    tr.close_open()
+    counts = validate(tr.export())
+    assert counts["spans"] == 1
+    assert tr.last_time() == pytest.approx(2.25)
+
+
+def test_validate_rejects_schema_violations():
+    with pytest.raises(ValueError):
+        validate({})                         # no traceEvents
+    unbalanced = {"traceEvents": [
+        {"ph": "b", "cat": "request", "id": 1, "name": "decode",
+         "pid": 1, "tid": 0, "ts": 0, "args": {}}]}
+    with pytest.raises(ValueError, match="unclosed"):
+        validate(unbalanced)
+    time_travel = {"traceEvents": [
+        {"ph": "X", "cat": "device", "name": "s", "pid": 10, "tid": 0,
+         "ts": 100, "dur": 50, "args": {}},
+        {"ph": "X", "cat": "device", "name": "s", "pid": 10, "tid": 0,
+         "ts": 120, "dur": 10, "args": {}}]}
+    with pytest.raises(ValueError, match="time travel"):
+        validate(time_travel)
+    bad_dur = {"traceEvents": [
+        {"ph": "X", "cat": "device", "name": "s", "pid": 10, "tid": 0,
+         "ts": 0, "dur": -1, "args": {}}]}
+    with pytest.raises(ValueError, match="duration"):
+        validate(bad_dur)
+
+
+# --------------------------------------------- engine + cluster integration
+def _engine(scfg=None, **scfg_kw):
+    scfg = scfg or ServingConfig(max_batch=3, max_len=64, pam=make_pam(),
+                                 **scfg_kw)
+    return ServingEngine(_CFG, _PARAMS, scfg)
+
+
+def test_engine_metrics_account_for_tokens_and_finishes():
+    with obs_metrics.use() as reg:
+        eng = _engine()
+        for r in make_requests(3, _CFG.vocab, plen=6, max_new=8):
+            eng.submit(r)
+        eng.run()
+        total = sum(len(rs.outputs) for rs in eng.requests.values())
+        assert reg.get('pam_engine_decode_tokens_total{device="dev0"}'
+                       ) == total
+        assert reg.get('pam_engine_finished_total{device="dev0"}') == 3
+        snap = reg.snapshot()
+        h = snap["histograms"]['pam_engine_step_seconds{device="dev0"}']
+        assert h["count"] == eng.steps and h["sum"] > 0
+
+
+def test_engine_trace_full_lifecycle_single_device():
+    with obs_trace.use() as tr:
+        eng = _engine()
+        for r in make_requests(2, _CFG.vocab, plen=6, max_new=6):
+            eng.submit(r)
+        eng.run()
+        counts = validate(tr.export())
+        for phases in counts["phases_per_request"].values():
+            assert {"queued", "decode", "finish"} <= set(phases)
+        assert counts["slices"] == eng.steps
+
+
+def test_fastpath_single_dispatch_with_collectors_enabled():
+    """THE hard constraint: one fused jitted call per decode step with
+    metrics + tracing both active."""
+    with obs_metrics.use(), obs_trace.use():
+        eng = _engine(scfg=ServingConfig(max_batch=2, max_len=64,
+                                         pam=make_pam()))
+        for r in make_requests(2, _CFG.vocab, plen=6, max_new=8):
+            eng.submit(r)
+        calls = {"decode": 0, "admit": 0}
+        fused_real = eng._get_micro(1)
+        eng._micro_jits[1] = (
+            lambda *a, **k: (calls.__setitem__("decode",
+                                               calls["decode"] + 1),
+                             fused_real(*a, **k))[1])
+        admit_real = eng._admit_jit
+        eng._admit_jit = (
+            lambda *a, **k: (calls.__setitem__("admit",
+                                               calls["admit"] + 1),
+                             admit_real(*a, **k))[1])
+        eng.step()
+        admit_calls = calls["admit"]
+        assert calls["decode"] == 1
+        for _ in range(4):
+            eng.step()
+        assert calls["decode"] == 5
+        assert calls["admit"] == admit_calls
+        assert eng.decode_dispatches == 5
+
+
+def test_donation_holds_with_collectors_enabled():
+    with obs_metrics.use(), obs_trace.use():
+        eng = _engine(scfg=ServingConfig(max_batch=2, max_len=64,
+                                         pam=make_pam()))
+        for r in make_requests(2, _CFG.vocab, plen=6, max_new=8):
+            eng.submit(r)
+        eng.step()
+        k_buf, imp_buf, tok_buf = (eng.cache.k, eng.pam_state.importance,
+                                   eng.tokens_dev)
+        eng.step()
+        assert k_buf.is_deleted()
+        assert imp_buf.is_deleted()
+        assert tok_buf.is_deleted()
+
+
+def test_fastpath_streams_unchanged_by_collectors():
+    """Telemetry observes, never perturbs: greedy token streams are
+    identical with collectors on and off (micro-loop fast path too)."""
+    def run(micro):
+        eng = ServingEngine(_CFG, _PARAMS,
+                            ServingConfig(max_batch=3, max_len=64,
+                                          pam=make_pam(),
+                                          micro_steps=micro))
+        for r in make_requests(3, _CFG.vocab, plen=6, max_new=8):
+            eng.submit(r)
+        eng.run()
+        return {rid: rs.outputs for rid, rs in eng.requests.items()}
+
+    for micro in (1, 4):
+        bare = run(micro)
+        with obs_metrics.use(), obs_trace.use():
+            traced = run(micro)
+        assert bare == traced, micro
+
+
+def _chaos_cluster(reg_seed=0):
+    """Seeded stall+kill chaos run over a heterogeneous 2-device
+    cluster; every construction happens under the caller's installed
+    collectors."""
+    scfg = ServingConfig(max_batch=4, max_len=64,
+                         pam=make_pam(hot=4, warm=8, recency_window=2),
+                         block_size=8)
+    inj = FaultInjector([FaultEvent(tick=6, kind="kill", device="cxl0")],
+                        seed=reg_seed)
+    router = build_cluster(
+        _CFG, _PARAMS, [HBM_CLASS, CXL_CLASS], scfg=scfg, faults=inj,
+        recovery=RecoveryConfig(heartbeat_timeout_s=0.01))
+    for i, r in enumerate(make_requests(6, _CFG.vocab, plen=16,
+                                        max_new=12)):
+        router.submit_to(r, ("hbm0", "cxl0")[i % 2])
+    return router.run()
+
+
+def test_chaos_trace_schema_and_migration_lifecycle():
+    with obs_metrics.use(), obs_trace.use() as tr:
+        s = _chaos_cluster()
+        assert s["finished"] == 6
+        counts = validate(tr.export())
+        assert counts["requests"] == 6
+        # at least one request's lifecycle crosses a migration or
+        # replay seam and still closes balanced
+        moved = [p for p in counts["phases_per_request"].values()
+                 if "migrate_out" in p or "replay" in p]
+        assert moved, counts["phases_per_request"]
+        assert all("finish" in p for p in
+                   counts["phases_per_request"].values())
+
+
+def test_chaos_metrics_snapshot_deterministic():
+    """Same seeded fault trace => byte-identical counter snapshot
+    (metrics are fed only from sim-clock/modeled values)."""
+    snaps = []
+    for _ in range(2):
+        with obs_metrics.use() as reg:
+            _chaos_cluster()
+            snaps.append(json.dumps(reg.snapshot(), sort_keys=True))
+    assert snaps[0] == snaps[1]
+    assert json.loads(snaps[0])["counters"][
+        'pam_cluster_faults_total{kind="kill"}'] == 1.0
+
+
+def test_recovery_stats_mirrored_into_registry():
+    with obs_metrics.use() as reg:
+        _chaos_cluster()
+        snap = reg.snapshot()["counters"]
+        assert snap['pam_cluster_recovery_events_total'
+                    '{event="kills_detected"}'] == 1.0
+
+
+# ------------------------------------------------------------ live export
+def test_ndjson_metrics_op():
+    async def go():
+        from repro.frontend.server import AsyncServer
+        srv = AsyncServer(_engine())
+        server, port, pump = await srv.serve_endpoint()
+        try:
+            reader, writer = await asyncio.open_connection("127.0.0.1",
+                                                           port)
+            writer.write(b'{"op": "metrics"}\n')
+            await writer.drain()
+            line = await reader.readline()
+            writer.close()
+            return json.loads(line)
+        finally:
+            pump.cancel()
+            server.close()
+            await server.wait_closed()
+
+    with obs_metrics.use():
+        msg = asyncio.run(go())
+    assert msg["op"] == "metrics" and msg["enabled"] is True
+    assert set(msg["metrics"]) == {"counters", "gauges", "histograms"}
+    assert "pam_frontend_requests_total" in msg["metrics"]["counters"]
+
+
+def test_frontend_latency_histograms_populated():
+    async def go(srv, reqs):
+        for r in reqs:
+            srv.submit(r.prompt, r.max_new_tokens, rid=r.id,
+                       arrival=r.arrival)
+        await srv.drain()
+
+    with obs_metrics.use() as reg:
+        from repro.frontend.server import AsyncServer
+        srv = AsyncServer(_engine())
+        reqs = make_requests(4, _CFG.vocab, plen=6, max_new=6,
+                             arrivals=True)
+        asyncio.run(go(srv, reqs))
+        snap = reg.snapshot()
+        assert snap["histograms"]["pam_frontend_ttft_seconds"][
+            "count"] == 4
+        streamed = sum(len(r.tokens) for r in srv.records.values())
+        assert reg.get("pam_frontend_streamed_tokens_total") == streamed
+        assert snap["histograms"]["pam_frontend_itl_seconds"][
+            "count"] == streamed - 4
+        s = srv.summary()
+        assert s["finished"] == 4 and s["streamed_tokens"] == streamed
+
+
+def test_summary_canonical_keys():
+    """Satellite 1: the renamed canonical key set — engines expose
+    ``step_time_s`` in load signals and ``migrations_in/out`` in
+    summaries; routers expose ``balancer_migrations``."""
+    eng = _engine()
+    sig = eng.load_signal()
+    assert "step_time_s" in sig and "last_step_time" not in sig
+    s = eng.summary()
+    assert {"migrations_in", "migrations_out", "prefill_dispatches",
+            "admit_dispatches"} <= set(s)
+    with obs_metrics.use():
+        summary = _chaos_cluster()
+    assert "balancer_migrations" in summary
+    assert "migrations" not in summary
+    assert {"migrations_in", "migrations_out"} <= set(summary)
