@@ -26,15 +26,16 @@ _HEARTBEAT_S = 0.02
 
 def _run_chaos(cfg, params, classes, scfg, trace, twin, chaos, slo_s,
                chaos_seed=0):
-    from repro.cluster import (BalancerConfig, FaultInjector, KVBalancer,
-                               RecoveryConfig, build_cluster)
+    from repro.cluster import (BalancerConfig, ClusterSpec, FaultInjector,
+                               KVBalancer, RecoveryConfig)
     faults = (FaultInjector.from_spec(chaos, seed=chaos_seed)
               if chaos else None)
     recovery = RecoveryConfig(heartbeat_timeout_s=_HEARTBEAT_S)
     bal = KVBalancer(BalancerConfig(rebalance_interval=4, hysteresis=1.2,
                                     cooldown_ticks=8))
-    router = build_cluster(cfg, params, classes, scfg=scfg, balancer=bal,
-                           faults=faults, recovery=recovery)
+    router = ClusterSpec.of(cfg, classes, serving=scfg,
+                            recovery=recovery).build(
+        params, balancer=bal, faults=faults)
     for req in trace:
         router.submit(req)
     summary = router.run()
@@ -66,8 +67,8 @@ def bench_chaos(n_requests: int = 48, slo_s: float = 0.05,
     from repro.models import transformer as tf
     from repro.models.config import get_config, reduced
     from repro.perfmodel.devices import CXL_CLASS, HBM_CLASS
-    from repro.serving import (PAMManagerConfig, Request, ServingConfig,
-                               ServingEngine)
+    from repro.serving import (EngineSpec, PAMManagerConfig, Request,
+                               ServingConfig)
 
     cfg = reduced(get_config("pam-llama-7b"))
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
@@ -81,7 +82,7 @@ def bench_chaos(n_requests: int = 48, slo_s: float = 0.05,
 
     # canonical per-request streams: one plain engine, arrivals ignored
     # (streams are batch/slot/phase-independent by construction)
-    eng = ServingEngine(cfg, params, scfg)
+    eng = EngineSpec(model=cfg, serving=scfg).build(params)
     for r in trace():
         eng.submit(Request(id=r.id, prompt=r.prompt,
                            max_new_tokens=r.max_new_tokens))

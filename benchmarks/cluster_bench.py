@@ -34,11 +34,12 @@ def bursty_trace(n: int, vocab: int, *, seed: int = 1, burst: int = 16,
 
 def _run_cluster(cfg, params, classes, scfg, trace, balanced: bool,
                  slo_s: float):
-    from repro.cluster import BalancerConfig, KVBalancer, build_cluster
+    from repro.cluster import BalancerConfig, ClusterSpec, KVBalancer
     bal = (KVBalancer(BalancerConfig(rebalance_interval=4, hysteresis=1.2,
                                      cooldown_ticks=8))
            if balanced else None)
-    router = build_cluster(cfg, params, classes, scfg=scfg, balancer=bal)
+    router = ClusterSpec.of(cfg, classes,
+                            serving=scfg).build(params, balancer=bal)
     for req in trace:
         router.submit(req)
     summary = router.run()

@@ -19,8 +19,8 @@ def bench_engine() -> list[tuple]:
     import jax.numpy as jnp  # noqa: F401
     from repro.models import transformer as tf
     from repro.models.config import get_config, reduced
-    from repro.serving import (PAMManagerConfig, Request, ServingConfig,
-                               ServingEngine)
+    from repro.serving import (EngineSpec, PAMManagerConfig, Request,
+                               ServingConfig)
 
     cfg = reduced(get_config("pam-llama-7b"))
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
@@ -37,9 +37,11 @@ def bench_engine() -> list[tuple]:
             compression=4, recency_window=4,
             schedule_interval=2,
             use_tiering=(kind == SystemKind.PAM)) if pam_on else None
-        eng = ServingEngine(
-            cfg, params,
-            ServingConfig(max_batch=4, max_len=96, pam=pam_cfg),
+        eng = EngineSpec(
+            model=cfg,
+            serving=ServingConfig(max_batch=4, max_len=96,
+                                  pam=pam_cfg)).build(
+            params,
             # 16384 hardware tokens per engine token: exercises the tiered
             # hierarchy at paper scale (see perfmodel.latency)
             latency_model=make_latency_model(system, PAM_LLAMA_7B,
@@ -72,8 +74,8 @@ def bench_decode_wallclock(micro_steps: int = 8) -> dict:
     import jax
     from repro.models import transformer as tf
     from repro.models.config import get_config, reduced
-    from repro.serving import (PAMManagerConfig, Request, ServingConfig,
-                               ServingEngine)
+    from repro.serving import (EngineSpec, PAMManagerConfig, Request,
+                               ServingConfig)
 
     cfg = reduced(get_config("pam-llama-7b"))
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
@@ -89,13 +91,11 @@ def bench_decode_wallclock(micro_steps: int = 8) -> dict:
     def one_run(micro: int, block_size: int = 0,
                 hot_window: int = 0) -> dict:
         rng = np.random.default_rng(0)
-        eng = ServingEngine(cfg, params,
-                            ServingConfig(max_batch=4, max_len=96,
-                                          pam=(pam_paged if block_size
-                                               else pam_cfg),
-                                          micro_steps=micro,
-                                          block_size=block_size,
-                                          hot_window=hot_window))
+        eng = EngineSpec(model=cfg, serving=ServingConfig(
+            max_batch=4, max_len=96,
+            pam=(pam_paged if block_size else pam_cfg),
+            micro_steps=micro, block_size=block_size,
+            hot_window=hot_window)).build(params)
         for i in range(8):
             eng.submit(Request(id=i, prompt=rng.integers(0, cfg.vocab, 24),
                                max_new_tokens=16))
@@ -151,8 +151,8 @@ def bench_hot_window_scaling(smax_list=(1024, 4096, 16384),
     import jax
     from repro.models import transformer as tf
     from repro.models.config import get_config, reduced
-    from repro.serving import (PAMManagerConfig, Request, ServingConfig,
-                               ServingEngine)
+    from repro.serving import (EngineSpec, PAMManagerConfig, Request,
+                               ServingConfig)
 
     cfg = reduced(get_config("pam-llama-7b"))
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
@@ -161,10 +161,10 @@ def bench_hot_window_scaling(smax_list=(1024, 4096, 16384),
         pam = PAMManagerConfig(
             max_tokens=smax, hot_capacity=16, warm_capacity=64,
             compression=4, recency_window=4, schedule_interval=2)
-        eng = ServingEngine(cfg, params, ServingConfig(
+        eng = EngineSpec(model=cfg, serving=ServingConfig(
             max_batch=2, max_len=smax, pam=pam, block_size=block_size,
             # small pool: each request maps only its own window's blocks
-            pool_blocks=8, hot_window=hot_window))
+            pool_blocks=8, hot_window=hot_window)).build(params)
         rng = np.random.default_rng(0)
         for i in range(4):
             eng.submit(Request(id=i,

@@ -25,8 +25,8 @@ def bench_obs_overhead(micro_steps: int = 8, repeats: int = 3) -> dict:
     from repro.models.config import get_config, reduced
     from repro.obs import metrics as obs_metrics
     from repro.obs import trace as obs_trace
-    from repro.serving import (PAMManagerConfig, Request, ServingConfig,
-                               ServingEngine)
+    from repro.serving import (EngineSpec, PAMManagerConfig, Request,
+                               ServingConfig)
 
     cfg = reduced(get_config("pam-llama-7b"))
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
@@ -36,10 +36,9 @@ def bench_obs_overhead(micro_steps: int = 8, repeats: int = 3) -> dict:
 
     def one_run() -> tuple[float, dict, dict]:
         rng = np.random.default_rng(0)
-        eng = ServingEngine(cfg, params,
-                            ServingConfig(max_batch=4, max_len=96,
-                                          pam=pam,
-                                          micro_steps=micro_steps))
+        eng = EngineSpec(model=cfg, serving=ServingConfig(
+            max_batch=4, max_len=96, pam=pam,
+            micro_steps=micro_steps)).build(params)
         for i in range(8):
             eng.submit(Request(id=i,
                                prompt=rng.integers(0, cfg.vocab, 24),

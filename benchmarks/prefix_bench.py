@@ -35,8 +35,8 @@ def prefix_sweep(share_ratios=(0.0, 0.25, 0.5, 0.75), n_requests=8,
     import jax
     from repro.models import transformer as tf
     from repro.models.config import get_config, reduced
-    from repro.serving import (PAMManagerConfig, Request, ServingConfig,
-                               ServingEngine)
+    from repro.serving import (EngineSpec, PAMManagerConfig, Request,
+                               ServingConfig)
 
     cfg = reduced(get_config("qwen3-0.6b"))
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
@@ -46,9 +46,9 @@ def prefix_sweep(share_ratios=(0.0, 0.25, 0.5, 0.75), n_requests=8,
         pam = PAMManagerConfig(max_tokens=64, hot_capacity=16,
                                warm_capacity=24, compression=4,
                                recency_window=4, schedule_interval=2)
-        return ServingEngine(cfg, params, ServingConfig(
+        return EngineSpec(model=cfg, serving=ServingConfig(
             max_batch=2, max_len=64, pam=pam, block_size=8,
-            prefix_cache=prefix_cache))
+            prefix_cache=prefix_cache)).build(params)
 
     points = {}
     tokens_lost_total = 0

@@ -19,7 +19,7 @@ def main(argv=None) -> None:
     ap.add_argument("--section", default="all",
                     choices=["all", "figs", "kernels", "engine",
                              "roofline", "cluster", "chaos", "prefix",
-                             "serving", "obs"])
+                             "serving", "obs", "shard"])
     ap.add_argument("--dryrun-dir", default="experiments/dryrun")
     ap.add_argument("--out", default=None, metavar="BENCH.json",
                     help="write decode tokens/s + dispatch counts (and all "
@@ -77,6 +77,11 @@ def main(argv=None) -> None:
         from benchmarks.obs_bench import obs_rows
         obs, orows = obs_rows()
         rows += orows
+    shard = None
+    if args.section in ("all", "shard"):
+        from benchmarks.shard_bench import shard_rows
+        shard, shrows = shard_rows()
+        rows += shrows
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
@@ -129,6 +134,20 @@ def main(argv=None) -> None:
                 obs["enabled"]["decode_tok_s"]
             payload["obs_decode_tok_s_disabled"] = \
                 obs["disabled"]["decode_tok_s"]
+        if shard is not None:
+            # sharded-engine trajectory point (PR 10): twin-exact
+            # streams at shard 1/2/4, one dispatch/step under
+            # shard_map, ~1/N param bytes per device, and the Alg. 1
+            # (O, m, l) merge's collective bytes flat in context
+            payload["shard"] = shard
+            payload["shard_tokens_lost"] = shard["tokens_lost_total"]
+            payload["shard_dispatches_per_step"] = \
+                shard["dispatches_per_step_max"]
+            payload["shard_merge_bytes_flat"] = \
+                shard["merge_bytes_flat"]
+            payload["shard_param_bytes_ratio_2way"] = (
+                shard["points"]["2"]["param_bytes_per_device"]
+                / shard["points"]["1"]["param_bytes_per_device"])
         if chaos is not None:
             # fault-tolerance trajectory point (PR 6): goodput under an
             # injected device kill, token-exact vs the failure-free twin

@@ -47,15 +47,14 @@ def _score_keys(sc: dict, adm) -> dict:
 def serving_sweep(n_requests: int = 256, rate_rps: float = 300.0,
                   seed: int = 11) -> dict:
     import jax
-    from repro.cluster import (BalancerConfig, KVBalancer, RecoveryConfig,
-                               build_cluster)
+    from repro.cluster import (BalancerConfig, ClusterSpec, KVBalancer,
+                               RecoveryConfig)
     from repro.frontend.admission import SLOAdmission, SLOSpec
     from repro.frontend.loadgen import TraceConfig, make_trace, score
     from repro.frontend.server import AsyncServer
     from repro.models import transformer as tf
     from repro.models.config import get_config, reduced
     from repro.perfmodel import make_latency_model
-    from repro.perfmodel.devices import parse_devices
     from repro.perfmodel.model import PAM_LLAMA_7B, make_system
 
     cfg = reduced(get_config("qwen3-0.6b"))
@@ -65,7 +64,7 @@ def serving_sweep(n_requests: int = 256, rate_rps: float = 300.0,
     cluster_slo = SLOSpec(ttft_s=CLUSTER_SLO_TTFT_S,
                           tpot_s=CLUSTER_SLO_TPOT_S)
 
-    from repro.serving import PAMManagerConfig, ServingConfig, ServingEngine
+    from repro.serving import EngineSpec, PAMManagerConfig, ServingConfig
 
     def scfg(max_len=128, chunk=0):
         pam = PAMManagerConfig(max_tokens=max_len,
@@ -76,13 +75,14 @@ def serving_sweep(n_requests: int = 256, rate_rps: float = 300.0,
                              block_size=8, prefill_chunk=chunk)
 
     def engine(**kw):
-        return ServingEngine(cfg, params, scfg(**kw), latency_model=lat)
+        return EngineSpec(model=cfg, serving=scfg(**kw)).build(
+            params, latency_model=lat)
 
     def cluster():
-        return build_cluster(cfg, params, parse_devices("hbm:1,cxl:2"),
-                             scfg=scfg(),
-                             balancer=KVBalancer(BalancerConfig()),
-                             recovery=RecoveryConfig())
+        return ClusterSpec.from_cli(
+            "hbm:1,cxl:2", model=cfg, serving=scfg(),
+            recovery=RecoveryConfig()).build(
+            params, balancer=KVBalancer(BalancerConfig()))
 
     def trace(kind, tseed, **kw):
         base = dict(kind=kind, n_requests=n_requests, rate_rps=rate_rps,

@@ -1,0 +1,155 @@
+"""Sharded single-dispatch engine bench (PR 10) -> BENCH_pr10.json.
+
+Measures, at shard 1/2/4 on fake CPU devices (subprocess — the
+8-device XLA flag must be set before jax imports, and the parent bench
+session must keep seeing 1 device):
+
+  * decode tokens/s of the sharded fused step (wall clock)
+  * dispatches per decode step — the 1-dispatch invariant under
+    ``shard_map``
+  * param bytes per device — a shard-N engine holds ~1/N of a copy
+  * token exactness vs the unsharded engine (streams must be
+    bit-identical; ``tokens_lost`` counts any divergence)
+  * the Alg. 1 merge's collective bytes/step vs context length — the
+    ``pmax``/``psum`` of the (O, m, l) triple is H x (d + 2) fp32 per
+    layer per row, FLAT in context, against a gather baseline whose
+    bytes grow linearly (the paper's flat-communication claim)
+  * replica-group economics: one 2-way group's summed param bytes vs
+    two full per-device copies
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_CTXS = (64, 256, 1024, 4096)
+
+
+def _worker_main() -> None:
+    import time
+
+    import jax
+    import numpy as np
+
+    jax.config.update("jax_platform_name", "cpu")
+
+    from repro.distributed.pam_shard import merge_collective_bytes
+    from repro.models import transformer as tf
+    from repro.models.config import get_config, reduced
+    from repro.serving.engine import Request, ServingConfig
+    from repro.serving.pam_manager import PAMManagerConfig
+    from repro.serving.spec import EngineSpec
+
+    cfg = reduced(get_config("qwen3-0.6b"))
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    pam = PAMManagerConfig(max_tokens=64, hot_capacity=8,
+                           warm_capacity=16, compression=4,
+                           recency_window=4, schedule_interval=2)
+    scfg = ServingConfig(pam=pam, max_batch=2, max_len=64, block_size=8,
+                         pool_blocks=23, hot_window=16)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, cfg.vocab, 20) for _ in range(4)]
+
+    def run(shard):
+        eng = EngineSpec(model=cfg, serving=scfg, shard=shard,
+                         name=f"s{shard}").build(params)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(id=i, prompt=p, max_new_tokens=12))
+        t0 = time.perf_counter()
+        summary = eng.run()
+        wall = time.perf_counter() - t0
+        streams = {rid: rs.outputs for rid, rs in eng.requests.items()}
+        return {
+            "decode_tok_s": summary["total_tokens"] / wall,
+            "dispatches_per_step": (eng.decode_dispatches
+                                    / max(eng.decode_device_steps, 1)),
+            "param_bytes_per_device": eng.params_bytes_per_device(),
+        }, streams
+
+    points, streams = {}, {}
+    for shard in (1, 2, 4):
+        points[str(shard)], streams[shard] = run(shard)
+    lost = sum(
+        sum(a != b for a, b in zip(streams[1][rid], streams[s][rid]))
+        + abs(len(streams[1][rid]) - len(streams[s][rid]))
+        for s in (2, 4) for rid in streams[1])
+
+    # analytic collective bytes/step: the exact (O, m, l) merge vs a
+    # gather baseline that ships the remote KV instead (batch of 2)
+    B = scfg.max_batch
+    merge_by_ctx, gather_by_ctx = {}, {}
+    for ctx in _CTXS:
+        merge, _ = merge_collective_bytes(cfg.n_layers, cfg.n_heads,
+                                          cfg.head_dim, B)
+        merge_by_ctx[str(ctx)] = merge
+        gather_by_ctx[str(ctx)] = (2 * cfg.n_layers * B * cfg.n_kv_heads
+                                   * cfg.head_dim * ctx * 4)
+    full = points["1"]["param_bytes_per_device"]
+    grp2 = 2 * points["2"]["param_bytes_per_device"]
+    out = {
+        "points": points,
+        "tokens_lost_total": int(lost),
+        "merge_bytes_by_context": merge_by_ctx,
+        "gather_bytes_by_context": gather_by_ctx,
+        "merge_bytes_flat": len(set(merge_by_ctx.values())) == 1,
+        "merge_bytes_per_step": merge_by_ctx[str(_CTXS[0])],
+        "dispatches_per_step_max": max(
+            p["dispatches_per_step"] for p in points.values()),
+        "replica_group_2way": {
+            "group_total_bytes": grp2,
+            "per_device_copies_bytes": 2 * full,
+            "bytes_ratio_vs_copies": grp2 / (2 * full),
+        },
+    }
+    print("SHARD_BENCH_JSON " + json.dumps(out))
+
+
+def shard_rows() -> tuple[dict, list[tuple]]:
+    """Run the sharded bench in an 8-fake-device subprocess; returns
+    (summary dict for BENCH_pr10.json, CSV rows)."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(repo, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                        + env.get("XLA_FLAGS", ""))
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--worker"],
+        env=env, capture_output=True, text=True, timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(f"shard bench worker failed:\n{out.stdout}"
+                           f"\n{out.stderr}")
+    line = next(ln for ln in out.stdout.splitlines()
+                if ln.startswith("SHARD_BENCH_JSON "))
+    d = json.loads(line[len("SHARD_BENCH_JSON "):])
+
+    rows: list[tuple] = []
+    for shard, p in sorted(d["points"].items(), key=lambda kv: int(kv[0])):
+        rows.append((f"shard{shard}_decode", 0.0,
+                     f"{p['decode_tok_s']:.0f} tok/s, "
+                     f"{p['dispatches_per_step']:.2f} dispatches/step, "
+                     f"{p['param_bytes_per_device']} param B/dev"))
+    for ctx in _CTXS:
+        rows.append((f"shard_collectives_ctx{ctx}", 0.0,
+                     f"merge {d['merge_bytes_by_context'][str(ctx)]} B "
+                     f"vs gather {d['gather_bytes_by_context'][str(ctx)]}"
+                     f" B"))
+    rg = d["replica_group_2way"]
+    rows.append(("shard_replica_group_2way", 0.0,
+                 f"{rg['group_total_bytes']} B shared vs "
+                 f"{rg['per_device_copies_bytes']} B as copies "
+                 f"({rg['bytes_ratio_vs_copies']:.2f}x)"))
+    rows.append(("shard_tokens_lost", 0.0, str(d["tokens_lost_total"])))
+    return d, rows
+
+
+if __name__ == "__main__":
+    if "--worker" in sys.argv:
+        _worker_main()
+    else:
+        summary, rows = shard_rows()
+        for name, us, derived in rows:
+            print(f"{name},{us:.2f},{derived}")

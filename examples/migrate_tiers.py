@@ -9,17 +9,17 @@ import numpy as np
 
 from repro.models import transformer as tfm
 from repro.models.config import get_config, reduced
-from repro.serving import (PAMManagerConfig, Request, ServingConfig,
-                           ServingEngine)
+from repro.serving import (EngineSpec, PAMManagerConfig, Request,
+                           ServingConfig)
 from repro.core.tiers import HOT, WARM, COLD
 
 cfg = reduced(get_config("qwen3-14b"))
 params = tfm.init_params(cfg, jax.random.PRNGKey(0))
-eng = ServingEngine(cfg, params, ServingConfig(
+eng = EngineSpec(model=cfg, serving=ServingConfig(
     max_batch=1, max_len=160,
     pam=PAMManagerConfig(max_tokens=160, hot_capacity=12, warm_capacity=36,
                          compression=4, recency_window=4,
-                         schedule_interval=1)))
+                         schedule_interval=1))).build(params)
 
 rng = np.random.default_rng(0)
 eng.submit(Request(id=0, prompt=rng.integers(0, cfg.vocab, 96),

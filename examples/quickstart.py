@@ -62,15 +62,16 @@ assert hot_imp > cold_imp
 # ---- 3. the serving engine on a tiny qwen3 ------------------------------
 from repro.models import transformer as tfm
 from repro.models.config import get_config, reduced
-from repro.serving import (PAMManagerConfig, Request, ServingConfig,
-                           ServingEngine)
+from repro.serving import (EngineSpec, PAMManagerConfig, Request,
+                           ServingConfig)
 
 cfg = reduced(get_config("qwen3-0.6b"))
 params = tfm.init_params(cfg, jax.random.PRNGKey(1))
-eng = ServingEngine(cfg, params, ServingConfig(
+eng = EngineSpec(model=cfg, serving=ServingConfig(
     max_batch=2, max_len=64,
     pam=PAMManagerConfig(max_tokens=64, hot_capacity=8, warm_capacity=16,
-                         compression=4, recency_window=4)))
+                         compression=4,
+                         recency_window=4))).build(params)
 rng = np.random.default_rng(0)
 for i in range(3):
     eng.submit(Request(id=i, prompt=rng.integers(0, cfg.vocab, 8),
@@ -85,8 +86,9 @@ pam4 = PAMManagerConfig(max_tokens=64, hot_capacity=4, warm_capacity=16,
                         compression=4, recency_window=2)
 engines = []
 for block_size in (0, 8):                # dense twin vs paged
-    e = ServingEngine(cfg, params, ServingConfig(
-        max_batch=2, max_len=64, pam=pam4, block_size=block_size))
+    e = EngineSpec(model=cfg, serving=ServingConfig(
+        max_batch=2, max_len=64, pam=pam4,
+        block_size=block_size)).build(params)
     rng = np.random.default_rng(1)
     for i in range(2):
         e.submit(Request(id=i, prompt=rng.integers(0, cfg.vocab, 28),
@@ -104,12 +106,13 @@ print(f"4. paged engine: identical tokens, "
 # One fast HBM-class device + one slow CXL-class device serve a shared
 # stream; the balancer migrates running requests off the overloaded slow
 # device THROUGH the block table, token streams staying exact.
-from repro.cluster import BalancerConfig, KVBalancer, build_cluster
+from repro.cluster import BalancerConfig, ClusterSpec, KVBalancer
 from repro.perfmodel.devices import CXL_CLASS, HBM_CLASS
 
 scfg5 = ServingConfig(max_batch=2, max_len=64, pam=pam4, block_size=8)
-router = build_cluster(
-    cfg, params, [HBM_CLASS, CXL_CLASS], scfg=scfg5,
+router = ClusterSpec.of(
+    cfg, [HBM_CLASS, CXL_CLASS], serving=scfg5).build(
+    params,
     balancer=KVBalancer(BalancerConfig(rebalance_interval=2,
                                        hysteresis=1.1, cooldown_ticks=4,
                                        min_remaining=2)))
@@ -121,7 +124,7 @@ for r in reqs[:2]:                       # pre-load the SLOW device
 for r in reqs[2:]:
     router.submit(r)
 cs = router.run()
-twin5 = ServingEngine(cfg, params, scfg5)
+twin5 = EngineSpec(model=cfg, serving=scfg5).build(params)
 for r in reqs:
     twin5.submit(Request(id=r.id, prompt=r.prompt,
                          max_new_tokens=r.max_new_tokens))

@@ -12,8 +12,8 @@ from repro.perfmodel import make_latency_model
 from repro.models import transformer as tfm
 from repro.models.config import get_config, reduced
 from repro.perfmodel.model import LLAMA3_70B, SystemKind, make_system
-from repro.serving import (PAMManagerConfig, Request, ServingConfig,
-                           ServingEngine)
+from repro.serving import (EngineSpec, PAMManagerConfig, Request,
+                           ServingConfig)
 
 cfg = reduced(get_config("pam-llama-7b"))
 params = tfm.init_params(cfg, jax.random.PRNGKey(0))
@@ -30,9 +30,11 @@ for system in (SystemKind.PAM, SystemKind.LSPIM, SystemKind.VLLM_OFFLOAD):
             max_tokens=128, hot_capacity=16, warm_capacity=32,
             compression=4, recency_window=4, schedule_interval=2,
             use_tiering=(system == SystemKind.PAM))
-    eng = ServingEngine(
-        cfg, params,
-        ServingConfig(max_batch=4, max_len=128, pam=pam_cfg),
+    eng = EngineSpec(
+        model=cfg,
+        serving=ServingConfig(max_batch=4, max_len=128,
+                              pam=pam_cfg)).build(
+        params,
         # each engine token models 16384 hardware tokens: the run exercises
         # the paper-scale hierarchy (vLLM's offload spills past HBM; PAM's
         # sparse working set stays on HBM-PIM)

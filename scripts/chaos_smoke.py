@@ -12,13 +12,13 @@ import numpy as np
 
 jax.config.update("jax_platform_name", "cpu")
 
-from repro.cluster import (FaultEvent, FaultInjector, RecoveryConfig,  # noqa: E402
-                           build_cluster)
+from repro.cluster import (ClusterSpec, FaultEvent,                   # noqa: E402
+                           FaultInjector, RecoveryConfig)
 from repro.models import transformer as tf                            # noqa: E402
 from repro.models.config import get_config, reduced                   # noqa: E402
 from repro.perfmodel.devices import HBM_CLASS                         # noqa: E402
-from repro.serving import (PAMManagerConfig, Request, ServingConfig,  # noqa: E402
-                           ServingEngine)
+from repro.serving import (EngineSpec, PAMManagerConfig,              # noqa: E402
+                           Request, ServingConfig)
 
 
 def main():
@@ -34,9 +34,10 @@ def main():
                     max_new_tokens=12, arrival=0.0) for i in range(4)]
 
     inj = FaultInjector([FaultEvent(tick=6, kind="kill", device="hbm1")])
-    router = build_cluster(
-        cfg, params, [HBM_CLASS, HBM_CLASS], scfg=scfg, faults=inj,
-        recovery=RecoveryConfig(heartbeat_timeout_s=0.01))
+    router = ClusterSpec.of(
+        cfg, [HBM_CLASS, HBM_CLASS], serving=scfg,
+        recovery=RecoveryConfig(
+            heartbeat_timeout_s=0.01)).build(params, faults=inj)
     for i, req in enumerate(reqs):       # pin 2 per device
         router.submit_to(req, f"hbm{i % 2}")
     summary = router.run()
@@ -49,7 +50,7 @@ def main():
 
     # zero lost tokens: every stream equals a failure-free twin's, and
     # the client-visible event stream is gapless and duplicate-free
-    twin = ServingEngine(cfg, params, scfg)
+    twin = EngineSpec(model=cfg, serving=scfg).build(params)
     for req in reqs:
         twin.submit(Request(id=req.id, prompt=req.prompt,
                             max_new_tokens=req.max_new_tokens))

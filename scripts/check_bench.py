@@ -26,6 +26,14 @@ Checks (obs section, ``BENCH_pr9.json``):
     zero-allocation-when-disabled / cheap-when-enabled floor)
   * token streams identical with collectors on and off
 
+Checks (shard section, ``BENCH_pr10.json``):
+  * zero tokens diverged between shard 1/2/4 engines (sharding is
+    bit-exact)
+  * one fused dispatch per decode step under shard_map
+  * a 2-way-sharded engine holds <= 0.6x the full param copy per
+    device (replica groups share one sharded replica)
+  * the Alg. 1 (O, m, l) merge's collective bytes are FLAT in context
+
 Checks (serving section, ``BENCH_pr8.json``):
   * zero lost / duplicated streamed tokens across every scenario
   * SLO attainment >= 0.9 on the smoke trace (single-device Poisson)
@@ -123,11 +131,39 @@ def check_serving(d: dict) -> None:
           f"token-gap {ratio:.3f}x unchunked at {tc:.0f}/{tu:.0f} tok/s")
 
 
+def check_shard(d: dict) -> None:
+    lost = d["shard_tokens_lost"]
+    assert lost == 0, (
+        f"{lost} tokens diverged between sharded and unsharded "
+        f"engines — the shard_map merge is no longer exact")
+    disp = d["shard_dispatches_per_step"]
+    assert disp == 1.0, (
+        f"{disp} dispatches/step — sharding broke the fused-dispatch "
+        f"invariant")
+    ratio = d["shard_param_bytes_ratio_2way"]
+    assert ratio <= 0.6, (
+        f"2-way-sharded engine holds {ratio:.2f}x of the full param "
+        f"copy per device (floor 0.6x) — replica groups no longer "
+        f"share the replica")
+    assert d["shard_merge_bytes_flat"] is True, (
+        "the (O, m, l) merge's collective bytes grew with context — "
+        "the flat-communication claim regressed")
+    pts = d["shard"]["points"]
+    print(f"shard bench OK: 0 tokens diverged at shard "
+          f"{sorted(pts, key=int)}, {disp:.2f} dispatches/step, "
+          f"{ratio:.2f}x param bytes/device at shard 2, merge "
+          f"{d['shard']['merge_bytes_per_step']} B/step flat in "
+          f"context")
+
+
 def main(path: str, floor: float = 100.0) -> None:
     d = json.load(open(path))
     done = False
     if "prefix_tokens_lost" in d:
         check_prefix(d)
+        done = True
+    if "shard_tokens_lost" in d:
+        check_shard(d)
         done = True
     if "chaos_kill_goodput_ratio" in d:
         check_chaos(d)

@@ -10,12 +10,12 @@ import numpy as np
 
 jax.config.update("jax_platform_name", "cpu")
 
-from repro.cluster import BalancerConfig, KVBalancer, build_cluster  # noqa: E402
+from repro.cluster import BalancerConfig, ClusterSpec, KVBalancer   # noqa: E402
 from repro.models import transformer as tf                           # noqa: E402
 from repro.models.config import get_config, reduced                  # noqa: E402
 from repro.perfmodel.devices import CXL_CLASS, HBM_CLASS             # noqa: E402
-from repro.serving import (PAMManagerConfig, Request, ServingConfig, # noqa: E402
-                           ServingEngine)
+from repro.serving import (EngineSpec, PAMManagerConfig,            # noqa: E402
+                           Request, ServingConfig)
 
 
 def main():
@@ -29,8 +29,9 @@ def main():
     reqs = [Request(id=i, prompt=rng.integers(0, cfg.vocab, 16),
                     max_new_tokens=12, arrival=0.0) for i in range(8)]
 
-    router = build_cluster(
-        cfg, params, [HBM_CLASS, CXL_CLASS], scfg=scfg,
+    router = ClusterSpec.of(
+        cfg, [HBM_CLASS, CXL_CLASS], serving=scfg).build(
+        params,
         balancer=KVBalancer(BalancerConfig(rebalance_interval=2,
                                            hysteresis=1.1,
                                            cooldown_ticks=4,
@@ -47,7 +48,7 @@ def main():
         f"no migrations: {summary['balancer_migrations']}"
 
     # exactness: every stream equals an unmigrated twin's
-    twin = ServingEngine(cfg, params, scfg)
+    twin = EngineSpec(model=cfg, serving=scfg).build(params)
     for req in reqs:
         twin.submit(Request(id=req.id, prompt=req.prompt,
                             max_new_tokens=req.max_new_tokens))

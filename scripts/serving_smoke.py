@@ -21,8 +21,8 @@ from repro.models import transformer as tf                     # noqa: E402
 from repro.models.config import get_config, reduced            # noqa: E402
 from repro.perfmodel import make_latency_model                 # noqa: E402
 from repro.perfmodel.model import PAM_LLAMA_7B, make_system    # noqa: E402
-from repro.serving import (PAMManagerConfig, Request,          # noqa: E402
-                           ServingConfig, ServingEngine)
+from repro.serving import (EngineSpec, PAMManagerConfig,       # noqa: E402
+                           Request, ServingConfig)
 
 SLO = SLOSpec(ttft_s=0.25, tpot_s=0.05)
 
@@ -40,7 +40,8 @@ def main():
                        prompt_len=(6, 40), max_new=(3, 10),
                        vocab=cfg.vocab, seed=3)
 
-    eng = ServingEngine(cfg, params, scfg, latency_model=lat)
+    eng = EngineSpec(model=cfg,
+                     serving=scfg).build(params, latency_model=lat)
     srv = AsyncServer(eng, admission=SLOAdmission(SLO))
     records = asyncio.run(srv.serve_trace(make_trace(tcfg)))
     sc = score(records.values(), ttft_slo_s=SLO.ttft_s,
@@ -52,7 +53,8 @@ def main():
 
     # chunked streams must be bit-identical to a direct engine run of
     # the same requests (no arrival gating, no front end in the loop)
-    twin = ServingEngine(cfg, params, scfg, latency_model=lat)
+    twin = EngineSpec(model=cfg,
+                      serving=scfg).build(params, latency_model=lat)
     for r in make_trace(tcfg):
         twin.submit(Request(id=r.id, prompt=r.prompt,
                             max_new_tokens=r.max_new_tokens))

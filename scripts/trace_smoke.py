@@ -19,15 +19,15 @@ import numpy as np
 
 jax.config.update("jax_platform_name", "cpu")
 
-from repro.cluster import (FaultEvent, FaultInjector, RecoveryConfig,  # noqa: E402
-                           build_cluster)
+from repro.cluster import (ClusterSpec, FaultEvent,                  # noqa: E402
+                           FaultInjector, RecoveryConfig)
 from repro.models import transformer as tf                           # noqa: E402
 from repro.models.config import get_config, reduced                  # noqa: E402
 from repro.obs import metrics as obs_metrics                         # noqa: E402
 from repro.obs import trace as obs_trace                             # noqa: E402
 from repro.perfmodel.devices import CXL_CLASS, HBM_CLASS             # noqa: E402
-from repro.serving import (PAMManagerConfig, Request, ServingConfig, # noqa: E402
-                           ServingEngine)
+from repro.serving import (EngineSpec, PAMManagerConfig,             # noqa: E402
+                           Request, ServingConfig)
 
 
 def main():
@@ -49,9 +49,10 @@ def main():
     try:
         inj = FaultInjector([FaultEvent(tick=6, kind="kill",
                                         device="cxl0")])
-        router = build_cluster(
-            cfg, params, [HBM_CLASS, CXL_CLASS], scfg=scfg, faults=inj,
-            recovery=RecoveryConfig(heartbeat_timeout_s=0.01))
+        router = ClusterSpec.of(
+            cfg, [HBM_CLASS, CXL_CLASS], serving=scfg,
+            recovery=RecoveryConfig(
+                heartbeat_timeout_s=0.01)).build(params, faults=inj)
         for i, r in enumerate(reqs):
             router.submit_to(r, ("hbm0", "cxl0")[i % 2])
         summary = router.run()
@@ -64,7 +65,7 @@ def main():
 
     # exactness: telemetry observed a chaos run whose streams still
     # match a bare, untraced twin
-    twin = ServingEngine(cfg, params, scfg)
+    twin = EngineSpec(model=cfg, serving=scfg).build(params)
     for r in reqs:
         twin.submit(Request(id=r.id, prompt=r.prompt,
                             max_new_tokens=r.max_new_tokens))

@@ -10,10 +10,11 @@ from repro.cluster.migration import (KVSnapshot, SnapshotCorruption,
 from repro.cluster.recovery import RecoveryConfig, RecoveryManager
 from repro.cluster.router import (ClusterDevice, ClusterRouter,
                                   RouterConfig, TokenEvent, build_cluster)
+from repro.cluster.spec import ClusterSpec, ReplicaGroup
 
-__all__ = ["BalancerConfig", "KVBalancer", "KVSnapshot",
-           "SnapshotCorruption", "can_migrate", "migrate",
-           "FaultEvent", "FaultInjector", "parse_chaos",
+__all__ = ["BalancerConfig", "ClusterSpec", "KVBalancer", "KVSnapshot",
+           "ReplicaGroup", "SnapshotCorruption", "can_migrate",
+           "migrate", "FaultEvent", "FaultInjector", "parse_chaos",
            "RecoveryConfig", "RecoveryManager", "ClusterDevice",
            "ClusterRouter", "RouterConfig", "TokenEvent",
            "build_cluster"]

@@ -81,6 +81,16 @@ class KVSnapshot:
     token_times: list[float]
     src: str                       # exporting device name
     checksum: Optional[int] = None   # crc32 seal; None = unsealed
+    # PR 10: shard count of the EXPORTING engine, recorded for
+    # observability only. The snapshot's logical (L, Hkv, Smax, dh)
+    # layout is the resharding interface itself: the source's export
+    # gather all-gathers its ring/pool shards into absolute
+    # coordinates, and the target's import commit re-scatters through
+    # ITS mesh's out_shardings — so migration between engines of any
+    # two shard counts (1<->2, 2<->4, ...) needs no shard-aware code
+    # here and stays bit-exact (the checksum intentionally excludes
+    # this field: the same KV bytes seal identically at any shard).
+    src_shard: int = 1
 
     @property
     def kv_bytes(self) -> int:
@@ -97,7 +107,8 @@ class KVSnapshot:
                    v=d["v"], importance=d["importance"], tier=d["tier"],
                    last_hot=d["last_hot"],
                    first_token_time=d["first_token_time"],
-                   token_times=d["token_times"], src=d["src"])
+                   token_times=d["token_times"], src=d["src"],
+                   src_shard=getattr(engine, "shard", 1))
         snap.seal()
         return snap
 

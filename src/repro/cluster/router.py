@@ -42,7 +42,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Callable, Iterable, Optional
+import warnings
+from typing import Any, Callable, Iterable, Iterator, Optional
 
 import numpy as np
 
@@ -52,24 +53,14 @@ from repro.cluster.migration import KVSnapshot
 from repro.cluster.recovery import RecoveryConfig, RecoveryManager
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
-from repro.perfmodel.devices import (DeviceClass, make_device_latency_model,
-                                     step_time_prior)
+from repro.perfmodel.devices import DeviceClass
 from repro.serving.engine import (DONE, RUNNING, Request, ServingConfig,
                                   ServingEngine)
+from repro.serving.events import ServeEvent
 
-
-@dataclasses.dataclass
-class TokenEvent:
-    """One streamed completion token (the router's streaming API)."""
-    time: float                  # device sim-clock at emission
-    request_id: int
-    token: int
-    index: int                   # position in the request's output
-    device: str
-    done: bool                   # True on the request's final token
-    rejected: bool = False       # graceful-degradation marker: the
-    # stream ends here without a token (token == -1) because no device
-    # can serve the request — the cluster keeps serving everyone else
+# The router's streamed-token type IS the unified serving event (PR 10);
+# the old name stays as the canonical alias cluster-side code imports.
+TokenEvent = ServeEvent
 
 
 @dataclasses.dataclass
@@ -729,6 +720,53 @@ class ClusterRouter:
         out, self._events = self._events, []
         return out
 
+    def as_router(self) -> "ClusterRouter":
+        """Unified-backend hook (PR 10): a router is already a router.
+        ``ServingEngine.as_router`` wraps a bare engine the same way, so
+        front ends duck-type one backend shape."""
+        return self
+
+    def serve(self, requests: Optional[Iterable[Request]] = None, *,
+              max_ticks: Optional[int] = None) -> Iterator[TokenEvent]:
+        """Unified streaming surface (PR 10): submit ``requests`` (if
+        given), then tick until the stream fully drains, yielding each
+        ``ServeEvent`` in emission order. The single generator both the
+        CLI batch path and the cluster path consume; the async front end
+        (``frontend.AsyncServer``) remains the per-request-stream view
+        over the same events."""
+        if requests is not None:
+            for req in requests:
+                self.submit(req)
+        yield from self.drain_events()
+        limit = max_ticks if max_ticks is not None else self.rcfg.max_ticks
+        for _ in range(limit):
+            live = self.tick()
+            yield from self.drain_events()
+            if not live:
+                return
+        raise RuntimeError(f"cluster did not drain in {limit} ticks")
+
+    @classmethod
+    def for_engine(cls, engine: ServingEngine, *,
+                   name: Optional[str] = None,
+                   rcfg: RouterConfig = RouterConfig(),
+                   preemptible: bool = False) -> "ClusterRouter":
+        """Wrap one engine as a 1-device cluster so every front end
+        speaks a single backend dialect. ``preemptible`` attaches a
+        default ``RecoveryManager`` (the suspension machinery SLO
+        admission's force-preempt needs); with one honest device the
+        watchdog is inert."""
+        dc = DeviceClass(name="local", max_batch=engine.scfg.max_batch)
+        dev = ClusterDevice(name=name or engine.name or "local0", cls=dc,
+                            engine=engine)
+        if engine.latency_model is not None:
+            dev.prefill_tok_prior = float(
+                engine.latency_model({"prefill_tokens": 1, "active": 0}))
+            dev.base_latency = engine.latency_model
+        recovery = (RecoveryManager(RecoveryConfig()) if preemptible
+                    else None)
+        return cls([dev], rcfg=rcfg, recovery=recovery)
+
     # ------------------------------------------------------------- metrics
     def summary(self) -> dict[str, Any]:
         makespan = max(d.engine.clock for d in self.devices)
@@ -813,38 +851,22 @@ def build_cluster(cfg, params, device_classes: Iterable[DeviceClass], *,
     ``faults`` attaches a chaos trace; ``recovery`` a
     ``RecoveryManager`` or ``RecoveryConfig`` (a bare injector implies
     a default recovery manager — injected faults without a watchdog
-    would hang the stream)."""
-    from repro.perfmodel.model import PAM_LLAMA_7B
-    model_desc = model_desc or PAM_LLAMA_7B
-    devices: list[ClusterDevice] = []
-    counts: dict[str, int] = {}
-    for dc in device_classes:
-        idx = counts.get(dc.name, 0)
-        counts[dc.name] = idx + 1
-        name = f"{dc.name}{idx}"
-        dev_scfg = dataclasses.replace(
-            scfg, max_batch=dc.max_batch,
-            pool_blocks=(dc.pool_blocks(scfg.max_len, scfg.block_size)
-                         if scfg.block_size else None))
-        lat = None if wallclock else make_device_latency_model(dc,
-                                                               model_desc)
-        eng = ServingEngine(cfg, params, dev_scfg, latency_model=lat,
-                            name=name)
-        prior = (step_time_prior(dc, model_desc) if not wallclock else 0.0)
-        ppt = (float(lat({"prefill_tokens": 1, "active": 0}))
-               if lat is not None else 0.0)
-        devices.append(ClusterDevice(name=name, cls=dc, engine=eng,
-                                     step_prior=prior,
-                                     prefill_tok_prior=ppt,
-                                     base_latency=lat))
-    if balancer is None and bcfg is not None:
-        balancer = KVBalancer(bcfg)
-    if balancer is not None and not wallclock and not balancer.token_bytes:
-        # charge migrations for the MODELED per-token KV volume
-        balancer.token_bytes = model_desc.kv_bytes_per_token()
-    if isinstance(recovery, RecoveryConfig):
-        recovery = RecoveryManager(recovery, injector=faults)
-    elif recovery is None and faults is not None:
-        recovery = RecoveryManager(injector=faults)
-    return ClusterRouter(devices, balancer=balancer, rcfg=rcfg,
-                         recovery=recovery, faults=faults)
+    would hang the stream).
+
+    DEPRECATED (PR 10): construction is declarative now — build a
+    ``repro.cluster.spec.ClusterSpec`` and call ``.build(params, ...)``.
+    This shim forwards and warns."""
+    warnings.warn(
+        "build_cluster(...) is deprecated; use ClusterSpec.of(cfg, "
+        "device_classes, serving=scfg, ...).build(params, ...) from "
+        "repro.cluster.spec", DeprecationWarning, stacklevel=2)
+    from repro.cluster.spec import ClusterSpec
+    spec = ClusterSpec.of(
+        cfg, device_classes, serving=scfg, model_desc=model_desc,
+        balancer=bcfg, router=rcfg,
+        recovery=recovery if isinstance(recovery, RecoveryConfig)
+        else None, wallclock=wallclock)
+    return spec.build(
+        params, balancer=balancer, faults=faults,
+        recovery=None if isinstance(recovery, RecoveryConfig)
+        else recovery)

@@ -18,14 +18,50 @@ and the collective-bytes delta shows up directly in the dry-run roofline.
 
 from __future__ import annotations
 
+import functools
 import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import compat  # noqa: F401  (backfills jax.shard_map on 0.4)
 
 from jax.sharding import Mesh, PartitionSpec as P
+
+
+@functools.lru_cache(maxsize=None)
+def decode_mesh(shard: int, *, axis: str = "model") -> Mesh:
+    """The serving engine's 1-D decode mesh over the first ``shard``
+    local XLA devices. Cached so every same-shard engine (and every
+    replica group of the same size) shares ONE mesh object — which is
+    what lets their jitted dispatches share the module-level compile
+    caches."""
+    devs = jax.devices()
+    if len(devs) < shard:
+        raise ValueError(
+            f"shard={shard} needs {shard} local XLA devices but only "
+            f"{len(devs)} present; on CPU relaunch under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{max(shard, 8)} (must be set before jax is imported)")
+    return Mesh(np.asarray(devs[:shard]), (axis,))
+
+
+def merge_collective_bytes(n_layers: int, n_heads: int, head_dim: int,
+                           batch: int, *, smax: int = 0
+                           ) -> tuple[int, int]:
+    """Modeled per-device collective bytes of ONE sharded decode step.
+
+    Returns ``(merge_bytes, mass_bytes)``: ``merge_bytes`` is the Alg. 1
+    cross-shard reduction — ``pmax``/``psum`` of the ``(O, m, l)``
+    triple, i.e. ``H x (d + 2)`` fp32 per layer per batch row —
+    independent of context length (the paper's flat-communication
+    claim). ``mass_bytes`` is the importance-mass psum that keeps the
+    EMA/Alg. 2 state replicated — an observability side channel that IS
+    linear in ``smax`` and is reported separately in benchmarks."""
+    merge = n_layers * batch * n_heads * (head_dim + 2) * 4
+    mass = n_layers * batch * smax * 4
+    return merge, mass
 
 
 def make_sequence_sharded_decode_attn(mesh: Mesh, *, axis: str = "model",
@@ -178,6 +214,129 @@ def fused_update_decode(q, k_cache, v_cache, k_new, v_new, kv_lens, *,
         out_specs=(P(dp), P(dp, axis), kv_spec, kv_spec),
         check_vma=False,
     )(q, k_cache, v_cache, k_new, v_new, kv_lens)
+
+
+def make_sharded_paged_decode_attn(mesh: Mesh, hot_mask, paged_mask,
+                                   block_table, block_live, *,
+                                   axis: str = "model", scale=None):
+    """The PR 10 tentpole attention: hot-ring ⊕ paged partials with the
+    ring's SLOT axis and the pool's BLOCK axis sharded over ``axis``.
+
+    Drop-in twin of ``pam_manager.make_paged_decode_attn`` — returns a
+    ``decode_attn_fn(q, k_cache, v_cache, pk, pv, kv_lens) -> (out,
+    mass)`` for ``transformer.decode_step`` — but the per-layer ring
+    ``(B, Hkv, W, dh)`` is split on W and the per-layer pool
+    ``(NB+1, bs, Hkv, dh)`` on its physical-block axis. Each shard:
+
+      * owns ring slots ``[r·W_loc, (r+1)·W_loc)`` — its slice of the
+        rotated position map (``ring_position_map(start=...)``) maps
+        them to absolute positions, and since an in-window position
+        lives in exactly one global slot, hot contributions PARTITION
+        across shards;
+      * owns physical blocks ``[r·NB_loc, (r+1)·NB_loc)`` — the GLOBAL
+        block table is an explicit replicated operand (tables survive
+        distribution unchanged, the PagedAttention property) and
+        non-local entries are masked to the merge identity
+        (``ops.paged_decode_attention_partial(block_offset=...)``,
+        Pallas table-walk on TPU, jnp gather elsewhere);
+      * merges its hot+paged partials locally (exact Alg. 1), then
+        joins the cross-shard ``pmax``/``psum`` of ``(O, m, l)`` —
+        ``H x (d+2)`` fp32 per device, independent of context length.
+
+    ``out`` and ``mass`` come back REPLICATED (the mass is psum-merged
+    onto absolute coordinates), so the importance-EMA/Alg. 2 state and
+    the sampling path downstream are untouched by sharding — which is
+    why sharded token streams are bit-exact twins of unsharded ones.
+
+    The masks/table are traced per-step values, and shard_map forbids
+    closing over traced arrays — they ride as explicit replicated
+    operands instead.
+    """
+    from repro.core import online_softmax as osm
+    from repro.core.pam_interface import paged_gather_logical
+    from repro.kernels import ops
+    from repro.kernels.flash_decode import (ring_gather_mask,
+                                            ring_position_map)
+    nshards = mesh.shape[axis]
+
+    def local_fn(q, kc, vc, pk, pv, bt, bl, hot_mask, paged_mask,
+                 kv_lens):
+        B, H, d = q.shape
+        Hkv, W_loc = kc.shape[1], kc.shape[2]
+        NB_loc, bs = pk.shape[0], pk.shape[1]
+        Smax = hot_mask.shape[1]
+        rep = H // Hkv
+        sc = scale if scale is not None else 1.0 / (d ** 0.5)
+        r = jax.lax.axis_index(axis)
+        live_len = jnp.arange(Smax)[None, :] < kv_lens[:, None]
+        hot = hot_mask & live_len
+        pgd = paged_mask & live_len
+
+        # ---- hot partial over MY ring slots ---------------------------
+        ring_pos, ring_valid = ring_position_map(
+            kv_lens, W_loc * nshards, start=r * W_loc, size=W_loc)
+        hot_ring = ring_gather_mask(hot, ring_pos, ring_valid)
+        s_ring = ops._grouped_scores(q, kc, sc)     # (B, Hkv, rep, W_loc)
+        part = ops._grouped_partial_from_scores(s_ring, vc, hot_ring)
+
+        # ---- paged partial over MY physical blocks --------------------
+        lo = r * NB_loc
+        part_pgd = ops.paged_decode_attention_partial(
+            q, pk, pv, bt, pgd, block_live=bl, block_offset=lo, scale=sc)
+        merged = osm.merge_partials(part, part_pgd)
+
+        # ---- cross-shard reduction (Alg. 1 across devices) ------------
+        m_loc, l_loc, o_loc = merged.m, merged.l, merged.o
+        m_star = jax.lax.pmax(m_loc, axis)
+        m_star_safe = jnp.where(jnp.isfinite(m_star), m_star, 0.0)
+        w = jnp.where(jnp.isfinite(m_loc),
+                      jnp.exp(m_loc - m_star_safe), 0.0)     # (B, H)
+        o = jax.lax.psum(w[..., None] * o_loc, axis)
+        l = jax.lax.psum(w * l_loc, axis)
+        inv_l = 1.0 / jnp.maximum(l, 1e-30)
+        out = (o * inv_l[..., None]).astype(q.dtype)
+
+        # ---- union mass on absolute coordinates, from global (m*, l) --
+        mg = m_star_safe.reshape(B, Hkv, rep)
+        il = inv_l.reshape(B, Hkv, rep)[..., None]
+        inside = (bt >= lo) & (bt < lo + NB_loc)
+        pgd_loc = pgd & jnp.repeat(inside, bs, axis=1)
+        bt_loc = jnp.where(inside, bt - lo, 0)
+        gk = paged_gather_logical(pk, bt_loc)       # (B, Hkv, Smax, d)
+        s_pool = ops._grouped_scores(q, gk, sc)
+
+        def probs(s, mask):
+            s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+            p = jnp.exp(s - mg[..., None]) * il
+            return jnp.where(jnp.isfinite(s), p, 0.0)
+
+        ph = jnp.mean(probs(s_ring, hot_ring), axis=(1, 2))  # (B, W_loc)
+        pp = jnp.mean(probs(s_pool, pgd_loc), axis=(1, 2))   # (B, Smax)
+        bidx = jnp.arange(B)[:, None]
+        scatter_idx = jnp.clip(ring_pos, 0, Smax - 1)
+        mass = jax.lax.psum(
+            pp.at[bidx, scatter_idx].add(jnp.where(hot_ring, ph, 0.0)),
+            axis)
+        hot_eff = jax.lax.pmax(
+            jnp.zeros((B, Smax), jnp.int32).at[bidx, scatter_idx].max(
+                hot_ring.astype(jnp.int32)), axis).astype(bool)
+        n_live = jnp.sum(hot_eff | pgd, axis=-1,
+                         keepdims=True).astype(jnp.float32)
+        return out, mass * n_live
+
+    sharded = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(), P(None, None, axis, None), P(None, None, axis, None),
+                  P(axis), P(axis), P(), P(), P(), P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+    def decode_attn_fn(q, k_cache, v_cache, pk, pv, kv_lens):
+        return sharded(q, k_cache, v_cache, pk, pv, block_table,
+                       block_live, hot_mask, paged_mask, kv_lens)
+
+    return decode_attn_fn
 
 
 def make_gather_based_decode_attn(mesh: Mesh, *, axis: str = "model",

@@ -215,6 +215,45 @@ def decode_cache_specs(cfg: ModelConfig, global_batch: int, mesh: Mesh
                           state=state, pk=zero, pv=zero, lengths=P(dp))
 
 
+def serving_cache_shardings(mesh: Mesh, cache: tf.DecodeCache, *,
+                            axis: str = "model") -> tf.DecodeCache:
+    """Shardings of the SERVING engine's decode cache (PR 10).
+
+    Unlike ``decode_cache_specs`` (the training/dry-run layout, which
+    sequence-shards the dense cache and keeps pools host-local), the
+    serving fast path shards the two axes whose sizes are independent
+    of batch and divisible by construction (``EngineSpec.validate``):
+
+      * the hot RING's slot axis — ``k``/``v`` (L, B, Hkv, W, dh) split
+        on W, so each device is one PIM site holding a contiguous range
+        of ring slots (absolute position p lives on the device owning
+        slot ``p % W``);
+      * the paged pool's physical-BLOCK axis — ``pk``/``pv``
+        (L, NB+1, bs, Hkv, dh) split on NB+1, so each device owns a
+        contiguous range of physical blocks while the per-request block
+        tables stay replicated host-side ids (tables survive
+        distribution unchanged).
+
+    Everything else (lengths, and the unused family fields) is
+    replicated. Returns a ``DecodeCache`` of ``NamedSharding``s — pass
+    to ``jax.device_put`` and as ``out_shardings`` of the fused step.
+    """
+    n = mesh.shape[axis]
+    rep = NamedSharding(mesh, P())
+
+    def shd(name: str, x) -> NamedSharding:
+        if x.size == 0:
+            return rep
+        if name in ("k", "v") and x.ndim == 5 and x.shape[3] % n == 0:
+            return NamedSharding(mesh, P(None, None, None, axis, None))
+        if name in ("pk", "pv") and x.ndim == 5 and x.shape[1] % n == 0:
+            return NamedSharding(mesh, P(None, axis, None, None, None))
+        return rep
+
+    return tf.DecodeCache(*[shd(f, x)
+                            for f, x in zip(cache._fields, cache)])
+
+
 def make_sharded_zeros(spec_tree: Pytree, shape_tree: Pytree,
                        mesh: Mesh) -> Pytree:
     """Materialize zero arrays with the given specs (used by launchers)."""

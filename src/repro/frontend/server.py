@@ -29,12 +29,12 @@ from typing import Optional, Union
 
 import numpy as np
 
-from repro.cluster.recovery import RecoveryConfig, RecoveryManager
-from repro.cluster.router import (ClusterDevice, ClusterRouter,
-                                  RouterConfig, TokenEvent)
+from repro.cluster.router import ClusterRouter, RouterConfig
 from repro.obs import metrics as obs_metrics
-from repro.perfmodel.devices import DeviceClass
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.events import ServeEvent
+
+TokenEvent = ServeEvent    # the one event type every surface speaks
 
 
 @dataclasses.dataclass
@@ -80,20 +80,10 @@ def single_device_router(engine: ServingEngine, *,
                          name: Optional[str] = None,
                          rcfg: RouterConfig = RouterConfig(),
                          preemptible: bool = False) -> ClusterRouter:
-    """Wrap one engine as a 1-device cluster so the front end speaks a
-    single backend dialect. ``preemptible`` attaches a default
-    ``RecoveryManager`` (the suspension machinery SLO admission's
-    force-preempt needs); with one honest device the watchdog is inert.
-    """
-    dc = DeviceClass(name="local", max_batch=engine.scfg.max_batch)
-    dev = ClusterDevice(name=name or engine.name or "local0", cls=dc,
-                        engine=engine)
-    if engine.latency_model is not None:
-        dev.prefill_tok_prior = float(
-            engine.latency_model({"prefill_tokens": 1, "active": 0}))
-        dev.base_latency = engine.latency_model
-    recovery = RecoveryManager(RecoveryConfig()) if preemptible else None
-    return ClusterRouter([dev], rcfg=rcfg, recovery=recovery)
+    """Compatibility alias for ``ClusterRouter.for_engine`` (PR 10) —
+    the wrapping logic lives there now, next to the router it builds."""
+    return ClusterRouter.for_engine(engine, name=name, rcfg=rcfg,
+                                    preemptible=preemptible)
 
 
 class AsyncServer:
@@ -109,8 +99,10 @@ class AsyncServer:
     def __init__(self, backend: Union[ClusterRouter, ServingEngine], *,
                  admission=None, ticks_per_yield: int = 8):
         if isinstance(backend, ServingEngine):
-            backend = single_device_router(
-                backend, preemptible=admission is not None)
+            backend = backend.as_router(
+                preemptible=admission is not None)
+        else:
+            backend = backend.as_router()
         self.router = backend
         self.admission = admission
         self.ticks_per_yield = max(int(ticks_per_yield), 1)

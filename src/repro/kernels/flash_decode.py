@@ -47,7 +47,9 @@ NEG_INF = float(-1e30)
 DEFAULT_BLOCK_S = 512
 
 
-def ring_position_map(lengths: jax.Array, window: int
+def ring_position_map(lengths: jax.Array, window: int, *,
+                      start: jax.Array | int = 0,
+                      size: int | None = None
                       ) -> tuple[jax.Array, jax.Array]:
     """Rotated position map of the hot-window ring buffer (PR 5).
 
@@ -59,16 +61,25 @@ def ring_position_map(lengths: jax.Array, window: int
     gather, the admission-commit scatter, and migration export.
 
     lengths: (B,) int32 current cache lengths. Returns
-    ``(ring_pos (B, window) int32, valid (B, window) bool)`` where
-    ``ring_pos[b, j]`` is the absolute position resident in slot ``j``
-    (some value ``< lengths[b]`` congruent to ``j`` mod ``window``) and
-    ``valid`` marks slots holding a live token. When ``window`` covers
-    the whole cache (``window >= lengths``) the map degenerates to the
-    identity on ``[0, lengths)`` — the legacy dense layout.
+    ``(ring_pos (B, size) int32, valid (B, size) bool)`` where
+    ``ring_pos[b, j]`` is the absolute position resident in slot
+    ``start + j`` (some value ``< lengths[b]`` congruent to that slot
+    mod ``window``) and ``valid`` marks slots holding a live token.
+    When ``window`` covers the whole cache (``window >= lengths``) the
+    map degenerates to the identity on ``[0, lengths)`` — the legacy
+    dense layout.
+
+    ``start``/``size`` (PR 10) select a contiguous slot range
+    ``[start, start + size)`` of the ring instead of the whole window —
+    the address map of one ring SHARD. ``start`` may be traced (a
+    ``shard_map`` ``axis_index`` expression); ``size`` is static and
+    defaults to ``window``.
     """
     lengths = jnp.asarray(lengths, jnp.int32)
     base = (lengths - window)[:, None]                     # (B, 1)
-    slots = jnp.arange(window, dtype=jnp.int32)[None, :]   # (1, W)
+    slots = (jnp.asarray(start, jnp.int32)
+             + jnp.arange(size if size is not None else window,
+                          dtype=jnp.int32))[None, :]       # (1, W|size)
     ring_pos = base + ((slots - base) % window)            # in [base, base+W)
     valid = ring_pos >= 0                                  # ring_pos < len
     return ring_pos, valid
@@ -225,6 +236,7 @@ def _paged_decode_kernel(bt_ref, bl_ref, q_ref, k_ref, v_ref, mask_ref,
 def flash_decode_paged(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                        block_table: jax.Array, mask: jax.Array, *,
                        block_live: jax.Array | None = None,
+                       block_offset: jax.Array | int | None = None,
                        scale: float | None = None,
                        interpret: bool = False
                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -242,6 +254,15 @@ def flash_decode_paged(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     emit the merge identity — untouched pages are skipped. Dead entries
     are remapped onto the sentinel so their prefetches alias one block.
 
+    ``block_offset`` (PR 10) makes the read SHARD-LOCAL: ``k_pool`` /
+    ``v_pool`` then hold only physical blocks ``[block_offset,
+    block_offset + NB_local)`` of the global pool while ``block_table``
+    keeps GLOBAL ids (block tables survive distribution unchanged — the
+    PagedAttention property). Entries outside the local range are
+    treated as dead: their cells emit the merge identity without a read,
+    so the cross-shard Alg. 1 merge over per-shard partials is exact.
+    May be traced (a ``shard_map`` ``axis_index`` expression).
+
     Returns stacked partials over logical blocks: (o (B, H, nb, d) fp32
     unnormalized, m/l (B, H, nb)). Merge with ``ops.merge_decode``.
     """
@@ -254,7 +275,14 @@ def flash_decode_paged(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     mask = mask.astype(jnp.int32)
     if block_live is None:
         block_live = mask.reshape(B, nb, bs).any(axis=-1)
-    block_live = block_live.astype(jnp.int32)
+    block_live = jnp.asarray(block_live).astype(jnp.int32)
+    if block_offset is not None:
+        # Localize: only table entries inside my block range stay live,
+        # and surviving ids rebase onto local pool coordinates.
+        inside = ((block_table >= block_offset)
+                  & (block_table < block_offset + NBp))
+        block_live = block_live * inside.astype(jnp.int32)
+        block_table = jnp.where(inside, block_table - block_offset, 0)
     # Route dead logical blocks onto the sentinel: their (skipped) cells
     # all alias one physical page instead of touching live data.
     table = jnp.where(block_live != 0, block_table, NBp - 1)

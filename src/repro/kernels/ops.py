@@ -173,6 +173,7 @@ def paged_decode_attention_partial(q: jax.Array, k_pool: jax.Array,
                                    block_table: jax.Array,
                                    token_mask: jax.Array, *,
                                    block_live: jax.Array | None = None,
+                                   block_offset=None,
                                    scale=None, use_kernel: bool | None = None,
                                    interpret: bool | None = None
                                    ) -> osm.AttnPartial:
@@ -184,7 +185,24 @@ def paged_decode_attention_partial(q: jax.Array, k_pool: jax.Array,
     in). On TPU the Pallas ``flash_decode_paged`` kernel walks the table
     in-grid and skips dead pages; elsewhere a jnp gather through the same
     table is the reference path. Partial fields are (B, H, d) / (B, H).
+
+    ``block_offset`` (PR 10) makes the pool slices SHARD-LOCAL while the
+    table keeps global ids: entries outside ``[block_offset,
+    block_offset + NB_local)`` are masked out of the partial entirely,
+    so per-shard partials merge exactly into the global result
+    (Alg. 1 across shards — ``distributed.pam_shard``). May be traced.
     """
+    if block_offset is not None:
+        # Fold non-local tokens out of the mask so BOTH paths agree: a
+        # token whose block lives on another shard contributes the
+        # merge identity here and its real weight there.
+        nb_local, bs = k_pool.shape[0], k_pool.shape[1]
+        inside = ((block_table >= block_offset)
+                  & (block_table < block_offset + nb_local))
+        token_mask = token_mask & jnp.repeat(inside, bs, axis=1)
+        live = inside if block_live is None else (block_live & inside)
+        block_live = live
+        block_table = jnp.where(inside, block_table - block_offset, 0)
     if use_kernel is None:
         use_kernel = _on_tpu()
     if use_kernel:

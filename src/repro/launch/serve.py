@@ -55,8 +55,8 @@ from repro.perfmodel import make_latency_model
 from repro.models import transformer as tfm
 from repro.models.config import get_config, reduced
 from repro.perfmodel.model import PAM_LLAMA_7B, SystemKind, make_system
-from repro.serving import (PAMManagerConfig, Request, ServingConfig,
-                           ServingEngine)
+from repro.serving import (EngineSpec, PAMManagerConfig, Request,
+                           ServingConfig)
 
 
 def main(argv=None):
@@ -82,6 +82,12 @@ def main(argv=None):
     ap.add_argument("--devices", default=None, metavar="SPEC",
                     help="cluster mode: heterogeneous device spec, e.g. "
                          "'hbm:1,cxl:2' (see repro.perfmodel.devices)")
+    ap.add_argument("--shard", type=int, default=1,
+                    help="devices per replica group (PR 10): the fused "
+                         "decode step runs shard_map'ed over this many "
+                         "devices sharing ONE sharded param replica; "
+                         "with --devices, same-class runs group by this "
+                         "size (needs that many local/XLA host devices)")
     ap.add_argument("--arrival-gap-ms", type=float, default=2.0,
                     help="cluster mode: mean Poisson arrival gap")
     ap.add_argument("--chaos", default=None, metavar="SPEC",
@@ -187,74 +193,77 @@ def _finish_telemetry(args) -> None:
               f"({tr.dropped} dropped) -> {args.trace_out}")
 
 
-def _batch_mode(args, ap, cfg, params, scfg, rng) -> None:
+def _build_backend(args, ap, cfg, params, scfg, *,
+                   recovery_default: bool = False):
+    """(backend, engine-or-None): a ``ClusterRouter`` in ``--devices``
+    mode, a bare ``ServingEngine`` otherwise — both speaking the PR 10
+    unified surface (``as_router()`` / ``serve()``), so no caller
+    special-cases the two. Construction goes through
+    ``ClusterSpec``/``EngineSpec`` only."""
     if args.devices:                   # ---- cluster mode (paper §4.3)
         if args.system not in ("pam", "wallclock"):
             ap.error("--devices models PAM-class devices; --system must "
                      "be 'pam' (modeled, the default) or 'wallclock'")
-        from repro.cluster import (BalancerConfig, FaultInjector,
-                                   KVBalancer, RecoveryConfig,
-                                   build_cluster)
-        from repro.perfmodel.devices import parse_devices
-        faults = recovery = None
+        from repro.cluster import (BalancerConfig, ClusterSpec,
+                                   FaultInjector, KVBalancer,
+                                   RecoveryConfig)
+        faults = rec_cfg = None
         if args.chaos:
             faults = FaultInjector.from_spec(args.chaos,
                                              seed=args.chaos_seed)
-            recovery = RecoveryConfig()
-        router = build_cluster(
-            cfg, params, parse_devices(args.devices), scfg=scfg,
-            balancer=KVBalancer(BalancerConfig()),
-            faults=faults, recovery=recovery,
-            wallclock=(args.system == "wallclock"))
-        t = 0.0
-        for i in range(args.requests):
-            t += float(rng.exponential(args.arrival_gap_ms / 1e3))
-            router.submit(Request(
-                id=i, prompt=rng.integers(0, cfg.vocab, args.prompt_len),
-                max_new_tokens=args.gen_len, arrival=t))
-        if args.metrics_interval > 0:
-            limit, n = router.rcfg.max_ticks, 0
-            while router.tick():
-                n += 1
-                if n >= limit:
-                    raise RuntimeError(f"no drain in {limit} ticks")
-                if n % args.metrics_interval == 0:
-                    _metrics_emit(n)
-            summary = router.summary()
-        else:
-            summary = router.run()
-        print(json.dumps(summary, indent=1))
-        for slo_ms in (100, 150, 200):
-            print(f"SLO {slo_ms}ms attainment: "
-                  f"{router.slo_attainment(slo_ms/1e3):.3f}")
-        return
-
+        if args.chaos or recovery_default:
+            rec_cfg = RecoveryConfig()
+        spec = ClusterSpec.from_cli(
+            args.devices, model=cfg, serving=scfg, shard=args.shard,
+            recovery=rec_cfg, wallclock=(args.system == "wallclock"))
+        router = spec.build(params, balancer=KVBalancer(BalancerConfig()),
+                            faults=faults)
+        return router, None
     latency = None
     if args.system != "wallclock":
-        latency = make_latency_model(make_system(args.system), PAM_LLAMA_7B)
+        latency = make_latency_model(make_system(args.system),
+                                     PAM_LLAMA_7B)
+    eng = EngineSpec(model=cfg, serving=scfg, shard=args.shard).build(
+        params, latency_model=latency)
+    return eng, eng
 
-    eng = ServingEngine(cfg, params, scfg, latency_model=latency)
 
+def _batch_mode(args, ap, cfg, params, scfg, rng) -> None:
+    backend, engine = _build_backend(args, ap, cfg, params, scfg)
+    router = backend.as_router()
+    t = 0.0
+    reqs = []
     for i in range(args.requests):
-        eng.submit(Request(
+        if args.devices:
+            t += float(rng.exponential(args.arrival_gap_ms / 1e3))
+        reqs.append(Request(
             id=i, prompt=rng.integers(0, cfg.vocab, args.prompt_len),
-            max_new_tokens=args.gen_len))
-    if args.metrics_interval > 0 and scfg.micro_steps == 1:
-        n = 0
-        for _ in range(10_000):
-            if not eng.waiting and all(s is None for s in eng.slots):
-                break
-            eng.step()
+            max_new_tokens=args.gen_len, arrival=t))
+    if args.metrics_interval > 0:
+        for req in reqs:
+            router.submit(req)
+        limit, n = router.rcfg.max_ticks, 0
+        while router.tick():
             n += 1
+            if n >= limit:
+                raise RuntimeError(f"no drain in {limit} ticks")
             if n % args.metrics_interval == 0:
                 _metrics_emit(n)
-        summary = eng.summary()
     else:
-        summary = eng.run()
+        # the unified streaming surface: one generator, engine or fleet
+        for _ev in router.serve(reqs):
+            pass
+    summary = router.summary()
+    if engine is not None:
+        # single-device runs keep the engine-level detail keys (paged
+        # stats, chunked-prefill counters, TPOT percentiles) alongside
+        # the router view
+        for k, v in engine.summary().items():
+            summary.setdefault(k, v)
     print(json.dumps(summary, indent=1))
     for slo_ms in (100, 150, 200):
         print(f"SLO {slo_ms}ms attainment: "
-              f"{eng.slo_attainment(slo_ms/1e3):.3f}")
+              f"{router.slo_attainment(slo_ms/1e3):.3f}")
 
 
 async def _pump_with_metrics(srv, trace, interval: int) -> None:
@@ -313,24 +322,8 @@ def _serve_mode(args, ap, cfg, params, scfg) -> None:
     from repro.frontend.loadgen import TraceConfig, make_trace, score
     from repro.frontend.server import AsyncServer
 
-    if args.devices:
-        if args.system not in ("pam", "wallclock"):
-            ap.error("--devices models PAM-class devices; --system must "
-                     "be 'pam' (modeled, the default) or 'wallclock'")
-        from repro.cluster import (BalancerConfig, KVBalancer,
-                                   RecoveryConfig, build_cluster)
-        from repro.perfmodel.devices import parse_devices
-        backend = build_cluster(
-            cfg, params, parse_devices(args.devices), scfg=scfg,
-            balancer=KVBalancer(BalancerConfig()),
-            recovery=RecoveryConfig(),
-            wallclock=(args.system == "wallclock"))
-    else:
-        latency = None
-        if args.system != "wallclock":
-            latency = make_latency_model(make_system(args.system),
-                                         PAM_LLAMA_7B)
-        backend = ServingEngine(cfg, params, scfg, latency_model=latency)
+    backend, _ = _build_backend(args, ap, cfg, params, scfg,
+                                recovery_default=True)
 
     slo = SLOSpec(ttft_s=args.slo_ttft_ms / 1e3,
                   tpot_s=args.slo_tpot_ms / 1e3)

@@ -86,6 +86,19 @@ def parse_devices(spec: str) -> list[DeviceClass]:
     return out
 
 
+def replica_group_class(dc: DeviceClass, group: int) -> DeviceClass:
+    """Aggregate ``group`` same-class devices into ONE replica-group
+    device (PR 10): tier/NPU bandwidth and pool capacity scale with the
+    member count (the members serve one request stream cooperatively,
+    each holding 1/group of the params and KV), while ``max_batch`` and
+    ``context_scale`` describe the shared stream and stay per-group.
+    Identity at ``group == 1``."""
+    if group <= 1:
+        return dc
+    return dataclasses.replace(dc, bw_scale=dc.bw_scale * group,
+                               pool_scale=dc.pool_scale * group)
+
+
 def _scaled_hw(scale: float) -> NodeHW:
     base = NodeHW()
     s = lambda tier: dataclasses.replace(

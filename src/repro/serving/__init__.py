@@ -6,7 +6,10 @@ from repro.serving.paged_kv import (BlockAllocator, OutOfBlocks,
 from repro.serving.pam_manager import PAMManager, PAMManagerConfig
 from repro.serving.engine import (PAMEngine, Request, RequestState,
                                   ServingConfig, ServingEngine)
+from repro.serving.events import ServeEvent
+from repro.serving.spec import EngineSpec
 
-__all__ = ["BlockAllocator", "OutOfBlocks", "PagedKVPool", "PAMEngine",
-           "PAMManager", "PAMManagerConfig", "PrefixTrie", "Request",
-           "RequestState", "ServingConfig", "ServingEngine"]
+__all__ = ["BlockAllocator", "EngineSpec", "OutOfBlocks", "PagedKVPool",
+           "PAMEngine", "PAMManager", "PAMManagerConfig", "PrefixTrie",
+           "Request", "RequestState", "ServeEvent", "ServingConfig",
+           "ServingEngine"]

@@ -111,7 +111,8 @@ import collections
 import dataclasses
 import functools
 import time
-from typing import Any, NamedTuple, Optional, Callable
+import warnings
+from typing import Any, Iterable, Iterator, NamedTuple, Optional, Callable
 
 import jax
 import jax.numpy as jnp
@@ -265,7 +266,7 @@ def _sample_tokens(logits, seed: int, rids, positions,
 def _fused_decode_body(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
                        smax: int, bs: int, sentinel: int,
                        temperature: float, top_k: int, eos: int,
-                       hot_window: int, seed: int,
+                       hot_window: int, seed: int, mesh,
                        params, tokens, cache, pam_state, active, rids):
     """ONE decode step of the full PAM pipeline, pure & traceable:
     participation -> masked decode -> stats -> observe -> sample.
@@ -310,7 +311,17 @@ def _fused_decode_body(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
         hot_m, pgd_m, block_live = pm.paged_participation_split(
             participate, pam_state.tier, lengths, bs, hot_window)
         bt_eff = jnp.where(block_live, pam_state.block_table, sentinel)
-        d_fn = pm.make_paged_decode_attn(hot_m, pgd_m, bt_eff, block_live)
+        if mesh is not None:
+            # PR 10: hot ring + pool reads fan out over the mesh's
+            # "model" axis under shard_map; partials re-merge with the
+            # exact online-softmax (pmax/psum of (O, m, l)) so the
+            # sharded step is bit-identical to the unsharded one
+            from repro.distributed import pam_shard as psh
+            d_fn = psh.make_sharded_paged_decode_attn(
+                mesh, hot_m, pgd_m, bt_eff, block_live)
+        else:
+            d_fn = pm.make_paged_decode_attn(hot_m, pgd_m, bt_eff,
+                                             block_live)
         # append coordinates for the new token (same for every layer);
         # inactive rows write the sentinel trash page
         pos = cache.lengths
@@ -366,7 +377,7 @@ def _fused_decode_fn(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
                      smax: int, batch: int, k: int, bs: int = 0,
                      sentinel: int = 0, temperature: float = 0.0,
                      top_k: int = 0, eos: int = -1, hot_window: int = 0,
-                     seed: int = 0):
+                     seed: int = 0, mesh=None, cache_shardings=None):
     """Fused decode dispatch running ``k`` steps on device. Cache (dense
     buffers AND paged pools), PAM state (including the block table) and
     the token vector are DONATED — zero per-step copies. ``rids`` is the
@@ -390,7 +401,7 @@ def _fused_decode_fn(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
             tokens, cache, pam_state, active, \
                 (reads, hit, moved, lens, blk) = _fused_decode_body(
                     cfg, pcfg, smax, bs, sentinel, temperature, top_k,
-                    eos, hot_window, seed, params, tokens, cache,
+                    eos, hot_window, seed, mesh, params, tokens, cache,
                     pam_state, active, rids)
             bufs = StepBufs(
                 tokens=bufs.tokens.at[i].set(tokens),
@@ -409,11 +420,19 @@ def _fused_decode_fn(cfg: ModelConfig, pcfg: Optional[PAMManagerConfig],
         tokens, cache, pam_state, active, bufs = carry
         return tokens, cache, pam_state, bufs
 
+    if cache_shardings is not None:
+        # pin outputs so donation stays shape-AND-layout compatible
+        # across steps: the cache keeps its shard layout, everything
+        # else stays replicated (``lengths`` is always replicated, so
+        # its sharding doubles as the replicated spec)
+        rep = cache_shardings.lengths
+        return jax.jit(run_k, donate_argnums=(1, 2, 3),
+                       out_shardings=(rep, cache_shardings, rep, rep))
     return jax.jit(run_k, donate_argnums=(1, 2, 3))
 
 
 @functools.lru_cache(maxsize=None)
-def _prefill_fn(cfg: ModelConfig, smax: int):
+def _prefill_fn(cfg: ModelConfig, smax: int, rep=None):
     # one jit per (cfg, smax); jax retraces per prompt-bucket shape
     # SSM/hybrid prompts are never padded (bucket == exact length),
     # so the dynamic-length machinery is skipped entirely.
@@ -422,19 +441,24 @@ def _prefill_fn(cfg: ModelConfig, smax: int):
     # fused decode dispatch.
     exact = cfg.family in ("ssm", "hybrid")
 
-    @jax.jit
     def pre(params, tokens, true_len):
         logits, cache = tf.prefill(cfg, params, tokens, smax,
                                    true_len=None if exact else true_len)
         return logits, cache
 
-    return pre
+    if rep is not None:
+        # sharded engines: the prefill SUB-cache feeds the (replicated-
+        # operand) admission commit — pin it replicated so GSPMD never
+        # invents a layout the commit has to rematerialize away from
+        return jax.jit(pre, out_shardings=(rep, rep))
+    return jax.jit(pre)
 
 
 @functools.lru_cache(maxsize=None)
 def _admit_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int,
                      n: int, temperature: float = 0.0, top_k: int = 0,
-                     hot_window: int = 0, seed: int = 0):
+                     hot_window: int = 0, seed: int = 0,
+                     cache_shardings=None):
     """One donated dispatch per admission GROUP: scatter ``n`` prefilled
     sequences (one batched prefill's sub-cache) into their slots, SAMPLE
     each first token from the prefill logits (same temperature/top-k/
@@ -489,11 +513,15 @@ def _admit_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int,
                     table_rows[i] if block_size else None)
         return cache, pam_state, tokens_dev, firsts
 
+    if cache_shardings is not None:
+        rep = cache_shardings.lengths
+        return jax.jit(commit, donate_argnums=(0, 1, 2),
+                       out_shardings=(cache_shardings, rep, rep, rep))
     return jax.jit(commit, donate_argnums=(0, 1, 2))
 
 
 @functools.lru_cache(maxsize=None)
-def _suffix_prefill_fn(cfg: ModelConfig, smax: int):
+def _suffix_prefill_fn(cfg: ModelConfig, smax: int, rep=None):
     """Batched suffix-only prefill dispatch (PR 7 path, batched in
     PR 8): gather each row's cached prefix from the pool THROUGH its
     block table (the §6.2 sharer-side re-layout — a pure read of the
@@ -504,7 +532,6 @@ def _suffix_prefill_fn(cfg: ModelConfig, smax: int):
     the from-scratch prefill. One dispatch; retraces per (group size,
     suffix bucket) like ``_prefill_fn``. Returns (last-token logits
     (n, V), suffix K/V (L, n, Hkv, S, dh))."""
-    @jax.jit
     def pre(params, tokens, pk, pv, read_rows, prefix_lens, true_lens):
         gather = jax.vmap(pam_if.gather_prefix_logical,
                           in_axes=(None, 0, 0), out_axes=1)
@@ -513,13 +540,16 @@ def _suffix_prefill_fn(cfg: ModelConfig, smax: int):
         return tf.prefill_suffix(cfg, params, tokens, gk, gv,
                                  prefix_lens, true_len=true_lens)
 
-    return pre
+    if rep is not None:
+        return jax.jit(pre, out_shardings=(rep, rep, rep))
+    return jax.jit(pre)
 
 
 @functools.lru_cache(maxsize=None)
 def _suffix_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int,
                       n: int, temperature: float = 0.0, top_k: int = 0,
-                      hot_window: int = 0, seed: int = 0):
+                      hot_window: int = 0, seed: int = 0,
+                      cache_shardings=None):
     """ONE donated dispatch committing a suffix-prefill admission GROUP
     (prefix-cache hits, the plain same-bucket admissions batched with
     them, and final chunked-prefill slices):
@@ -584,11 +614,16 @@ def _suffix_commit_fn(pcfg: Optional[PAMManagerConfig], block_size: int,
                     table_rows[i])
         return cache, pam_state, tokens_dev, firsts
 
+    if cache_shardings is not None:
+        rep = cache_shardings.lengths
+        return jax.jit(commit, donate_argnums=(0, 1, 2),
+                       out_shardings=(cache_shardings, rep, rep, rep))
     return jax.jit(commit, donate_argnums=(0, 1, 2))
 
 
 @functools.lru_cache(maxsize=None)
-def _chunk_fill_fn(cfg: ModelConfig, smax: int, cow: bool = False):
+def _chunk_fill_fn(cfg: ModelConfig, smax: int, cow: bool = False,
+                   cache_shardings=None):
     """ONE donated dispatch advancing a chunked-prefill admission by an
     INTERMEDIATE slice (PR 8): optionally copy-on-write the shared tail
     block (first slice of a prefix-cache hit), gather the already-
@@ -619,12 +654,15 @@ def _chunk_fill_fn(cfg: ModelConfig, smax: int, cow: bool = False):
         pv = pv.at[:, bids, sids].set(sv)
         return cache._replace(pk=pk, pv=pv)
 
+    if cache_shardings is not None:
+        return jax.jit(fill, donate_argnums=(1,),
+                       out_shardings=cache_shardings)
     return jax.jit(fill, donate_argnums=(1,))
 
 
 @functools.lru_cache(maxsize=None)
 def _import_commit_fn(has_pam: bool, block_size: int,
-                      hot_window: int = 0):
+                      hot_window: int = 0, cache_shardings=None):
     """One donated dispatch per migrated-request import: install the
     snapshot's logical-layout KV into the dense cache slot (and, in
     paged mode, scatter it through the target's freshly-allocated block
@@ -659,6 +697,10 @@ def _import_commit_fn(has_pam: bool, block_size: int,
                 table_row if block_size else None)
         return cache, pam_state, tokens_dev
 
+    if cache_shardings is not None:
+        rep = cache_shardings.lengths
+        return jax.jit(commit, donate_argnums=(0, 1, 2),
+                       out_shardings=(cache_shardings, rep, rep))
     return jax.jit(commit, donate_argnums=(0, 1, 2))
 
 
@@ -704,15 +746,43 @@ class ServingEngine:
     invariants, and ``summary()`` for the metrics contract.
     """
 
-    def __init__(self, cfg: ModelConfig, params, scfg: ServingConfig,
+    def __init__(self, spec, params=None, scfg: Optional[ServingConfig]
+                 = None,
                  latency_model: Optional[Callable[[dict], float]] = None,
-                 name: str = "dev0"):
+                 name: Optional[str] = None):
+        # canonical construction is EngineSpec.build(params) — the spec
+        # carries model + serving config + shard + name declaratively.
+        # The legacy (cfg, params, scfg, ...) positional signature still
+        # works through this shim, with a DeprecationWarning.
+        from repro.serving.spec import EngineSpec
+        if isinstance(spec, EngineSpec):
+            if scfg is not None or name is not None:
+                raise TypeError(
+                    "ServingEngine(EngineSpec, params, ...): serving "
+                    "config and name live on the spec; pass only "
+                    "latency_model as a keyword")
+        else:
+            warnings.warn(
+                "ServingEngine(cfg, params, scfg, ...) is deprecated; "
+                "use EngineSpec(model=cfg, serving=scfg, name=...)"
+                ".build(params, latency_model=...)",
+                DeprecationWarning, stacklevel=2)
+            if scfg is None:
+                raise TypeError("legacy ServingEngine(cfg, params, scfg)"
+                                " signature requires a ServingConfig")
+            spec = EngineSpec(model=spec, serving=scfg,
+                              name=name if name is not None else "dev0")
+        cfg, scfg = spec.model, spec.serving
         assert cfg.has_decode, f"{cfg.name} is encoder-only"
+        self.spec = spec
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
         self.latency_model = latency_model
-        self.name = name                       # cluster device handle
+        self.name = spec.name                  # cluster device handle
+        self.shard = spec.shard
+        self.mesh = None                       # set when spec.shard > 1
+        self.cache_shardings = None
         self.clock = 0.0                       # simulated seconds
         self.busy_time = 0.0                   # sim seconds with active>0
         self.last_step_time = 0.0              # modeled latency, last step
@@ -760,6 +830,27 @@ class ServingEngine:
             self.cache = tf.init_decode_cache(cfg, B, Smax)
             self.pam_state = init_pam_state(B, Smax)
 
+        if spec.shard > 1:
+            # PR 10: tensor-shard params and sequence-shard KV over one
+            # shared device group. Params are GSPMD-sharded (a replica
+            # GROUP holds ONE copy, ~1/shard bytes per device); the hot
+            # ring splits on its slot axis and the pool on its physical-
+            # block axis (``serving_cache_shardings``). The fused step
+            # pins its out_shardings so donation keeps the layout.
+            spec.validate()
+            from repro.distributed import pam_shard as psh
+            from repro.distributed import sharding as shd
+            self.mesh = psh.decode_mesh(spec.shard)
+            self.params = jax.device_put(
+                params, shd.param_shardings(cfg, self.mesh))
+            self.cache_shardings = shd.serving_cache_shardings(
+                self.mesh, self.cache)
+            rep = self.cache_shardings.lengths
+            self.cache = jax.device_put(self.cache, self.cache_shardings)
+            self.pam_state = jax.device_put(
+                self.pam_state, jax.tree.map(lambda _: rep,
+                                             self.pam_state))
+
         self.trie: Optional[PrefixTrie] = None
         if scfg.prefix_cache:
             if not self.block_size:
@@ -794,6 +885,9 @@ class ServingEngine:
         self.waiting: collections.deque[int] = collections.deque()
         self.slots: list[Optional[int]] = [None] * B
         self.tokens_dev = jnp.zeros((B,), jnp.int32)  # lives on device
+        if self.mesh is not None:
+            self.tokens_dev = jax.device_put(
+                self.tokens_dev, self.cache_shardings.lengths)
         # per-slot request ids: the sampling-key operand of the fused
         # dispatch (keys derive as fold_in(fold_in(seed, rid), position),
         # so no PRNG state survives between dispatches)
@@ -957,7 +1051,7 @@ class ServingEngine:
                 self.scfg.max_batch, k, self.block_size, self.sentinel,
                 self.scfg.temperature, self.scfg.top_k,
                 self.scfg.eos_token, self.hot_window,
-                self.scfg.sample_seed)
+                self.scfg.sample_seed, self.mesh, self.cache_shardings)
         return self._micro_jits[k]
 
     def _admit_commit_dispatch(self, cache, pam_state, tokens_dev, sub,
@@ -968,7 +1062,8 @@ class ServingEngine:
         fn = _admit_commit_fn(self.pam_cfg, self.block_size,
                               int(slots.shape[0]), self.scfg.temperature,
                               self.scfg.top_k, self.hot_window,
-                              self.scfg.sample_seed)
+                              self.scfg.sample_seed,
+                              self.cache_shardings)
         args = (cache, pam_state, tokens_dev, sub, logits, slots, lengths,
                 rids)
         if table_rows is not None:
@@ -989,7 +1084,9 @@ class ServingEngine:
     def _prefill_for_len(self, bucket: int):
         if bucket not in self._prefill_jit:
             self._prefill_jit[bucket] = _prefill_fn(
-                self.cfg, self.scfg.max_len)
+                self.cfg, self.scfg.max_len,
+                None if self.cache_shardings is None
+                else self.cache_shardings.lengths)
         return self._prefill_jit[bucket]
 
     # ------------------------------------------------------------ lifecycle
@@ -1264,7 +1361,9 @@ class ServingEngine:
                 cow_dsts[i] = row[nfull]
                 cow_pins.append(cow_src)
             bids[i], sids[i] = self._suffix_coords(row, start, t, bucket)
-        pre = _suffix_prefill_fn(self.cfg, self.scfg.max_len)
+        pre = _suffix_prefill_fn(self.cfg, self.scfg.max_len,
+                                 None if self.cache_shardings is None
+                                 else self.cache_shardings.lengths)
         logits, suf_k, suf_v = pre(
             self.params, jnp.asarray(padded), self.cache.pk,
             self.cache.pv, jnp.asarray(read_rows), jnp.asarray(starts),
@@ -1275,7 +1374,8 @@ class ServingEngine:
         rids = np.array([g[0] for g in group], np.uint32)
         fn = _suffix_commit_fn(self.pam_cfg, bs, n,
                                self.scfg.temperature, self.scfg.top_k,
-                               self.hot_window, self.scfg.sample_seed)
+                               self.hot_window, self.scfg.sample_seed,
+                               self.cache_shardings)
         (self.cache, self.pam_state, self.tokens_dev, first_dev) = fn(
             self.cache, self.pam_state, self.tokens_dev, suf_k, suf_v,
             logits, jnp.asarray(slots), jnp.asarray(full_lens),
@@ -1355,7 +1455,8 @@ class ServingEngine:
         cow = plan.cow_src >= 0
         cow_dst = row[begin // bs] if cow else self.sentinel
         bids, sids = self._suffix_coords(row, begin, t, t)
-        fn = _chunk_fill_fn(self.cfg, self.scfg.max_len, cow)
+        fn = _chunk_fill_fn(self.cfg, self.scfg.max_len, cow,
+                            self.cache_shardings)
         self.cache = fn(
             self.params, self.cache,
             jnp.asarray(prompt[begin:begin + t][None]),
@@ -1804,7 +1905,7 @@ class ServingEngine:
         if table_row is not None:
             args += (jnp.asarray(table_row),)
         fn = _import_commit_fn(self.pam_cfg is not None, self.block_size,
-                               self.hot_window)
+                               self.hot_window, self.cache_shardings)
         self.cache, self.pam_state, self.tokens_dev = fn(*args)
         rs = RequestState(
             request=req, status=RUNNING, slot=slot,
@@ -1842,6 +1943,41 @@ class ServingEngine:
         when capacity is still short — check ``can_accept`` first."""
         self.import_request(snap)
 
+    # ----------------------------------------------- unified serving surface
+    def as_router(self, *, preemptible: bool = False):
+        """This engine wrapped as a one-device ``ClusterRouter`` — the
+        single backend shape every serving surface (CLI, async server,
+        benchmarks) drives since PR 10. Scheduling stays a no-op with
+        one device; the router contributes admission, eventing and the
+        ``serve`` generator."""
+        from repro.cluster.router import ClusterRouter
+        return ClusterRouter.for_engine(self, preemptible=preemptible)
+
+    def serve(self, requests: Optional[Iterable[Request]] = None, *,
+              max_ticks: Optional[int] = None) -> Iterator[Any]:
+        """Unified streaming surface: submit ``requests`` (if given) and
+        yield ``ServeEvent``s until everything drains. Identical shape
+        on a bare engine and on a cluster (``ClusterRouter.serve``)."""
+        yield from self.as_router().serve(requests, max_ticks=max_ticks)
+
+    def params_bytes_per_device(self) -> int:
+        """Bytes of model params RESIDENT PER DEVICE. Unsharded engines
+        hold the full tree; a shard-``s`` replica group holds one
+        GSPMD-sharded copy, so this is ~1/s of the total (replicated
+        leaves — norms, biases — keep full size)."""
+        total = 0
+        for leaf in jax.tree.leaves(self.params):
+            shape = getattr(leaf, "shape", ())
+            shd = getattr(leaf, "sharding", None)
+            if shd is not None and hasattr(shd, "shard_shape"):
+                shape = shd.shard_shape(shape)
+            n = 1
+            for d in shape:
+                n *= d
+            total += n * getattr(leaf, "dtype", np.dtype(np.float32)
+                                 ).itemsize
+        return total
+
     # ------------------------------------------------------------ metrics
     def summary(self) -> dict[str, Any]:
         """Run metrics: throughput, TPOT percentiles, dispatch counts; in
@@ -1869,6 +2005,9 @@ class ServingEngine:
             "migrations_in": self.migrations_in,
             "migrations_out": self.migrations_out,
         }
+        if self.shard > 1:
+            out["shard"] = self.shard
+            out["param_bytes_per_device"] = self.params_bytes_per_device()
         if self.block_size:
             n = max(self.decode_device_steps, 1)
             out["blocks_touched_per_step"] = self.blocks_touched_total / n

@@ -492,6 +492,31 @@ def gather_sequence(pool: jax.Array, table_row: jax.Array) -> jax.Array:
     return jnp.moveaxis(g.reshape(L, nb * bs, Hkv, dh), 2, 1)
 
 
+def shard_block_ranges(total_blocks: int, shard: int
+                       ) -> list[tuple[int, int]]:
+    """Physical-block ownership ranges under PR 10's sharded layout.
+
+    The pool's block axis (``NB + 1`` physical blocks, sentinel
+    included) splits evenly over the mesh's ``model`` axis: shard ``r``
+    owns the contiguous half-open range ``[r*nb_loc, (r+1)*nb_loc)``.
+    Block TABLES keep replicated global ids — each shard localizes a
+    global id by subtracting its range start and masks out non-owned
+    blocks (``kernels.ops.paged_decode_attention_partial`` with
+    ``block_offset``), so the allocator, trie and migration snapshots
+    never see shard coordinates. The sentinel (global id ``NB``) lands
+    on the LAST shard; writes routed to it stay shard-local.
+
+    ``total_blocks`` counts the sentinel (i.e. pass ``NB + 1``) and
+    must be divisible by ``shard`` — ``EngineSpec.validate`` enforces
+    this with an actionable message.
+    """
+    if total_blocks % shard:
+        raise ValueError(f"{total_blocks} physical blocks (sentinel "
+                         f"included) do not split over {shard} shards")
+    nb_loc = total_blocks // shard
+    return [(r * nb_loc, (r + 1) * nb_loc) for r in range(shard)]
+
+
 @dataclasses.dataclass
 class PagedKVPool:
     """Device-side paged KV storage for the memory hierarchy.

@@ -19,8 +19,8 @@ import pytest  # noqa: E402
 
 from repro.models import transformer as tf  # noqa: E402
 from repro.models.config import get_config, reduced  # noqa: E402
-from repro.serving import (PAMManagerConfig, Request,  # noqa: E402
-                           ServingConfig, ServingEngine)
+from repro.serving import (EngineSpec, PAMManagerConfig,  # noqa: E402
+                           Request, ServingConfig)
 
 _MODELS: dict = {}
 
@@ -50,8 +50,8 @@ def make_engine(cfg, params, *, pam=None, name="dev", latency=None,
     """ServingEngine from explicit serving-config kwargs. ``pam`` is a
     ready PAMManagerConfig (or None for the dense baseline)."""
     scfg = ServingConfig(pam=pam, **scfg_kw)
-    return ServingEngine(cfg, params, scfg, latency_model=latency,
-                         name=name)
+    return EngineSpec(model=cfg, serving=scfg,
+                      name=name).build(params, latency_model=latency)
 
 
 def make_requests(n, vocab, plen=16, max_new=12, seed=0, arrivals=False,

@@ -13,13 +13,13 @@ import pytest
 
 from conftest import build_model, make_pam
 
-from repro.cluster import (BalancerConfig, KVBalancer, KVSnapshot,
-                           build_cluster, can_migrate, migrate)
+from repro.cluster import (BalancerConfig, ClusterSpec, KVBalancer,
+                           KVSnapshot, can_migrate, migrate)
 from repro.perfmodel.devices import (CXL_CLASS, HBM_CLASS, DeviceClass,
                                      get_device_class,
                                      make_device_latency_model,
                                      parse_devices, step_time_prior)
-from repro.serving import Request, ServingConfig, ServingEngine
+from repro.serving import EngineSpec, Request, ServingConfig
 from repro.serving.paged_kv import OutOfBlocks
 
 jax.config.update("jax_platform_name", "cpu")
@@ -37,8 +37,8 @@ def _engine(name="dev", max_batch=3, max_len=64, block_size=8, pool=None,
     scfg = ServingConfig(max_batch=max_batch, max_len=max_len,
                          pam=_pam(max_len), block_size=block_size,
                          pool_blocks=pool)
-    return ServingEngine(_CFG, _PARAMS, scfg, latency_model=latency,
-                         name=name)
+    return EngineSpec(model=_CFG, serving=scfg,
+                      name=name).build(_PARAMS, latency_model=latency)
 
 
 def _submit(eng_or_router, n, plen=20, max_new=12, seed=0, arrivals=False):
@@ -138,7 +138,8 @@ def test_import_backpressure_and_rollback():
 # -------------------------------------------------------------- router
 def _router(classes, n=8, bal=None, seed=3, max_new=10):
     scfg = ServingConfig(max_batch=4, max_len=64, pam=_pam(), block_size=8)
-    router = build_cluster(_CFG, _PARAMS, classes, scfg=scfg, balancer=bal)
+    router = ClusterSpec.of(_CFG, classes,
+                            serving=scfg).build(_PARAMS, balancer=bal)
     _submit(router, n, plen=16, max_new=max_new, seed=seed, arrivals=True)
     return router
 
@@ -204,8 +205,8 @@ def test_balancer_migrates_off_overloaded_device():
     bal = KVBalancer(BalancerConfig(rebalance_interval=2, hysteresis=1.1,
                                     cooldown_ticks=4, min_remaining=2))
     scfg = ServingConfig(max_batch=4, max_len=64, pam=_pam(), block_size=8)
-    router = build_cluster(_CFG, _PARAMS, [HBM_CLASS, CXL_CLASS],
-                           scfg=scfg, balancer=bal)
+    router = ClusterSpec.of(_CFG, [HBM_CLASS, CXL_CLASS],
+                            serving=scfg).build(_PARAMS, balancer=bal)
     # pre-load the SLOW device directly; fast device idle
     rng = np.random.default_rng(7)
     for i in range(4):
@@ -226,8 +227,8 @@ def test_balancer_hysteresis_blocks_marginal_moves():
     """A nearly-balanced pair of identical devices must not migrate."""
     bal = KVBalancer(BalancerConfig(rebalance_interval=1, hysteresis=10.0))
     scfg = ServingConfig(max_batch=4, max_len=64, pam=_pam(), block_size=8)
-    router = build_cluster(_CFG, _PARAMS, [HBM_CLASS, HBM_CLASS],
-                           scfg=scfg, balancer=bal)
+    router = ClusterSpec.of(_CFG, [HBM_CLASS, HBM_CLASS],
+                            serving=scfg).build(_PARAMS, balancer=bal)
     _submit(router, 8, plen=16, max_new=8, arrivals=True)
     s = router.run()
     assert s["finished"] == 8

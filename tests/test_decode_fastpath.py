@@ -18,8 +18,8 @@ from repro.core.tiers import COLD, HOT, WARM
 from repro.models import transformer as tf
 from repro.models.attention import grouped_decode_attn
 from repro.models.config import get_config, reduced
-from repro.serving import (PAMManagerConfig, Request, ServingConfig,
-                           ServingEngine)
+from repro.serving import (EngineSpec, PAMManagerConfig, Request,
+                           ServingConfig)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -145,7 +145,7 @@ def _engine(pam=True, max_batch=3, max_len=64, micro_steps=1, seed=0,
         compression=4, recency_window=4, schedule_interval=2) if pam else None
     scfg = ServingConfig(max_batch=max_batch, max_len=max_len, pam=pam_cfg,
                          micro_steps=micro_steps, bucket_prefill=bucket)
-    return cfg, ServingEngine(cfg, params, scfg)
+    return cfg, EngineSpec(model=cfg, serving=scfg).build(params)
 
 
 def _submit_all(cfg, eng, n=5, seed=0, plen=6, max_new=8):
@@ -277,8 +277,8 @@ def test_micro_loop_serves_eos_token_stream():
     prompts = [rng.integers(0, cfg.vocab, 6) for _ in range(3)]
 
     # probe run: pick an actually-emitted mid-stream token as EOS
-    probe = ServingEngine(cfg, params,
-                          ServingConfig(max_batch=3, max_len=64))
+    probe = EngineSpec(model=cfg, serving=ServingConfig(
+        max_batch=3, max_len=64)).build(params)
     for i, p in enumerate(prompts):
         probe.submit(Request(id=i, prompt=p, max_new_tokens=12))
     probe.run()
@@ -286,10 +286,9 @@ def test_micro_loop_serves_eos_token_stream():
 
     outs = []
     for micro in (1, 4):
-        eng = ServingEngine(cfg, params,
-                            ServingConfig(max_batch=3, max_len=64,
-                                          eos_token=int(eos),
-                                          micro_steps=micro))
+        eng = EngineSpec(model=cfg, serving=ServingConfig(
+            max_batch=3, max_len=64, eos_token=int(eos),
+            micro_steps=micro)).build(params)
         for i, p in enumerate(prompts):
             eng.submit(Request(id=i, prompt=p, max_new_tokens=12))
         eng.run()

@@ -15,11 +15,11 @@ import pytest
 
 from conftest import build_model, make_pam, make_requests
 
-from repro.cluster import (FaultEvent, FaultInjector, KVSnapshot,
-                           RecoveryConfig, RecoveryManager,
-                           SnapshotCorruption, build_cluster, parse_chaos)
+from repro.cluster import (ClusterSpec, FaultEvent, FaultInjector,
+                           KVSnapshot, RecoveryConfig, RecoveryManager,
+                           SnapshotCorruption, parse_chaos)
 from repro.perfmodel.devices import CXL_CLASS, HBM_CLASS
-from repro.serving import Request, ServingConfig, ServingEngine
+from repro.serving import EngineSpec, Request, ServingConfig
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -44,7 +44,7 @@ def _twin_streams(reqs, **scfg_kw):
     """Failure-free reference: the same requests on one plain engine
     (streams are batch/slot/phase-independent, so any engine run is THE
     canonical stream per request)."""
-    eng = ServingEngine(_CFG, _PARAMS, _scfg(**scfg_kw))
+    eng = EngineSpec(model=_CFG, serving=_scfg(**scfg_kw)).build(_PARAMS)
     for r in reqs:
         eng.submit(Request(id=r.id, prompt=r.prompt,
                            max_new_tokens=r.max_new_tokens))
@@ -72,9 +72,10 @@ def test_kill_replay_twin_exact_greedy():
     reqs = _requests(4)
     twin = _twin_streams(reqs)
     inj = FaultInjector([FaultEvent(tick=6, kind="kill", device="hbm1")])
-    router = build_cluster(
-        _CFG, _PARAMS, [HBM_CLASS, HBM_CLASS], scfg=_scfg(), faults=inj,
-        recovery=RecoveryConfig(heartbeat_timeout_s=0.01))
+    router = ClusterSpec.of(
+        _CFG, [HBM_CLASS, HBM_CLASS], serving=_scfg(),
+        recovery=RecoveryConfig(
+            heartbeat_timeout_s=0.01)).build(_PARAMS, faults=inj)
     for i, r in enumerate(reqs):         # pin 2 per device
         router.submit_to(r, f"hbm{i % 2}")
     s = router.run()
@@ -97,9 +98,10 @@ def test_kill_replay_twin_exact_sampled():
     reqs = _requests(4, seed=2)
     twin = _twin_streams(reqs, **kw)
     inj = FaultInjector([FaultEvent(tick=7, kind="kill", device="hbm1")])
-    router = build_cluster(
-        _CFG, _PARAMS, [HBM_CLASS, HBM_CLASS], scfg=_scfg(**kw),
-        faults=inj, recovery=RecoveryConfig(heartbeat_timeout_s=0.01))
+    router = ClusterSpec.of(
+        _CFG, [HBM_CLASS, HBM_CLASS], serving=_scfg(**kw),
+        recovery=RecoveryConfig(
+            heartbeat_timeout_s=0.01)).build(_PARAMS, faults=inj)
     for i, r in enumerate(reqs):
         router.submit_to(r, f"hbm{i % 2}")
     s = router.run()
@@ -118,9 +120,10 @@ def test_watchdog_waits_out_a_silent_sole_worker():
     twin = _twin_streams(reqs)
     inj = FaultInjector([FaultEvent(tick=4, kind="kill", device="hbm1")])
     timeout = 0.05
-    router = build_cluster(
-        _CFG, _PARAMS, [HBM_CLASS, HBM_CLASS], scfg=_scfg(), faults=inj,
-        recovery=RecoveryConfig(heartbeat_timeout_s=timeout))
+    router = ClusterSpec.of(
+        _CFG, [HBM_CLASS, HBM_CLASS], serving=_scfg(),
+        recovery=RecoveryConfig(
+            heartbeat_timeout_s=timeout)).build(_PARAMS, faults=inj)
     for r in reqs:
         router.submit_to(r, "hbm1")      # hbm0 stays idle
     s = router.run()
@@ -138,9 +141,10 @@ def test_kill_with_no_survivor_degrades_to_rejection():
     stranded requests end with rejection events and the run drains."""
     reqs = _requests(2, seed=4)
     inj = FaultInjector([FaultEvent(tick=3, kind="kill", device="hbm0")])
-    router = build_cluster(
-        _CFG, _PARAMS, [HBM_CLASS], scfg=_scfg(), faults=inj,
-        recovery=RecoveryConfig(heartbeat_timeout_s=0.01))
+    router = ClusterSpec.of(
+        _CFG, [HBM_CLASS], serving=_scfg(),
+        recovery=RecoveryConfig(
+            heartbeat_timeout_s=0.01)).build(_PARAMS, faults=inj)
     for r in reqs:
         router.submit(r)
     s = router.run()
@@ -160,9 +164,9 @@ def test_stall_drain_twin_exact_sampled():
     twin = _twin_streams(reqs, **kw)
     inj = FaultInjector([FaultEvent(tick=4, kind="stall", device="hbm1",
                                     factor=50.0)])
-    router = build_cluster(
-        _CFG, _PARAMS, [HBM_CLASS, HBM_CLASS], scfg=_scfg(**kw),
-        faults=inj, recovery=RecoveryConfig())
+    router = ClusterSpec.of(
+        _CFG, [HBM_CLASS, HBM_CLASS], serving=_scfg(**kw),
+        recovery=RecoveryConfig()).build(_PARAMS, faults=inj)
     for i, r in enumerate(reqs):
         router.submit_to(r, f"hbm{i % 2}")
     s = router.run()
@@ -181,9 +185,9 @@ def test_heterogeneous_slow_device_is_not_a_straggler():
     times are normalized by the device-class prior before they reach
     the monitor."""
     reqs = _requests(6, seed=6)
-    router = build_cluster(
-        _CFG, _PARAMS, [HBM_CLASS, CXL_CLASS], scfg=_scfg(),
-        recovery=RecoveryConfig())
+    router = ClusterSpec.of(
+        _CFG, [HBM_CLASS, CXL_CLASS], serving=_scfg(),
+        recovery=RecoveryConfig()).build(_PARAMS)
     for r in reqs:
         router.submit(r)
     s = router.run()
@@ -194,8 +198,10 @@ def test_heterogeneous_slow_device_is_not_a_straggler():
 
 # --------------------------------------------------- transfer corruption
 def _mid_decode_pair(n=2, steps=4):
-    src = ServingEngine(_CFG, _PARAMS, _scfg(), name="src")
-    dst = ServingEngine(_CFG, _PARAMS, _scfg(), name="dst")
+    src = EngineSpec(model=_CFG, serving=_scfg(),
+                     name="src").build(_PARAMS)
+    dst = EngineSpec(model=_CFG, serving=_scfg(),
+                     name="dst").build(_PARAMS)
     reqs = _requests(n, seed=7)
     for r in reqs:
         src.submit(Request(id=r.id, prompt=r.prompt,
@@ -272,10 +278,11 @@ def test_pool_exhaustion_preempts_lowest_importance_and_resumes():
     twin = _twin_streams(reqs)
     inj = FaultInjector([FaultEvent(tick=2, kind="exhaust",
                                     device="hbm0")])
-    router = build_cluster(
-        _CFG, _PARAMS, [HBM_CLASS], scfg=_scfg(), faults=inj,
-        recovery=RecoveryConfig(preempt_after_ticks=5,
-                                resume_cooldown_ticks=2))
+    router = ClusterSpec.of(
+        _CFG, [HBM_CLASS], serving=_scfg(),
+        recovery=RecoveryConfig(
+            preempt_after_ticks=5,
+            resume_cooldown_ticks=2)).build(_PARAMS, faults=inj)
     router.submit_to(reqs[0], "hbm0")
     router.submit_to(reqs[1], "hbm0")
     for _ in range(4):                   # both mid-decode before the fault
@@ -301,10 +308,10 @@ def test_balancer_never_targets_a_killed_device():
     inj = FaultInjector([FaultEvent(tick=1, kind="kill", device="hbm0")])
     bal = KVBalancer(BalancerConfig(rebalance_interval=2, hysteresis=1.1,
                                     cooldown_ticks=2, min_remaining=2))
-    router = build_cluster(
-        _CFG, _PARAMS, [HBM_CLASS, CXL_CLASS], scfg=_scfg(),
-        balancer=bal, faults=inj,
-        recovery=RecoveryConfig(heartbeat_timeout_s=0.01))
+    router = ClusterSpec.of(
+        _CFG, [HBM_CLASS, CXL_CLASS], serving=_scfg(),
+        recovery=RecoveryConfig(heartbeat_timeout_s=0.01)).build(
+            _PARAMS, balancer=bal, faults=inj)
     for r in reqs:
         router.submit_to(r, "cxl0")      # load the slow device only
     s = router.run()

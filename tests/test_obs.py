@@ -14,15 +14,15 @@ import pytest
 
 from conftest import build_model, make_pam, make_requests
 
-from repro.cluster import (FaultEvent, FaultInjector, RecoveryConfig,
-                           build_cluster)
+from repro.cluster import (ClusterSpec, FaultEvent, FaultInjector,
+                           RecoveryConfig)
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import (BYTES_BUCKETS, Histogram, MetricsRegistry,
                                log_buckets)
 from repro.obs.trace import TraceCollector, validate
 from repro.perfmodel.devices import CXL_CLASS, HBM_CLASS
-from repro.serving import Request, ServingConfig, ServingEngine
+from repro.serving import EngineSpec, Request, ServingConfig
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -198,7 +198,7 @@ def test_validate_rejects_schema_violations():
 def _engine(scfg=None, **scfg_kw):
     scfg = scfg or ServingConfig(max_batch=3, max_len=64, pam=make_pam(),
                                  **scfg_kw)
-    return ServingEngine(_CFG, _PARAMS, scfg)
+    return EngineSpec(model=_CFG, serving=scfg).build(_PARAMS)
 
 
 def test_engine_metrics_account_for_tokens_and_finishes():
@@ -276,10 +276,9 @@ def test_fastpath_streams_unchanged_by_collectors():
     """Telemetry observes, never perturbs: greedy token streams are
     identical with collectors on and off (micro-loop fast path too)."""
     def run(micro):
-        eng = ServingEngine(_CFG, _PARAMS,
-                            ServingConfig(max_batch=3, max_len=64,
-                                          pam=make_pam(),
-                                          micro_steps=micro))
+        eng = EngineSpec(model=_CFG, serving=ServingConfig(
+            max_batch=3, max_len=64, pam=make_pam(),
+            micro_steps=micro)).build(_PARAMS)
         for r in make_requests(3, _CFG.vocab, plen=6, max_new=8):
             eng.submit(r)
         eng.run()
@@ -301,9 +300,10 @@ def _chaos_cluster(reg_seed=0):
                          block_size=8)
     inj = FaultInjector([FaultEvent(tick=6, kind="kill", device="cxl0")],
                         seed=reg_seed)
-    router = build_cluster(
-        _CFG, _PARAMS, [HBM_CLASS, CXL_CLASS], scfg=scfg, faults=inj,
-        recovery=RecoveryConfig(heartbeat_timeout_s=0.01))
+    router = ClusterSpec.of(
+        _CFG, [HBM_CLASS, CXL_CLASS], serving=scfg,
+        recovery=RecoveryConfig(
+            heartbeat_timeout_s=0.01)).build(_PARAMS, faults=inj)
     for i, r in enumerate(make_requests(6, _CFG.vocab, plen=16,
                                         max_new=12)):
         router.submit_to(r, ("hbm0", "cxl0")[i % 2])

@@ -19,8 +19,8 @@ from repro.kernels import ops as kops
 from conftest import build_model, make_pam
 
 from repro.models import transformer as tf
-from repro.serving import (BlockAllocator, OutOfBlocks, PAMManagerConfig,
-                           Request, ServingConfig, ServingEngine)
+from repro.serving import (BlockAllocator, EngineSpec, OutOfBlocks,
+                           PAMManagerConfig, Request, ServingConfig)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -154,10 +154,10 @@ def _engine(block_size=0, pool_blocks=None, micro_steps=1, max_batch=3,
             max_len=64, hot=4, warm=8, seed=0):
     cfg, params = build_model("qwen3-0.6b", seed=seed)
     pam = make_pam(max_len=max_len, hot=hot, warm=warm, recency_window=2)
-    return cfg, ServingEngine(cfg, params, ServingConfig(
+    return cfg, EngineSpec(model=cfg, serving=ServingConfig(
         max_batch=max_batch, max_len=max_len, pam=pam,
         micro_steps=micro_steps, block_size=block_size,
-        pool_blocks=pool_blocks))
+        pool_blocks=pool_blocks)).build(params)
 
 
 def _submit(cfg, eng, n=4, plen=30, max_new=10, seed=0):
@@ -243,18 +243,18 @@ def test_paged_capacity_backpressure_and_reuse():
 def test_paged_config_validation():
     cfg, params = build_model("qwen3-0.6b")
     with pytest.raises(ValueError):   # paged requires PAM tiers
-        ServingEngine(cfg, params, ServingConfig(
-            max_batch=2, max_len=64, block_size=8))
+        EngineSpec(model=cfg, serving=ServingConfig(
+            max_batch=2, max_len=64, block_size=8)).build(params)
     pam = PAMManagerConfig(max_tokens=60, hot_capacity=4, warm_capacity=8)
     with pytest.raises(ValueError):   # max_len must be a block multiple
-        ServingEngine(cfg, params, ServingConfig(
-            max_batch=2, max_len=60, pam=pam, block_size=8))
+        EngineSpec(model=cfg, serving=ServingConfig(
+            max_batch=2, max_len=60, pam=pam, block_size=8)).build(params)
     pam64 = PAMManagerConfig(max_tokens=64, hot_capacity=4,
                              warm_capacity=8)
     with pytest.raises(ValueError):   # pool_blocks must be positive
-        ServingEngine(cfg, params, ServingConfig(
+        EngineSpec(model=cfg, serving=ServingConfig(
             max_batch=2, max_len=64, pam=pam64, block_size=8,
-            pool_blocks=0))
+            pool_blocks=0)).build(params)
 
 
 def test_unservable_request_fails_loudly():

@@ -23,11 +23,11 @@ import jax
 import numpy as np
 import pytest
 from _hyp import given, interleaving_seed, seed_corpus, settings
-from conftest import build_model, make_pam
+from conftest import make_pam
 
 from repro.cluster import can_migrate, migrate
-from repro.serving import (BlockAllocator, OutOfBlocks, PrefixTrie,
-                           Request, ServingConfig, ServingEngine)
+from repro.serving import (BlockAllocator, EngineSpec, OutOfBlocks,
+                           PrefixTrie, Request, ServingConfig)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -315,7 +315,7 @@ def _eng(model, *, prefix_cache, name="dev", max_batch=2, pool=None, **kw):
     scfg = ServingConfig(max_batch=max_batch, max_len=64, pam=_pam(),
                          block_size=8, prefix_cache=prefix_cache,
                          pool_blocks=pool, **kw)
-    return ServingEngine(cfg, params, scfg, name=name)
+    return EngineSpec(model=cfg, serving=scfg, name=name).build(params)
 
 
 def _shared_prompts(vocab, seed=7):
@@ -451,8 +451,9 @@ def test_pressure_evicts_trie_blocks_instead_of_failing(qwen_model):
 def test_prefix_cache_config_validation(qwen_model):
     cfg, params = qwen_model
     with pytest.raises(ValueError):       # trie needs the paged pool
-        ServingEngine(cfg, params, ServingConfig(
-            max_batch=2, max_len=64, pam=_pam(), prefix_cache=True))
+        EngineSpec(model=cfg, serving=ServingConfig(
+            max_batch=2, max_len=64, pam=_pam(),
+            prefix_cache=True)).build(params)
 
 
 def test_summary_reports_sharing_counters(qwen_model):

@@ -14,13 +14,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import build_model, make_pam
+from conftest import make_pam
 
 from repro.cluster.migration import migrate
 from repro.core.tiers import HOT, WARM, clamp_hot_to_window
 from repro.kernels.flash_decode import ring_position_map
 from repro.models import transformer as tf
-from repro.serving import Request, ServingConfig, ServingEngine
+from repro.serving import EngineSpec, Request, ServingConfig
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -41,7 +41,7 @@ def _engine(cfg, params, *, max_len=64, block_size=0, hot_window=0,
     scfg = ServingConfig(max_batch=3, max_len=max_len, pam=_pam(max_len),
                          block_size=block_size, hot_window=hot_window,
                          micro_steps=micro_steps, eos_token=eos)
-    return ServingEngine(cfg, params, scfg, name=name)
+    return EngineSpec(model=cfg, serving=scfg, name=name).build(params)
 
 
 def _run(eng, prompts, max_new=20):

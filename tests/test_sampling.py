@@ -13,8 +13,8 @@ import numpy as np
 
 from repro.models import transformer as tf
 from repro.models.config import get_config, reduced
-from repro.serving import (PAMManagerConfig, Request, ServingConfig,
-                           ServingEngine)
+from repro.serving import (EngineSpec, PAMManagerConfig, Request,
+                           ServingConfig)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -27,7 +27,7 @@ def _engine(**kw):
                            compression=4, recency_window=4,
                            schedule_interval=2)
     scfg = ServingConfig(max_batch=3, max_len=64, pam=pam, **kw)
-    return ServingEngine(_CFG, _PARAMS, scfg)
+    return EngineSpec(model=_CFG, serving=scfg).build(_PARAMS)
 
 
 def _run(eng, n=3, seed=0, max_new=8):

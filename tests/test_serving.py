@@ -10,9 +10,9 @@ from conftest import build_model, make_pam
 
 from repro.core.tiers import COLD, HOT, WARM
 from repro.models import transformer as tf
-from repro.serving import (BlockAllocator, PagedKVPool, PAMManager,
-                           PAMManagerConfig, Request, ServingConfig,
-                           ServingEngine)
+from repro.serving import (BlockAllocator, EngineSpec, PagedKVPool,
+                           PAMManager, PAMManagerConfig, Request,
+                           ServingConfig)
 from repro.serving.paged_kv import OutOfBlocks, token_to_block_slot
 from repro.serving.pam_manager import init_pam_state
 
@@ -124,7 +124,8 @@ def _engine(arch="qwen3-0.6b", pam=True, max_batch=3, max_len=64):
     cfg, params = build_model(arch)
     pam_cfg = make_pam(max_len=max_len, hot=16, warm=24) if pam else None
     scfg = ServingConfig(max_batch=max_batch, max_len=max_len, pam=pam_cfg)
-    return cfg, params, ServingEngine(cfg, params, scfg)
+    return cfg, params, EngineSpec(model=cfg,
+                                   serving=scfg).build(params)
 
 
 def test_engine_end_to_end_pam():

@@ -1,0 +1,27 @@
+"""Sharded single-dispatch engine (PR 10). The multi-device checks run
+in a subprocess so the fake 8-device XLA flag never leaks into this
+session (every other module must keep seeing 1 device); see
+tests/sharded_engine_checks.py for what is pinned."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_sharded_engine_suite():
+    """Twin exactness at shard 2/4 (greedy, sampled, micro_steps=8),
+    1-dispatch/step + donation, cross-shard migration, replica-group
+    param bytes — all on 8 fake devices in a subprocess."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests",
+                                      "sharded_engine_checks.py")],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nERR:\n{out.stderr}"
+    assert "ALL SHARDED ENGINE CHECKS PASSED" in out.stdout

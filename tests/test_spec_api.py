@@ -1,0 +1,155 @@
+"""EngineSpec / ClusterSpec declarative construction API (PR 10):
+CLI round-trips, actionable validation errors, the unified ServeEvent
+surface, and the deprecation shims that keep the legacy
+``ServingEngine(cfg, params, scfg, ...)`` / ``build_cluster(...)``
+signatures alive (warning) during the migration window."""
+
+import dataclasses
+
+import jax
+import pytest
+
+from conftest import build_model, make_pam
+
+from repro.cluster import ClusterSpec, TokenEvent, build_cluster
+from repro.cluster.spec import ReplicaGroup
+from repro.perfmodel.devices import CXL_CLASS, HBM_CLASS
+from repro.serving import (EngineSpec, PAMManagerConfig, Request,
+                           ServeEvent, ServingConfig, ServingEngine)
+
+jax.config.update("jax_platform_name", "cpu")
+
+_CFG, _PARAMS = build_model("qwen3-0.6b")
+
+
+def _scfg(**kw):
+    base = dict(max_batch=2, max_len=64, pam=make_pam(), block_size=8,
+                pool_blocks=23, hot_window=16)
+    base.update(kw)
+    return ServingConfig(**base)
+
+
+# ------------------------------------------------------ CLI round-trip
+def test_from_cli_round_trips_through_cli():
+    spec = ClusterSpec.from_cli("hbm:1,cxl:2", model=_CFG,
+                                serving=_scfg())
+    assert spec.cli() == "hbm:1,cxl:2"
+    assert spec.physical_devices == 3
+    assert [g.devices for g in spec.groups] == [1, 1, 1]
+    # shard=2: the lone hbm stays a group of 1, the cxl run pairs up —
+    # and the canonical string still round-trips to the same topology
+    spec2 = ClusterSpec.from_cli("hbm:1,cxl:2", model=_CFG,
+                                 serving=_scfg(), shard=2)
+    assert [g.devices for g in spec2.groups] == [1, 2]
+    assert spec2.cli() == "hbm:1,cxl:2"
+    assert ClusterSpec.from_cli(spec2.cli(), model=_CFG,
+                                serving=_scfg(),
+                                shard=2).groups == spec2.groups
+
+
+def test_of_merges_only_consecutive_runs():
+    spec = ClusterSpec.of(_CFG, [HBM_CLASS, CXL_CLASS, HBM_CLASS],
+                          serving=_scfg(), shard=2)
+    # no consecutive same-class run longer than 1: all groups stay 1
+    assert [g.devices for g in spec.groups] == [1, 1, 1]
+    assert spec.cli() == "hbm:1,cxl:1,hbm:1"
+
+
+# ------------------------------------------------- actionable failures
+def test_bad_device_string_raises():
+    with pytest.raises(ValueError):
+        ClusterSpec.from_cli("warp:2", model=_CFG, serving=_scfg())
+
+
+def test_unsplittable_run_error_names_the_fix():
+    with pytest.raises(ValueError, match=r"hbm:4|shard that divides"):
+        ClusterSpec.of(_CFG, [HBM_CLASS] * 3, serving=_scfg(), shard=2)
+
+
+def test_empty_cluster_spec_rejected():
+    with pytest.raises(ValueError, match="at least one replica group"):
+        ClusterSpec(model=_CFG, groups=(), serving=_scfg())
+
+
+def test_replica_group_needs_a_device():
+    with pytest.raises(ValueError, match=">= 1 device"):
+        ReplicaGroup(HBM_CLASS, devices=0)
+
+
+def test_engine_spec_shard_validation_messages():
+    dense = ServingConfig(max_batch=2, max_len=64)
+    with pytest.raises(ValueError, match="paged path"):
+        EngineSpec(model=_CFG, serving=dense, shard=2).validate()
+    with pytest.raises(ValueError, match="hot_window"):
+        EngineSpec(model=_CFG, serving=_scfg(hot_window=18),
+                   shard=4).validate()
+    with pytest.raises(ValueError, match="pool_blocks=27"):
+        EngineSpec(model=_CFG, serving=_scfg(pool_blocks=24),
+                   shard=4).validate()
+    with pytest.raises(ValueError, match=">= 1"):
+        EngineSpec(model=_CFG, serving=_scfg(), shard=0).validate()
+    # a well-formed sharded spec validates (build needs the devices,
+    # validate must not)
+    EngineSpec(model=_CFG, serving=_scfg(), shard=4).validate()
+
+
+def test_specs_are_frozen_and_hashable():
+    spec = EngineSpec(model=_CFG, serving=_scfg(), name="a")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.shard = 2
+    assert spec == EngineSpec(model=_CFG, serving=_scfg(), name="a")
+    hash(spec)                        # usable as a cache key
+
+
+# ------------------------------------------------ unified event surface
+def test_token_event_is_the_one_event_type():
+    from repro.frontend import server as frontend_server
+    assert TokenEvent is ServeEvent
+    assert frontend_server.TokenEvent is ServeEvent
+
+
+def test_engine_serve_streams_unified_events():
+    eng = EngineSpec(model=_CFG, serving=_scfg()).build(_PARAMS)
+    eng.submit(Request(id=0, prompt=[1, 2, 3, 4], max_new_tokens=4))
+    events = list(eng.serve())
+    assert events and all(isinstance(ev, ServeEvent) for ev in events)
+    assert events[-1].done
+    twin = EngineSpec(model=_CFG, serving=_scfg()).build(_PARAMS)
+    twin.submit(Request(id=0, prompt=[1, 2, 3, 4], max_new_tokens=4))
+    twin.run()
+    assert [ev.token for ev in events] == twin.requests[0].outputs
+
+
+# ---------------------------------------------------- deprecation shims
+def test_legacy_engine_ctor_warns_and_still_works():
+    with pytest.warns(DeprecationWarning, match="EngineSpec"):
+        eng = ServingEngine(_CFG, _PARAMS, _scfg(), name="old")
+    assert eng.name == "old"
+    assert eng.spec == EngineSpec(model=_CFG, serving=_scfg(),
+                                  name="old")
+    eng.submit(Request(id=0, prompt=[1, 2, 3, 4], max_new_tokens=3))
+    eng.run()
+    twin = EngineSpec(model=_CFG, serving=_scfg()).build(_PARAMS)
+    twin.submit(Request(id=0, prompt=[1, 2, 3, 4], max_new_tokens=3))
+    twin.run()
+    assert eng.requests[0].outputs == twin.requests[0].outputs
+
+
+def test_legacy_engine_ctor_requires_scfg():
+    with pytest.raises(TypeError):
+        with pytest.warns(DeprecationWarning):
+            ServingEngine(_CFG, _PARAMS)
+
+
+def test_legacy_build_cluster_warns_and_matches_spec_build():
+    scfg = _scfg()
+    with pytest.warns(DeprecationWarning, match="ClusterSpec"):
+        router = build_cluster(_CFG, _PARAMS, [HBM_CLASS, CXL_CLASS],
+                               scfg=scfg)
+    assert [d.name for d in router.devices] == ["hbm0", "cxl0"]
+    spec_router = ClusterSpec.of(_CFG, [HBM_CLASS, CXL_CLASS],
+                                 serving=scfg).build(_PARAMS)
+    assert ([d.name for d in router.devices]
+            == [d.name for d in spec_router.devices])
+    assert ([d.engine.scfg for d in router.devices]
+            == [d.engine.scfg for d in spec_router.devices])
